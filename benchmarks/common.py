@@ -1,0 +1,76 @@
+"""Shared benchmark utilities: model pairs, engine builders, CSV output."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs  # noqa: E402
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.serving.costmodel import (A100_40G, RTX_4090, TPU_V5E,  # noqa: E402
+                                     RooflineCostModel)
+from repro.serving.simulator import SimConfig, build_sim_engine  # noqa: E402
+from repro.serving.workload import (dynamic_rate_trace,  # noqa: E402
+                                    poisson_requests)
+
+# the paper's second testbed: vicuna-13b (llama-13b arch) + vicuna-68m draft
+VICUNA_13B = ModelConfig(
+    name="vicuna-13b", family="dense", num_layers=40, d_model=5120,
+    num_heads=40, num_kv_heads=40, d_ff=13824, vocab_size=32000,
+    tie_embeddings=False)
+VICUNA_68M = ModelConfig(
+    name="vicuna-68m", family="dense", num_layers=2, d_model=768,
+    num_heads=12, num_kv_heads=12, d_ff=3072, vocab_size=32000,
+    tie_embeddings=True)
+
+PAIRS = {
+    "7b": (configs.get_config("paper-7b"), configs.get_draft_config("paper-7b"),
+           RTX_4090),
+    "13b": (VICUNA_13B, VICUNA_68M, A100_40G),
+}
+
+POLICIES = ["ar", "sd", "banditspec", "dsd", "nightjar"]
+POLICY_LABEL = {"ar": "w/o SD", "sd": "SD(g=3)", "banditspec": "BanditSpec",
+                "dsd": "DSD", "nightjar": "Nightjar", "linucb": "LinUCB",
+                "eps-greedy": "EpsGreedy", "ada-bingreedy": "AdaBinGreedy"}
+
+
+def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
+                dataset: str = "sharegpt", trace=None, max_batch: int = 256,
+                seed: int = 0, enable_offload: bool = True,
+                tau_low_frac: float = 0.1, kv_reserve_frac: float = 0.1):
+    target, draft, hw = PAIRS[pair]
+    cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
+                    seed=seed, enable_offload=enable_offload,
+                    tau_low_frac=tau_low_frac,
+                    kv_reserve_frac=kv_reserve_frac)
+    eng = build_sim_engine(cfg, policy)
+    if trace is not None:
+        reqs = trace.sample_requests(n, dataset=dataset, seed=seed + 1)
+    else:
+        reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1)
+    m = eng.run(reqs, max_steps=500_000)
+    return m, eng
+
+
+class CSV:
+    """Collects `name,us_per_call,derived` rows (the harness contract)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        row = f"{name},{us_per_call:.2f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt

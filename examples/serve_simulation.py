@@ -1,0 +1,67 @@
+"""End-to-end serving driver (the paper's kind): batched requests under a
+dynamic request-rate trace, Nightjar vs baselines at paper scale on the
+analytical TPU-v5e tier.  Reproduces the Figure 11 dynamics.
+
+    PYTHONPATH=src python examples/serve_simulation.py [--rate-high 30]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs  # noqa: E402
+from repro.serving.costmodel import RTX_4090  # noqa: E402
+from repro.serving.simulator import SimConfig, build_sim_engine  # noqa: E402
+from repro.serving.workload import dynamic_rate_trace  # noqa: E402
+
+
+def sparkline(vals, width=60):
+    blocks = " ▁▂▃▄▅▆▇█"
+    if not vals:
+        return ""
+    mx = max(vals) or 1
+    step = max(len(vals) // width, 1)
+    v = [max(vals[i:i + step]) for i in range(0, len(vals), step)]
+    return "".join(blocks[int(x / mx * (len(blocks) - 1))] for x in v)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate-low", type=float, default=3)
+    ap.add_argument("--rate-high", type=float, default=28)
+    ap.add_argument("--requests", type=int, default=400)
+    args = ap.parse_args()
+
+    target = configs.get_config("paper-7b")
+    draft = configs.get_draft_config("paper-7b")
+    trace = dynamic_rate_trace(duration_s=90, low=args.rate_low,
+                               high=args.rate_high, period_s=25)
+
+    print(f"dynamic trace: {args.rate_low} <-> {args.rate_high} QPS")
+    print("rate    :", sparkline([trace.rate_at(t) for t in range(90)]))
+    results = {}
+    for pol in ["ar", "sd", "dsd", "banditspec", "nightjar"]:
+        cfg = SimConfig(target=target, draft=draft, hw=RTX_4090,
+                        max_batch=256, seed=0)
+        eng = build_sim_engine(cfg, pol)
+        reqs = trace.sample_requests(args.requests, dataset="sharegpt", seed=1)
+        m = eng.run(reqs, max_steps=500_000)
+        results[pol] = m
+        # throughput over 3s windows
+        win = {}
+        for r in m.timeline:
+            win[int(r["t"] // 3)] = win.get(int(r["t"] // 3), 0) + r["tokens"]
+        series = [win.get(w, 0) / 3 for w in range(int(m.elapsed // 3) + 1)]
+        print(f"{pol:10s}: {sparkline(series)}  "
+              f"thr={m.throughput:7.1f} tok/s lat={m.mean_latency:6.2f}s "
+              f"switches={m.switch_count}")
+
+    nj = results["nightjar"].throughput
+    print(f"\nNightjar vs w/o-SD : {100*(nj/results['ar'].throughput-1):+.1f}%")
+    print(f"Nightjar vs SD     : {100*(nj/results['sd'].throughput-1):+.1f}%")
+    print(f"Nightjar vs DSD    : {100*(nj/results['dsd'].throughput-1):+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

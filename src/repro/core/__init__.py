@@ -1,0 +1,1 @@
+from . import bandits, cswitch, planner, spec_decode, verify  # noqa: F401

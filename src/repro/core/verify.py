@@ -1,0 +1,86 @@
+"""Lossless speculative-decoding verification (Leviathan et al. 2023).
+
+Batched rejection sampling: given draft tokens, draft distributions and the
+target's distributions over the same positions (+ one bonus position), accept
+a prefix of the draft and sample a correction/bonus token such that the
+committed tokens are distributed EXACTLY as target-only decoding.
+
+This module is the pure-jnp oracle shared by the engine and by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def verify_rejection(key, draft_tokens, draft_probs, target_probs):
+    """Batched rejection-sampling verification.
+
+    draft_tokens: (B, g) int32 — tokens proposed by the draft model
+    draft_probs:  (B, g, V) — draft distribution at each proposal position
+    target_probs: (B, g+1, V) — target distribution at the same g positions
+                  plus the bonus position.
+
+    Returns dict with
+      n_accepted: (B,) number of draft tokens accepted (0..g)
+      next_token: (B,) the correction (on rejection) or bonus (all accepted)
+      tokens:     (B, g+1) committed tokens = accepted prefix + next_token,
+                  positions beyond n_accepted+1 are -1
+    """
+    B, g = draft_tokens.shape
+    kb, ks = jax.random.split(key)
+
+    p_tok = jnp.take_along_axis(target_probs[:, :g], draft_tokens[..., None],
+                                axis=-1)[..., 0]  # (B, g)
+    q_tok = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
+                                axis=-1)[..., 0]
+    u = jax.random.uniform(kb, (B, g))
+    accept = u * q_tok < p_tok  # == u < p/q, robust to q == 0
+    prefix_acc = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    n_accepted = jnp.sum(prefix_acc, axis=1)  # (B,)
+
+    # distribution for the next token:
+    #  - if n == g: the bonus distribution target_probs[:, g]
+    #  - else: residual norm(max(p_n - q_n, 0)) at the first rejected position
+    idx = jnp.minimum(n_accepted, g - 1)  # first rejected position (clamped)
+    p_rej = jnp.take_along_axis(
+        target_probs[:, :g], idx[:, None, None], axis=1)[:, 0]  # (B, V)
+    q_rej = jnp.take_along_axis(draft_probs, idx[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(p_rej - q_rej, 0.0)
+    res_sum = jnp.sum(residual, axis=-1, keepdims=True)
+    # numerical guard: if residual is empty (p == q exactly), fall back to p
+    residual = jnp.where(res_sum > 1e-9, residual / jnp.maximum(res_sum, 1e-9), p_rej)
+    bonus = target_probs[:, g]
+    next_dist = jnp.where((n_accepted == g)[:, None], bonus, residual)
+    next_token = jax.random.categorical(ks, jnp.log(jnp.maximum(next_dist, 1e-30)))
+
+    pos = jnp.arange(g + 1)[None, :]
+    committed = jnp.where(
+        pos < n_accepted[:, None],
+        jnp.pad(draft_tokens, ((0, 0), (0, 1))),
+        jnp.where(pos == n_accepted[:, None], next_token[:, None], -1),
+    )
+    return {"n_accepted": n_accepted, "next_token": next_token,
+            "tokens": committed}
+
+
+def verify_greedy(draft_tokens, target_logits):
+    """Greedy verification: accept while draft token == target argmax.
+
+    target_logits: (B, g+1, V).  Deterministic — used by losslessness tests
+    (greedy spec decoding must emit exactly the target's greedy sequence).
+    """
+    B, g = draft_tokens.shape
+    tgt = jnp.argmax(target_logits, axis=-1)  # (B, g+1)
+    match = tgt[:, :g] == draft_tokens
+    prefix = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    n_accepted = jnp.sum(prefix, axis=1)
+    next_token = jnp.take_along_axis(tgt, n_accepted[:, None], axis=1)[:, 0]
+    pos = jnp.arange(g + 1)[None, :]
+    committed = jnp.where(
+        pos < n_accepted[:, None],
+        jnp.pad(draft_tokens, ((0, 0), (0, 1))),
+        jnp.where(pos == n_accepted[:, None], next_token[:, None], -1),
+    )
+    return {"n_accepted": n_accepted, "next_token": next_token,
+            "tokens": committed}

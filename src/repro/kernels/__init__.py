@@ -1,0 +1,1 @@
+from . import block_migration, flash_attention, ops, paged_attention, ref  # noqa: F401

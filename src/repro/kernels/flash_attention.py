@@ -1,0 +1,104 @@
+"""Blockwise (flash) attention kernel for prefill/training — VMEM-tiled.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with a running-softmax accumulator
+held in VMEM scratch across the kv_blocks axis.  Block shapes are
+(BLOCK_Q x head_dim) / (BLOCK_K x head_dim) — multiples of the 8x128 VPU
+lanes and MXU-friendly for head_dim in {64, 128, 256}.
+
+Causal masking prunes nothing here (TPU grids are sequential per core), but
+out-of-window tiles are masked exactly; the hillclimbed variant skips fully
+masked tiles via the grid order (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF, flash_attention_ref
+
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal, block_q, block_k, kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, D)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, D)
+    v = v_ref[0].astype(jnp.float32)
+    D = q.shape[-1]
+    s = (q * (D ** -0.5)) @ k.T       # (block_q, block_k)
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * scale + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = BLOCK_Q,
+                    block_k: int = BLOCK_K, interpret: bool = True):
+    """q: (B, S, H, D), k/v: (B, S, KH, D) -> (B, S, H, D).  GQA supported by
+    repeating kv heads at the wrapper level (kernel sees matched heads)."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    if KH != H:
+        k = jnp.repeat(k, H // KH, axis=2)
+        v = jnp.repeat(v, H // KH, axis=2)
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+
+    # (B*H, S, D) layout
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+    grid = (B * H, S // block_q, S // block_k)
+    kernel = functools.partial(_flash_kernel, causal=causal, block_q=block_q,
+                               block_k=block_k, kv_blocks=S // block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

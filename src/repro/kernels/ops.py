@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op dispatches between the compiled Pallas kernel (TPU target /
+interpret-mode validation) and the pure-jnp oracle (``ref.py``) — the oracle
+is the default execution path on this CPU container.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import block_migration, flash_attention, paged_attention, ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def migrate_blocks(pool, src, dst, *, use_kernel=False, interpret=True):
+    return block_migration.migrate_blocks(pool, src, dst,
+                                          use_kernel=use_kernel,
+                                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
+                       use_kernel=False, interpret=True):
+    if use_kernel:
+        return paged_attention.paged_attention(
+            q, k_pages, v_pages, block_tables, lengths, interpret=interpret)
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_tables, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel", "interpret"))
+def flash_attention_op(q, k, v, *, causal=True, use_kernel=False, interpret=True):
+    if use_kernel:
+        return flash_attention.flash_attention(q, k, v, causal=causal,
+                                               interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,103 @@
+"""Paged decode attention — the TPU analogue of vLLM's PagedAttention kernel.
+
+One grid cell per (sequence, kv-head); the scalar-prefetched block table
+drives the BlockSpec index map so each sequence's non-contiguous KV blocks
+stream through VMEM.  A running (max, sum) softmax accumulates across the
+sequence's pages — the VMEM working set is one (block_size, head_dim) page
+pair plus the (G, head_dim) query/accumulator tile, independent of context
+length.
+
+Validated in interpret mode against ref.paged_attention_ref over
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF, paged_attention_ref
+
+
+def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, block_size, pages_per_seq):
+    b = pl.program_id(0)
+    page = pl.program_id(2)
+
+    @pl.when(page == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (block_size, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    D = q.shape[-1]
+
+    s = (q * (D ** -0.5)) @ k.T                   # (G, block_size)
+    length = lengths_ref[b]
+    pos = page * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * scale + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(page == pages_per_seq - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret: bool = True):
+    """q: (B, H, D); k/v_pages: (num_blocks, block_size, KH, D);
+    block_tables: (B, max_blocks); lengths: (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    nb, bs, KH, _ = k_pages.shape
+    G = H // KH
+    pages_per_seq = block_tables.shape[1]
+
+    qg = q.reshape(B, KH, G, D)
+    # kv pages viewed per head: (num_blocks, KH, block_size, D)
+    kp = jnp.swapaxes(k_pages, 1, 2)
+    vp = jnp.swapaxes(v_pages, 1, 2)
+
+    grid = (B, KH, pages_per_seq)
+    kernel = functools.partial(_paged_attn_kernel, block_size=bs,
+                               pages_per_seq=pages_per_seq)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, t_ref, l_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, p, t_ref, l_ref: (t_ref[b, p], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, p, t_ref, l_ref: (t_ref[b, p], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, t_ref, l_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max
+            pltpu.VMEM((G, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((G, D), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qg, kp, vp)
+    return out.reshape(B, H, D)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def migrate_blocks_ref(x, src, dst):
+    """x: (num_blocks, row); copy rows src -> dst (one-to-one)."""
+    return x.at[dst].set(x[src])
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Decode attention over paged KV.
+
+    q:            (B, H, D)
+    k/v_pages:    (num_blocks, block_size, KH, D)
+    block_tables: (B, max_blocks) int32 (padded with any valid id)
+    lengths:      (B,) valid token counts
+    returns       (B, H, D)
+    """
+    B, H, D = q.shape
+    nb, bs, KH, _ = k_pages.shape
+    G = H // KH
+    max_blocks = block_tables.shape[1]
+    S = max_blocks * bs
+
+    # gather each sequence's KV contiguously
+    k = k_pages[block_tables].reshape(B, S, KH, D)
+    v = v_pages[block_tables].reshape(B, S, KH, D)
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(S)[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Standard full attention. q: (B, S, H, D), k/v: (B, S, KH, D)."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,156 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Structural roofline extraction — exact per-cell flop/byte/collective terms.
+
+``cost_analysis()`` counts a ``lax.scan`` body ONCE regardless of trip count,
+so the whole-step dry-run (which proves compilation + memory fit) undercounts
+compute for scanned layers.  This tool recovers exact totals structurally:
+
+  lower the same cell with the layer loop UNROLLED at two small depths
+  (L1, L2), take the marginal per-layer cost, and extrapolate:
+
+      total(L) = cost(L1) + (L - L1) * (cost(L2) - cost(L1)) / (L2 - L1)
+
+All inner scans (attention kv-chunks, xent chunks, SSD chunks, grad-accum)
+are also unrolled for these lowerings (``unroll_scans=True``, accum=1), so
+the marginal captures them exactly.  Memory figures still come from the
+full-depth compile (dryrun_*.json) where scan semantics are correct.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --all --json roofline.json
+"""
+import argparse
+import json
+import sys
+
+import jax
+
+from .. import configs
+from ..configs.base import shapes_for
+from ..models import registry
+from . import dryrun
+from .mesh import make_production_mesh
+
+TERMS = ("flops_per_device", "bytes_per_device",
+         "collective_bytes_per_device")
+
+
+def _depth_override(cfg, L):
+    """Config overrides putting the model at depth L, fully unrolled."""
+    ov = dict(scan_layers=False, unroll_scans=True)
+    if cfg.family == "encdec":
+        ov.update(enc_layers=L, dec_layers=L, num_layers=2 * L)
+    elif cfg.family == "hybrid":
+        ov.update(num_layers=L)  # keep attn_every: shared blocks scale too
+    else:
+        ov.update(num_layers=L)
+    return ov
+
+
+def _full_depth(cfg):
+    return cfg.enc_layers if cfg.family == "encdec" else cfg.num_layers
+
+
+def structural_cell(arch, shape, mesh, *, verbose=True):
+    cfg = configs.get_config(arch)
+    if cfg.family == "hybrid":
+        L1, L2 = cfg.hybrid_attn_every, 2 * cfg.hybrid_attn_every
+    else:
+        L1, L2 = 2, 4
+    accum = 1 if shape.kind == "train" else None
+
+    costs = {}
+    for L in (L1, L2):
+        res = dryrun.run_cell(arch, shape, mesh, verbose=False,
+                              cfg_override=_depth_override(cfg, L),
+                              accum_override=accum)
+        costs[L] = res
+
+    Lf = _full_depth(cfg)
+    out = dict(costs[L1])  # metadata template
+    for term in TERMS:
+        marginal = (costs[L2][term] - costs[L1][term]) / (L2 - L1)
+        out[term] = costs[L1][term] + marginal * (Lf - L1)
+        out[f"{term}_per_layer"] = marginal
+
+    out.update({
+        "arch": arch, "shape": shape.name,
+        "structural": True, "L1": L1, "L2": L2, "depth": Lf,
+        "compute_s": out["flops_per_device"] / dryrun.PEAK_FLOPS,
+        "memory_s": out["bytes_per_device"] / dryrun.HBM_BW,
+        "collective_s": (out["collective_bytes_per_device"]
+                         / dryrun.LINK_BW),
+    })
+    terms = {"compute": out["compute_s"], "memory": out["memory_s"],
+             "collective": out["collective_s"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    out["step_time_s"] = max(terms.values())
+
+    n_chips = mesh.devices.size
+    cfgf = configs.get_config(arch)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    nparams = (registry.param_count(cfgf) if shape.kind == "train"
+               else registry.active_param_count(cfgf))
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * nparams * tokens
+    out["model_flops_global"] = model_flops
+    out["useful_flops_ratio"] = model_flops / max(
+        out["flops_per_device"] * n_chips, 1.0)
+    # ideal time: compute bound OR unavoidable HBM reads (params+cache+inputs)
+    ideal_compute = model_flops / n_chips / dryrun.PEAK_FLOPS
+    ideal_mem = out.get("argument_bytes_per_device", 0) / dryrun.HBM_BW
+    out["ideal_s"] = max(ideal_compute, ideal_mem)
+    out["roofline_fraction"] = out["ideal_s"] / max(out["step_time_s"], 1e-30)
+
+    if verbose:
+        print(f"[structural {arch} x {shape.name} @ "
+              f"{'x'.join(str(s) for s in mesh.devices.shape)}]")
+        print(f"  terms(s): compute={out['compute_s']:.4f} "
+              f"memory={out['memory_s']:.4f} "
+              f"collective={out['collective_s']:.4f} "
+              f"-> {out['bottleneck']}  "
+              f"(useful_flops={out['useful_flops_ratio']:.3f}, "
+              f"roofline_frac={out['roofline_fraction']:.3f})")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cells = []
+    if args.all:
+        for arch in configs.ASSIGNED_ARCHS:
+            for shape in shapes_for(configs.get_config(arch)):
+                cells.append((arch, shape))
+    elif args.shape:
+        cells = [(args.arch, configs.get_shape(args.shape))]
+    else:
+        cells = [(args.arch, s)
+                 for s in shapes_for(configs.get_config(args.arch))]
+
+    results, failures = [], []
+    for arch, shape in cells:
+        try:
+            results.append(structural_cell(arch, shape, mesh))
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape.name, str(e)[:300]))
+            print(f"FAILED {arch} x {shape.name}: {str(e)[:200]}",
+                  file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"{len(results)} structural cells, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

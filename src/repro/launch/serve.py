@@ -1,0 +1,72 @@
+"""Serving entrypoint.
+
+Real execution tier (reduced configs, actual JAX compute):
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --policy nightjar
+
+Analytical paper-scale tier (TPU v5e cost model):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --rate 20 --requests 300 --policy nightjar
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-7b")
+    ap.add_argument("--policy", default="nightjar")
+    ap.add_argument("--tier", choices=["real", "sim"], default="sim")
+    ap.add_argument("--rate", type=float, default=10.0)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--dataset", default="sharegpt")
+    ap.add_argument("--gamma-max", type=int, default=5)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--no-offload", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from .. import configs
+
+    if args.tier == "sim":
+        from ..serving.costmodel import TPU_V5E
+        from ..serving.simulator import SimConfig, build_sim_engine
+        from ..serving.workload import poisson_requests
+
+        cfg = SimConfig(
+            target=configs.get_config(args.arch),
+            draft=configs.get_draft_config(args.arch),
+            hw=TPU_V5E, gamma_max=args.gamma_max, max_batch=args.max_batch,
+            enable_offload=not args.no_offload, seed=args.seed)
+        engine = build_sim_engine(cfg, args.policy)
+        reqs = poisson_requests(args.rate, args.requests,
+                                dataset=args.dataset, seed=args.seed + 1)
+        metrics = engine.run(reqs)
+    else:
+        from ..core.bandits import make_policy
+        from ..models import registry
+        from ..serving.engine import ServingEngine
+        from ..serving.kv_cache import BlockManager
+        from ..serving.real_backend import RealBackend
+        from ..serving.scheduler import ContinuousBatchingScheduler
+        from ..serving.workload import tiny_requests
+
+        cfg = configs.reduced(configs.get_config(args.arch))
+        dcfg = configs.reduced(configs.get_draft_config(args.arch))
+        backend = RealBackend(registry.get_model(cfg), registry.get_model(dcfg),
+                              max_batch=4, max_seq=256, seed=args.seed)
+        sched = ContinuousBatchingScheduler(BlockManager(512, 8), max_batch=4)
+        engine = ServingEngine(backend, sched,
+                               make_policy(args.policy, 3, seed=args.seed),
+                               None, gamma_max=3)
+        reqs = tiny_requests(min(args.requests, 16), rate_qps=args.rate,
+                             prompt_len=16, output_len=16,
+                             vocab=cfg.vocab_size, seed=args.seed)
+        metrics = engine.run(reqs, max_steps=5000)
+
+    print(json.dumps(metrics.summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Training entrypoint (single host; the dry-run covers the production mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
+      --steps 50 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    from .. import configs
+    from ..training.data import make_batch_iter
+    from ..training.train_loop import train
+
+    cfg = configs.get_config(args.arch)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+    it = make_batch_iter(cfg.vocab_size, args.batch, args.seq)
+    out = train(cfg, steps=args.steps, batch_iter=it,
+                checkpoint_dir=args.ckpt_dir)
+    for h in out["history"]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f}")
+    print(f"final loss {out['final_loss']:.4f} in {out['elapsed_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

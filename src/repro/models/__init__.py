@@ -1,0 +1,1 @@
+from . import common, encdec, hybrid, mamba2, moe, registry, transformer  # noqa: F401

@@ -1,0 +1,310 @@
+"""Shared model building blocks: norms, RoPE, attention, MLPs, initialisers.
+
+Everything is pure-functional JAX operating on parameter pytrees.  Attention
+is implemented blockwise (flash-style running softmax) so that 32k-token
+prefill never materialises an S x S matrix — this is also the pure-jnp oracle
+for the Pallas flash kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in initialisation."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, *, eps: float = 1e-6, offset: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if offset else scale.astype(jnp.float32)
+    return (y * w).astype(dt)
+
+
+def layer_norm(x, scale, bias, *, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"], offset=cfg.rmsnorm_offset)
+
+
+def init_norm(cfg, d, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    init = jnp.zeros if cfg.rmsnorm_offset else jnp.ones
+    return {"scale": init((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    angles = angles[..., None, :]  # broadcast over heads: (..., S, 1, d/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure jnp, numerically stable
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, KH, G, D), k: (B, Ck, KH, D) -> (B, KH, G, Sq, Ck) fp32."""
+    return jnp.einsum("bskgd,bckd->bkgsc", q, k, preferred_element_type=jnp.float32)
+
+
+def blockwise_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    q_offset=0,
+    prefix_len: int = 0,
+    chunk: int = 1024,
+    softcap: float = 0.0,
+    unroll: bool = False,
+):
+    """Chunked attention over the KV sequence with a running softmax.
+
+    q: (B, Sq, H, D)   k, v: (B, Sk, KH, D)   returns (B, Sq, H, D).
+
+    ``prefix_len`` marks a bidirectional prefix (PaliGemma-style prefix-LM):
+    keys with position < prefix_len are visible to every query.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D) * (D ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    chunk = min(chunk, Sk)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KH, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m, l, acc, c_idx = carry
+        k_blk, v_blk = xs
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = _gqa_scores(qg, k_blk)  # (B, KH, G, Sq, C)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            if prefix_len > 0:
+                mask = mask | (k_pos[None, :] < prefix_len)
+        if pad:
+            mask = mask & (k_pos[None, :] < Sk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgsc,bckd->bskgd", p, v_blk.astype(jnp.float32))
+        acc_new = acc * scale.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new, c_idx + 1), None
+
+    m0 = jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KH, G, D), jnp.float32)
+    if unroll:
+        # static unroll: exact flop accounting in HLO cost analysis
+        carry = (m0, l0, acc0, jnp.array(0))
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i]))
+        m, l, acc, _ = carry
+    else:
+        # flash-style: per-chunk remat keeps bwd residuals at carry size
+        (m, l, acc, _), _ = jax.lax.scan(
+            jax.checkpoint(body), (m0, l0, acc0, jnp.array(0)), (kc, vc))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, q_positions, *, softcap: float = 0.0):
+    """Attention of T new positions against a (partially filled) cache.
+
+    q: (B, T, H, D); caches: (B, S, KH, D); q_positions: (B, T) absolute
+    positions of the new tokens (their K/V already written into the cache).
+    Each query attends to every cache slot with position <= its own — this
+    covers both single-token decode (T=1) and speculative verify (T=gamma+1).
+
+    Pure-jnp oracle; the distributed context-parallel version lives in
+    distributed/collectives.py and reduces to this on a 1-device mesh.
+    """
+    from ..distributed.sharding import shard_decode_scores
+
+    B, T, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, T, KH, G, D) * (D ** -0.5)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k_cache,
+                   preferred_element_type=jnp.float32)  # (B, KH, G, T, S)
+    s = shard_decode_scores(s)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.arange(S)[None, None, :] <= q_positions[:, :, None]  # (B, T, S)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    # explicit streaming softmax: reductions over the (sharded) S dim become
+    # small cross-shard all-reduces; the big tensors stay partitioned
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = shard_decode_scores(p)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    # contract in the cache dtype with fp32 accumulation: converting v to
+    # fp32 here lets XLA hoist an fp32 copy of the ENTIRE stacked cache out
+    # of the layer scan (+16 GB/device at 32k x 128 — EXPERIMENTS §Perf)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.moveaxis(l, (1, 2, 3), (2, 3, 1))
+    return out.reshape(B, T, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wg": dense_init(k1, (d, f), dtype=dtype),
+            "wu": dense_init(k2, (d, f), dtype=dtype),
+            "wd": dense_init(k3, (f, d), dtype=dtype),
+        }
+    return {  # plain gelu (whisper)
+        "w1": dense_init(k1, (d, f), dtype=dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": dense_init(k2, (f, d), dtype=dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if cfg.mlp_type == "geglu":
+        return (jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])) @ p["wd"]
+    return (jax.nn.gelu(x @ p["w1"] + p["b1"], approximate=True)) @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg, key, dtype, *, d_model=None, num_heads=None, num_kv_heads=None,
+                   head_dim=None, cross: bool = False):
+    d = d_model or cfg.d_model
+    H = num_heads or cfg.num_heads
+    KH = num_kv_heads or cfg.num_kv_heads
+    hd = head_dim or cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), in_axis_size=d, dtype=dtype),
+        "wk": dense_init(ks[1], (d, KH, hd), in_axis_size=d, dtype=dtype),
+        "wv": dense_init(ks[2], (d, KH, hd), in_axis_size=d, dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis_size=H * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KH, hd), dtype)
+        p["bv"] = jnp.zeros((KH, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def qkv_project(cfg, p, x, positions, *, use_rope=True):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KH,hd) with rope/qknorm applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if use_rope and cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_output(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cache_write(cache, new, start):
+    """Write `new` (B, T, KH, hd) into `cache` (B, S, KH, hd) at per-sequence
+    offsets `start` (B,).
+
+    Implemented as a masked broadcast (iota compare) rather than a scattered
+    dynamic_update_slice: elementwise selects partition cleanly under SPMD
+    (a vmap'd scatter forces the partitioner to regroup/replicate the cache,
+    which blows past HBM at 32k x 128 decode shapes — see EXPERIMENTS §Perf).
+    """
+    B, S = cache.shape[0], cache.shape[1]
+    T = new.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]  # (1, S)
+    out = cache
+    for t in range(T):  # T is static and tiny (1..gamma+1)
+        sel = (pos == (start + t)[:, None])[..., None, None]  # (B, S, 1, 1)
+        out = jnp.where(sel, new[:, t][:, None].astype(cache.dtype), out)
+    return out

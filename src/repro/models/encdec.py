@@ -1,0 +1,265 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings ``(B, S_enc, d_model)``.  The encoder
+is bidirectional self-attention; the decoder has causal self-attention plus
+cross-attention over the encoder output.  LayerNorm + GELU (whisper).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_activations
+from .common import (
+    apply_mlp,
+    attn_output,
+    blockwise_attention,
+    cache_write,
+    decode_attention,
+    embed_init,
+    init_attention,
+    init_mlp,
+    layer_norm,
+    qkv_project,
+)
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init_ln(cfg, d, dt):
+    return {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)}
+
+
+def _ln(x, p):
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_enc_layer(cfg, key):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(cfg, k1, dt),
+        "mlp": init_mlp(cfg, k2, dt),
+        "ln1": _init_ln(cfg, cfg.d_model, dt),
+        "ln2": _init_ln(cfg, cfg.d_model, dt),
+    }
+
+
+def init_dec_layer(cfg, key):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_attn": init_attention(cfg, k1, dt),
+        "cross_attn": init_attention(cfg, k3, dt, cross=True),
+        "mlp": init_mlp(cfg, k2, dt),
+        "ln1": _init_ln(cfg, cfg.d_model, dt),
+        "ln2": _init_ln(cfg, cfg.d_model, dt),
+        "ln3": _init_ln(cfg, cfg.d_model, dt),
+    }
+
+
+def init_params(rng, cfg) -> Params:
+    dt = _dtype(cfg)
+    keys = jax.random.split(rng, 6)
+    enc_keys = jax.random.split(keys[0], cfg.enc_layers)
+    dec_keys = jax.random.split(keys[1], cfg.dec_layers)
+    if cfg.scan_layers:
+        enc_layers = jax.vmap(lambda k: init_enc_layer(cfg, k))(enc_keys)
+        dec_layers = jax.vmap(lambda k: init_dec_layer(cfg, k))(dec_keys)
+    else:
+        enc_layers = [init_enc_layer(cfg, k) for k in enc_keys]
+        dec_layers = [init_dec_layer(cfg, k) for k in dec_keys]
+    return {
+        "embed": embed_init(keys[2], (cfg.vocab_size, cfg.d_model), dt),
+        "enc_pos": embed_init(keys[3], (cfg.max_position_embeddings, cfg.d_model), dt),
+        "dec_pos": embed_init(keys[4], (cfg.max_position_embeddings, cfg.d_model), dt),
+        "enc_layers": enc_layers,
+        "dec_layers": dec_layers,
+        "enc_norm": _init_ln(cfg, cfg.d_model, dt),
+        "dec_norm": _init_ln(cfg, cfg.d_model, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg, params, enc_emb):
+    B, S, _ = enc_emb.shape
+    h = enc_emb.astype(_dtype(cfg)) + params["enc_pos"][jnp.arange(S)][None]
+    positions = jnp.arange(S)[None, :]
+
+    def body(hh, layer):
+        x = _ln(hh, layer["ln1"])
+        q, k, v = qkv_project(cfg, layer["attn"], x, positions, use_rope=False)
+        o = blockwise_attention(q, k, v, causal=False, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+        hh = hh + attn_output(layer["attn"], o)
+        x = _ln(hh, layer["ln2"])
+        return shard_activations(hh + apply_mlp(cfg, layer["mlp"], x)), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    else:
+        for layer in params["enc_layers"]:
+            h, _ = body(h, layer)
+    return _ln(h, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder (full sequence — teacher forcing / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(layer, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, layer["cross_attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, layer["cross_attn"]["wv"])
+    return k, v
+
+
+def _dec_layer_full(cfg, layer, h, enc_out, positions):
+    x = _ln(h, layer["ln1"])
+    q, k, v = qkv_project(cfg, layer["self_attn"], x, positions, use_rope=False)
+    o = blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+    h = h + attn_output(layer["self_attn"], o)
+    x = _ln(h, layer["ln2"])
+    qc = jnp.einsum("bsd,dhk->bshk", x, layer["cross_attn"]["wq"])
+    kc, vc = _cross_kv(layer, enc_out)
+    oc = blockwise_attention(qc, kc, vc, causal=False, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+    h = h + attn_output(layer["cross_attn"], oc)
+    x = _ln(h, layer["ln3"])
+    return h + apply_mlp(cfg, layer["mlp"], x), k, v, kc, vc
+
+
+def forward(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["enc_emb"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["dec_pos"][jnp.arange(S)][None]
+    positions = jnp.arange(S)[None, :]
+
+    def body(hh, layer):
+        hh, *_ = _dec_layer_full(cfg, layer, hh, enc_out, positions)
+        return shard_activations(hh), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    else:
+        for layer in params["dec_layers"]:
+            h, _ = body(h, layer)
+    return _ln(h, params["dec_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_len: int, enc_len: int | None = None):
+    dt = _dtype(cfg)
+    KH, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.dec_layers
+    enc_len = enc_len or cfg.enc_context
+    return {
+        "k": jnp.zeros((L, batch_size, max_len, KH, hd), dt),
+        "v": jnp.zeros((L, batch_size, max_len, KH, hd), dt),
+        "cross_k": jnp.zeros((L, batch_size, enc_len, KH, hd), dt),
+        "cross_v": jnp.zeros((L, batch_size, enc_len, KH, hd), dt),
+        "enc_len": jnp.zeros((batch_size,), jnp.int32),
+        "length": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def prefill(cfg, params, batch, max_len: int):
+    enc_out = encode(cfg, params, batch["enc_emb"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    S_enc = enc_out.shape[1]
+    h = params["embed"][tokens] + params["dec_pos"][jnp.arange(S)][None]
+    positions = jnp.arange(S)[None, :]
+    cache = init_cache(cfg, B, max_len, enc_len=S_enc)
+
+    def body(hh, layer):
+        hh, k, v, kc, vc = _dec_layer_full(cfg, layer, hh, enc_out, positions)
+        return hh, (k, v, kc, vc)
+
+    if cfg.scan_layers:
+        h, (ks, vs, kcs, vcs) = jax.lax.scan(body, h, params["dec_layers"])
+    else:
+        outs = []
+        for layer in params["dec_layers"]:
+            h, k, v, kc, vc = _dec_layer_full(cfg, layer, h, enc_out, positions)
+            outs.append((k, v, kc, vc))
+        ks, vs, kcs, vcs = (jnp.stack([o[i] for o in outs]) for i in range(4))
+
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["cross_k"] = kcs.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = vcs.astype(cache["cross_v"].dtype)
+    cache["enc_len"] = jnp.full((B,), S_enc, jnp.int32)
+    cache["length"] = jnp.full((B,), S, jnp.int32)
+    h = _ln(h, params["dec_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", h[:, -1:], params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, positions=None):
+    B, T = tokens.shape
+    if positions is None:
+        positions = cache["length"][:, None] + jnp.arange(T)[None, :]
+    h = params["embed"][tokens] + params["dec_pos"][positions]
+    enc_positions = jnp.broadcast_to(
+        (cache["enc_len"] - 1)[:, None], (B, T))  # full visibility over enc
+
+    def layer_step(hh, xs):
+        layer, kc, vc, ck, cv = xs
+        x = _ln(hh, layer["ln1"])
+        q, k, v = qkv_project(cfg, layer["self_attn"], x, positions, use_rope=False)
+        from ..distributed.sharding import replicate_new_kv, shard_kv_cache
+        start = positions[:, 0]
+        kc = shard_kv_cache(cache_write(kc, replicate_new_kv(k), start))
+        vc = shard_kv_cache(cache_write(vc, replicate_new_kv(v), start))
+        o = decode_attention(q, kc, vc, positions)
+        hh = hh + attn_output(layer["self_attn"], o)
+        x = _ln(hh, layer["ln2"])
+        qc = jnp.einsum("bsd,dhk->bshk", x, layer["cross_attn"]["wq"])
+        oc = decode_attention(qc, ck, cv, enc_positions)
+        hh = hh + attn_output(layer["cross_attn"], oc)
+        x = _ln(hh, layer["ln3"])
+        return hh + apply_mlp(cfg, layer["mlp"], x), kc, vc
+
+    if cfg.scan_layers:
+        def body(hh, xs):
+            layer, kc, vc, ck, cv = xs
+            hh, kc, vc = layer_step(hh, (layer, kc, vc, ck, cv))
+            return hh, (kc, vc)
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, k=ks, v=vs, length=cache["length"] + T)
+    else:
+        ks_l, vs_l = [], []
+        for i, layer in enumerate(params["dec_layers"]):
+            h, kc, vc = layer_step(h, (layer, cache["k"][i], cache["v"][i],
+                                       cache["cross_k"][i], cache["cross_v"][i]))
+            ks_l.append(kc)
+            vs_l.append(vc)
+        cache = dict(cache, k=jnp.stack(ks_l), v=jnp.stack(vs_l),
+                     length=cache["length"] + T)
+    h = _ln(h, params["dec_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache

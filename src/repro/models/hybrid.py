@@ -1,0 +1,207 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+38 mamba2 layers; one attention+MLP block whose weights are **reused** at
+every ``hybrid_attn_every``-th layer (zamba2's parameter-sharing design).
+Each application point keeps its own KV cache (weights are shared,
+activations are not).  The shared block receives the current hidden state
+plus the original token embedding (additive simplification of zamba2's
+concat + linear; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    apply_mlp,
+    attn_output,
+    blockwise_attention,
+    cache_write,
+    decode_attention,
+    embed_init,
+    init_attention,
+    init_mlp,
+    qkv_project,
+    rms_norm,
+)
+from .mamba2 import apply_mamba_full, apply_mamba_step, init_mamba_layer
+from ..distributed.sharding import shard_activations
+from . import mamba2
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def attn_points(cfg):
+    """Layer indices at which the shared attention block is applied."""
+    k = cfg.hybrid_attn_every
+    return tuple(i for i in range(cfg.num_layers) if (i + 1) % k == 0)
+
+
+def init_params(rng, cfg) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_layers, k_shared, k_mlp = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = [init_mamba_layer(cfg, k) for k in layer_keys]
+    shared = {
+        "attn": init_attention(cfg, k_shared, dt),
+        "mlp": init_mlp(cfg, k_mlp, dt),
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+    }
+    return {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _shared_full(cfg, shared, h, emb, positions):
+    x = rms_norm(h + emb, shared["ln1"])
+    q, k, v = qkv_project(cfg, shared["attn"], x, positions)
+    o = blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+    h = h + attn_output(shared["attn"], o)
+    x = rms_norm(h, shared["ln2"])
+    return h + apply_mlp(cfg, shared["mlp"], x), k, v
+
+
+def _shared_decode(cfg, shared, h, emb, k_cache, v_cache, positions):
+    x = rms_norm(h + emb, shared["ln1"])
+    q, k, v = qkv_project(cfg, shared["attn"], x, positions)
+    from ..distributed.sharding import replicate_new_kv, shard_kv_cache
+    start = positions[:, 0]
+    k_cache = shard_kv_cache(cache_write(k_cache, replicate_new_kv(k), start))
+    v_cache = shard_kv_cache(cache_write(v_cache, replicate_new_kv(v), start))
+    o = decode_attention(q, k_cache, v_cache, positions)
+    h = h + attn_output(shared["attn"], o)
+    x = rms_norm(h, shared["ln2"])
+    return h + apply_mlp(cfg, shared["mlp"], x), k_cache, v_cache
+
+
+def forward(cfg, params, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    emb = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    h = emb
+
+    # scan over stacked layers with a cond'd shared block: the loop boundary
+    # is what makes remat stick (straight-line jax.checkpoint gets undone by
+    # XLA CSE — EXPERIMENTS §Perf iteration 7)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["layers"])
+    k = cfg.hybrid_attn_every
+
+    def body(hh, xs):
+        layer, idx = xs
+        hh, _ = apply_mamba_full(cfg, layer, hh)
+        hh = jax.lax.cond(
+            (idx + 1) % k == 0,
+            lambda a: _shared_full(cfg, params["shared"], a, emb, positions)[0],
+            lambda a: a,
+            hh)
+        return shard_activations(hh), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, (stacked, jnp.arange(cfg.num_layers)))
+    return rms_norm(h, params["final_norm"])
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    dt = _dtype(cfg)
+    base = mamba2.init_cache(cfg, batch_size)
+    n_apps = len(attn_points(cfg))
+    KH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    base["attn_k"] = jnp.zeros((n_apps, batch_size, max_len, KH, hd), dt)
+    base["attn_v"] = jnp.zeros((n_apps, batch_size, max_len, KH, hd), dt)
+    return base
+
+
+def prefill(cfg, params, batch, max_len: int):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    emb = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    h = emb
+    cache = init_cache(cfg, B, max_len)
+    pts = list(attn_points(cfg))
+    convs, ssms, aks, avs = [], [], [], []
+    for i, layer in enumerate(params["layers"]):
+        u = rms_norm(h, layer["ln"])
+        _, xBC, _, _ = mamba2._split_proj(cfg, layer, u, cfg.d_model)
+        K = cfg.ssm_conv
+        tail = jnp.pad(xBC, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))[:, -(K - 1):]
+        h, final_state = apply_mamba_full(cfg, layer, h)
+        convs.append(tail)
+        ssms.append(final_state)
+        if i in pts:
+            h, k, v = _shared_full(cfg, params["shared"], h, emb, positions)
+            aks.append(k)
+            avs.append(v)
+    cache["conv"] = jnp.stack(convs).astype(cache["conv"].dtype)
+    cache["ssm"] = jnp.stack(ssms)
+    cache["attn_k"] = jax.lax.dynamic_update_slice(
+        cache["attn_k"], jnp.stack(aks).astype(cache["attn_k"].dtype), (0, 0, 0, 0, 0))
+    cache["attn_v"] = jax.lax.dynamic_update_slice(
+        cache["attn_v"], jnp.stack(avs).astype(cache["attn_v"].dtype), (0, 0, 0, 0, 0))
+    cache["length"] = jnp.full((B,), S, jnp.int32)
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", h[:, -1:], params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def _step_once(cfg, params, cache, tok_col, positions):
+    """One token through all layers. tok_col: (B,). positions: (B, 1)."""
+    emb = params["embed"][tok_col][:, None, :]
+    h = emb
+    pts = list(attn_points(cfg))
+    convs, ssms, aks, avs = [], [], [], []
+    app = 0
+    for i, layer in enumerate(params["layers"]):
+        h, cs, ss = apply_mamba_step(cfg, layer, h, cache["conv"][i], cache["ssm"][i])
+        convs.append(cs)
+        ssms.append(ss)
+        if i in pts:
+            h, knew, vnew = _shared_decode(
+                cfg, params["shared"], h, emb,
+                cache["attn_k"][app], cache["attn_v"][app], positions)
+            # collect and stack ONCE: chaining .at[app].set() makes each
+            # application copy the full stacked cache (6x at long_500k)
+            aks.append(knew)
+            avs.append(vnew)
+            app += 1
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = {"conv": jnp.stack(convs), "ssm": jnp.stack(ssms),
+                 "attn_k": jnp.stack(aks), "attn_v": jnp.stack(avs),
+                 "length": cache["length"] + 1}
+    return logits, new_cache
+
+
+def decode_step(cfg, params, cache, tokens, positions=None):
+    """tokens (B, T); T>1 keeps per-position SSM checkpoints for rollback."""
+    B, T = tokens.shape
+    if positions is None:
+        base = cache["length"]
+    else:
+        base = positions[:, 0]
+    if T == 1:
+        return _step_once(cfg, params, cache, tokens[:, 0], base[:, None])
+
+    logits_all, conv_ck, ssm_ck = [], [], []
+    cur = dict(cache)
+    for t in range(T):
+        logits, cur = _step_once(cfg, params, cur, tokens[:, t], (base + t)[:, None])
+        logits_all.append(logits[:, 0])
+        conv_ck.append(cur["conv"])
+        ssm_ck.append(cur["ssm"])
+    cur["checkpoints"] = {"conv": jnp.stack(conv_ck), "ssm": jnp.stack(ssm_ck)}
+    return jnp.stack(logits_all, axis=1), cur

@@ -1,0 +1,378 @@
+"""Mamba2 (state-space duality / SSD) blocks in pure JAX.
+
+Implements the chunked SSD algorithm of "Transformers are SSMs"
+(arXiv:2405.21060): within-chunk quadratic (attention-like) term plus an
+inter-chunk recurrence on the (H, P, N) states — the TPU-friendly formulation
+(all matmuls, scan only over L/chunk steps).
+
+Decode runs the O(1)-state recurrence:
+    h <- h * exp(dt*A) + dt * (B ⊗ x);   y = C · h + D * x
+
+Speculative-decoding adaptation (DESIGN.md §5): ``decode_chunk`` processes
+gamma+1 draft tokens in one SSD pass and returns the *per-position* states so
+the engine can roll back to the acceptance point — the SSM analogue of KV
+truncation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, embed_init, rms_norm
+from ..distributed.sharding import shard_activations
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_layer(cfg, key, d_model=None):
+    dt = _dtype(cfg)
+    d = d_model or cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 6)
+    # in_proj emits [z (d_in), x (d_in), B (G*N), C (G*N), dt (H)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * G * N + H), dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (1.0 / cfg.ssm_conv ** 0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(ks[3], (d_in, d), dtype=dt),
+        "ln": jnp.ones((d,), dt),
+    }
+
+
+def init_params(rng, cfg) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_layers = jax.random.split(rng)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: init_mamba_layer(cfg, k))(layer_keys)
+    else:
+        layers = [init_mamba_layer(cfg, k) for k in layer_keys]
+    return {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dt),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Projections shared by full / step paths
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg, layer, u, d_model):
+    d_in = cfg.ssm_expand * d_model
+    H = d_in // cfg.ssm_headdim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    zxbcdt = u @ layer["in_proj"]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt_raw, (d_in, H, G, N)
+
+
+def _conv_full(layer, xBC):
+    """Causal depthwise conv over (B, L, conv_dim)."""
+    w = layer["conv_w"].astype(jnp.float32)  # (K, conv_dim)
+    K = w.shape[0]
+    x = xBC.astype(jnp.float32)
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + layer["conv_b"].astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(x):
+    """Stable 'segment sum': x (..., T) -> (..., T, T) lower-tri cumulative sums."""
+    T = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., None, :], x.shape + (T,)).swapaxes(-1, -2)
+    mask = jnp.tril(jnp.ones((T, T), bool), k=-1)
+    xx = jnp.where(mask, xx, 0.0)
+    segsum = jnp.cumsum(xx, axis=-2)
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, segsum, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk, init_state=None, return_final=True,
+                unroll=False):
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)    dt: (b, l, h)    A: (h,) (negative)
+    Bm, Cm: (b, l, g, n); returns y (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, l)
+    nc = l // Q
+    assert nc * Q == l, f"seq len {l} not divisible by chunk {Q}"
+    rep = h // g
+
+    xc = x.reshape(b, nc, Q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = jnp.repeat(Bm.reshape(b, nc, Q, g, n), rep, axis=3).astype(jnp.float32)
+    Cc = jnp.repeat(Cm.reshape(b, nc, Q, g, n), rep, axis=3).astype(jnp.float32)
+
+    dA = dtc * A  # (b, nc, Q, h)
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumsum
+    xdt = xc * dtc[..., None]
+
+    # (1) intra-chunk (quadratic) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b, nc, h, Q, Q)
+    y_diag = jnp.einsum("bcqhn,bcshn,bchqs,bcshp->bcqhp", Cc, Bc, L, xdt)
+
+    # (2) per-chunk output states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b, nc, Q, h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_states, xdt)
+
+    # (3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b, nc, h)
+
+    def scan_fn(carry, xs):
+        st, dec = xs
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    if unroll:
+        carry, prevs = h0, []
+        for i in range(nc):
+            carry, prev = scan_fn(carry, (states[:, i], chunk_decay[:, i]))
+            prevs.append(prev)
+        final, prev_states = carry, jnp.stack(prevs, axis=1)
+    else:
+        final, prev_states = jax.lax.scan(
+            scan_fn, h0,
+            (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # (4) inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(dA_cs)  # (b, nc, Q, h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, (final if return_final else None)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence layer (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def apply_mamba_full(cfg, layer, hid, d_model=None, init_state=None):
+    """hid: (B, L, d). Returns (hid', final_ssm_state, last_conv_window)."""
+    d = d_model or cfg.d_model
+    u = rms_norm(hid, layer["ln"])
+    z, xBC, dt_raw, (d_in, H, G, N) = _split_proj(cfg, layer, u, d)
+    xBC = _conv_full(layer, xBC)
+    x, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    b, l = x.shape[0], x.shape[1]
+    x = x.reshape(b, l, H, cfg.ssm_headdim)
+    Bm = Bm.reshape(b, l, G, N)
+    Cm = Cm.reshape(b, l, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + layer["dt_bias"])  # (b, l, H)
+    A = -jnp.exp(layer["A_log"])  # (H,)
+
+    y, final_state = ssd_chunked(x, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                                 init_state=init_state,
+                                 unroll=cfg.unroll_scans)
+    y = y + x.astype(jnp.float32) * layer["D"][:, None]
+    y = y.reshape(b, l, d_in).astype(hid.dtype)
+    y = rms_norm(y * jax.nn.silu(z), layer["norm"])
+    out = y @ layer["out_proj"]
+    # conv window for decode continuation: last (K-1) pre-activation inputs
+    return hid + out, final_state
+
+
+# ---------------------------------------------------------------------------
+# Single-step decode (recurrent)
+# ---------------------------------------------------------------------------
+
+
+def apply_mamba_step(cfg, layer, hid, conv_state, ssm_state, d_model=None):
+    """hid: (B, 1, d); conv_state: (B, K-1, conv_dim); ssm_state: (B, H, P, N)."""
+    d = d_model or cfg.d_model
+    u = rms_norm(hid, layer["ln"])
+    z, xBC, dt_raw, (d_in, H, G, N) = _split_proj(cfg, layer, u[:, 0], d)
+    # depthwise conv with rolling state
+    K = cfg.ssm_conv
+    w = layer["conv_w"].astype(jnp.float32)
+    window = jnp.concatenate(
+        [conv_state.astype(jnp.float32), xBC[:, None, :].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + layer["conv_b"].astype(jnp.float32)
+    xBC_act = jax.nn.silu(conv_out).astype(hid.dtype)
+    new_conv_state = window[:, 1:].astype(conv_state.dtype)
+
+    x, Bm, Cm = jnp.split(xBC_act, [d_in, d_in + G * N], axis=-1)
+    b = x.shape[0]
+    x = x.reshape(b, H, cfg.ssm_headdim).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(b, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(b, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + layer["dt_bias"])  # (b, H)
+    A = -jnp.exp(layer["A_log"])
+
+    decay = jnp.exp(dt * A)  # (b, H)
+    ssm_state = (ssm_state.astype(jnp.float32) * decay[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt, x, Bm))
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, ssm_state) + x * layer["D"][:, None]
+    y = y.reshape(b, 1, d_in).astype(hid.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), layer["norm"])
+    out = y @ layer["out_proj"]
+    return hid + out, new_conv_state, ssm_state.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Model-level interface (ssm family)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, batch):
+    h = params["embed"][batch["tokens"]]
+
+    def body(hh, layer):
+        hh, _ = apply_mamba_full(cfg, layer, hh)
+        return shard_activations(hh), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    else:
+        for layer in params["layers"]:
+            h, _ = apply_mamba_full(cfg, layer, h)
+    return rms_norm(h, params["final_norm"])
+
+
+def init_cache(cfg, batch_size: int, max_len: int = 0):
+    """SSM caches are O(1) in sequence length (max_len ignored)."""
+    dt = _dtype(cfg)
+    d_in = cfg.d_inner
+    H = cfg.ssm_nheads
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    L = cfg.num_layers
+    return {
+        "conv": jnp.zeros((L, batch_size, cfg.ssm_conv - 1, conv_dim), dt),
+        "ssm": jnp.zeros((L, batch_size, H, cfg.ssm_headdim, N), jnp.float32),
+        "length": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def _unembed(cfg, params, h):
+    return jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                      preferred_element_type=jnp.float32)
+
+
+def prefill(cfg, params, batch, max_len: int = 0):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    cache = init_cache(cfg, B)
+
+    def body(hh, xs):
+        layer = xs
+        # recompute conv tail inside: run full layer, also emit states
+        hid, final_state = apply_mamba_full(cfg, layer, hh)
+        return hid, final_state
+
+    # also need conv windows: recompute the pre-conv activations' tail
+    conv_states, ssm_states = [], []
+    if cfg.scan_layers:
+        def body2(hh, layer):
+            u = rms_norm(hh, layer["ln"])
+            _, xBC, _, _ = _split_proj(cfg, layer, u, cfg.d_model)
+            K = cfg.ssm_conv
+            tail = jnp.pad(xBC, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))[:, -(K - 1):]
+            hid, final_state = apply_mamba_full(cfg, layer, hh)
+            return hid, (tail, final_state)
+        h, (convs, ssms) = jax.lax.scan(body2, h, params["layers"])
+        cache = {"conv": convs.astype(cache["conv"].dtype), "ssm": ssms,
+                 "length": jnp.full((B,), S, jnp.int32)}
+    else:
+        for layer in params["layers"]:
+            u = rms_norm(h, layer["ln"])
+            _, xBC, _, _ = _split_proj(cfg, layer, u, cfg.d_model)
+            K = cfg.ssm_conv
+            tail = jnp.pad(xBC, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))[:, -(K - 1):]
+            h, final_state = apply_mamba_full(cfg, layer, h)
+            conv_states.append(tail)
+            ssm_states.append(final_state)
+        cache = {"conv": jnp.stack(conv_states).astype(cache["conv"].dtype),
+                 "ssm": jnp.stack(ssm_states),
+                 "length": jnp.full((B,), S, jnp.int32)}
+    h = rms_norm(h, params["final_norm"])
+    return _unembed(cfg, params, h[:, -1:]), cache
+
+
+def decode_step(cfg, params, cache, tokens, positions=None):
+    """tokens (B, T).  T=1: recurrent step.  T>1 (speculative verify): the
+    chunk is processed token-by-token with per-position state checkpoints so
+    the engine can roll back to the acceptance point (DESIGN.md §5)."""
+    B, T = tokens.shape
+    h = params["embed"][tokens]
+
+    if T == 1:
+        def body(hh, xs):
+            layer, cs, ss = xs
+            hh, cs, ss = apply_mamba_step(cfg, layer, hh, cs, ss)
+            return hh, (cs, ss)
+        if cfg.scan_layers:
+            h, (convs, ssms) = jax.lax.scan(
+                body, h, (params["layers"], cache["conv"], cache["ssm"]))
+        else:
+            convs_l, ssms_l = [], []
+            for i, layer in enumerate(params["layers"]):
+                h, cs, ss = apply_mamba_step(cfg, layer, h, cache["conv"][i],
+                                             cache["ssm"][i])
+                convs_l.append(cs)
+                ssms_l.append(ss)
+            convs, ssms = jnp.stack(convs_l), jnp.stack(ssms_l)
+        cache = {"conv": convs, "ssm": ssms, "length": cache["length"] + 1}
+        h = rms_norm(h, params["final_norm"])
+        return _unembed(cfg, params, h), cache
+
+    # multi-token extension: scan over the T positions, keeping checkpoints
+    def token_body(carry, tok_col):
+        conv, ssm = carry
+        hh = params["embed"][tok_col][:, None, :]
+
+        def layer_body(hh2, xs):
+            layer, cs, ss = xs
+            hh2, cs, ss = apply_mamba_step(cfg, layer, hh2, cs, ss)
+            return hh2, (cs, ss)
+        if cfg.scan_layers:
+            hh, (conv, ssm) = jax.lax.scan(layer_body, hh, (params["layers"], conv, ssm))
+        else:
+            cl, sl = [], []
+            for i, layer in enumerate(params["layers"]):
+                hh, cs, ss = apply_mamba_step(cfg, layer, hh, conv[i], ssm[i])
+                cl.append(cs)
+                sl.append(ss)
+            conv, ssm = jnp.stack(cl), jnp.stack(sl)
+        logits = _unembed(cfg, params, rms_norm(hh, params["final_norm"]))
+        return (conv, ssm), (logits[:, 0], conv, ssm)
+
+    (convs, ssms), (logits_t, conv_ckpts, ssm_ckpts) = jax.lax.scan(
+        token_body, (cache["conv"], cache["ssm"]), tokens.T)
+    logits = logits_t.transpose(1, 0, 2)  # (B, T, V)
+    cache = {"conv": convs, "ssm": ssms, "length": cache["length"] + T,
+             "checkpoints": {"conv": conv_ckpts, "ssm": ssm_ckpts}}
+    return logits, cache

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts layer with group-local capacity dispatch.
+
+FLOP-efficient: each token is routed to its top-k experts only (plus a
+capacity-factor head-room) via gather/scatter built from cumulative
+positions — no (T, E, C) one-hot tensors.
+
+Dispatch is **hierarchical** (Mesh-TF style groups): tokens are split into
+``moe_groups`` groups aligned with the data-parallel mesh axes, and the
+gather/scatter stays *within* a group.  Under SPMD this keeps every dispatch
+buffer and index operation shard-local — a global top-k gather would force
+the partitioner to all-gather the full token tensor (observed +16 GB/device
+at 1M-token prefill; see EXPERIMENTS §Perf).
+
+Used by grok-1 (8 experts, top-2) and granite-moe (32 experts, top-8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from ..distributed.sharding import shard_moe_slots
+
+
+def init_moe(cfg, key, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),  # router kept fp32
+        "wg": dense_init(ks[1], (E, d, f), in_axis_size=d, dtype=dtype),
+        "wu": dense_init(ks[2], (E, d, f), in_axis_size=d, dtype=dtype),
+        "wd": dense_init(ks[3], (E, f, d), in_axis_size=f, dtype=dtype),
+    }
+
+
+def moe_capacity(num_tokens: int, num_experts: int, top_k: int, factor: float) -> int:
+    cap = int(num_tokens * top_k * factor / num_experts) + 1
+    # round up to a lane-friendly multiple of 8
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def apply_moe(cfg, p, x, *, capacity_factor: float | None = None,
+              groups: int | None = None):
+    """x: (B, S, d) -> (B, S, d) plus aux losses dict."""
+    B, S, d = x.shape
+    E, k = cfg.moe_num_experts, cfg.moe_top_k
+    T = B * S
+    G = groups if groups is not None else getattr(cfg, "moe_groups", 1)
+    if T % G:
+        G = 1
+    Tg = T // G
+    xf = x.reshape(G, Tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    C = moe_capacity(Tg, E, k, cf)
+
+    # position of each (token, slot) within its expert queue — per group
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (G, Tg, k, E)
+    flat = onehot.reshape(G, Tg * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # exclusive cumsum within group
+    pos_in_expert = jnp.sum(pos * flat, axis=-1)  # (G, Tg*k)
+    expert_of = gate_idx.reshape(G, Tg * k)
+
+    # scatter token ids into the per-group (E, C) slot table; slot -1 = empty.
+    # over-capacity writes have pos >= C and are dropped by mode="drop".
+    slot_table = jnp.full((G, E, C), -1, jnp.int32)
+    tok_ids = jnp.tile(jnp.arange(Tg, dtype=jnp.int32)[:, None],
+                       (1, k)).reshape(Tg * k)[None].repeat(G, axis=0)
+    gi = jnp.arange(G, dtype=jnp.int32)[:, None].repeat(Tg * k, axis=1)
+    slot_table = slot_table.at[gi, expert_of, pos_in_expert].set(
+        tok_ids, mode="drop")
+    slot_valid = slot_table >= 0
+    safe_ids = jnp.maximum(slot_table, 0)  # (G, E, C)
+
+    # gather expert inputs within each group: (G, E, C, d)
+    xin = jnp.take_along_axis(
+        xf[:, None], safe_ids.reshape(G, 1, E * C)[..., None], axis=2
+    ).reshape(G, E, C, d)
+    xin = xin * slot_valid[..., None].astype(xf.dtype)
+    xin = shard_moe_slots(xin)
+
+    # expert computation (grouped matmuls)
+    if cfg.mlp_type == "geglu":
+        act = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xin, p["wg"]),
+                          approximate=True)
+    else:
+        act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wg"]))
+    h = act * jnp.einsum("gecd,edf->gecf", xin, p["wu"])
+    yout = jnp.einsum("gecf,efd->gecd", h, p["wd"])  # (G, E, C, d)
+    yout = shard_moe_slots(yout)
+
+    # combine: gather each (token, slot)'s expert output within its group
+    safe_pos = jnp.minimum(pos_in_expert, C - 1)
+    flat_idx = (expert_of * C + safe_pos)  # (G, Tg*k)
+    y_slots = jnp.take_along_axis(
+        yout.reshape(G, E * C, d), flat_idx[..., None], axis=1)  # (G, Tg*k, d)
+    kept = jnp.take_along_axis(
+        slot_table.reshape(G, E * C), flat_idx, axis=1) == tok_ids
+    y_slots = y_slots * kept[..., None]
+    gates_flat = gate_vals.reshape(G, Tg * k)
+    y = jnp.sum((y_slots * gates_flat[..., None]).reshape(G, Tg, k, d), axis=2)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = {"load_balance_loss": E * jnp.sum(me * ce)}
+
+    return y.reshape(B, S, d).astype(x.dtype), aux

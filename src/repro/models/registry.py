@@ -1,0 +1,162 @@
+"""Uniform model API over all families + streamed cross-entropy loss.
+
+get_model(cfg) returns a :class:`ModelAPI` with
+  init(rng) -> params
+  forward(params, batch) -> final hidden states (B, S, d)
+  loss(params, batch) -> (scalar loss, metrics)
+  init_cache(batch_size, max_len) -> cache pytree
+  prefill(params, batch, max_len) -> (last_logits, cache)
+  decode_step(params, cache, tokens[, positions]) -> (logits, cache)
+
+The training loss streams the unembedding over sequence chunks (never
+materialising a (B, S, V) logits tensor) — essential for 256k-row vocabs at
+4k sequence length.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec, hybrid, mamba2, transformer
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def _unembed_table(cfg, params):
+    if cfg.family == "encdec" or cfg.tie_embeddings or "lm_head" not in params:
+        return params["embed"]
+    return params["lm_head"]
+
+
+def streamed_xent(cfg, params, hidden, labels):
+    """Chunked softmax cross-entropy. hidden: (B, S, d); labels: (B, S).
+
+    Label value -100 is ignored (masked)."""
+    table = _unembed_table(cfg, params)
+    B, S, d = hidden.shape
+    chunk = min(cfg.xent_chunk, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    hc = hidden.reshape(B, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_fn(h, y):
+        logits = jnp.einsum("bsd,vd->bsv", h, table,
+                            preferred_element_type=jnp.float32)
+        if cfg.logit_softcap > 0.0:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        mask = y >= 0
+        safe_y = jnp.maximum(y, 0)
+        gold = jnp.take_along_axis(logits, safe_y[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        return jnp.sum(nll), jnp.sum(mask)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, y = xs
+        s, c = chunk_fn(h, y)
+        return (tot + s, cnt + c), None
+
+    if cfg.unroll_scans:
+        carry = (jnp.float32(0.0), jnp.int32(0))
+        for i in range(n):
+            carry, _ = body(carry, (hc[i], lc[i]))
+        tot, cnt = carry
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                     (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def _make_loss(cfg, fwd):
+    def loss(params, batch):
+        hidden = fwd(cfg, params, batch)
+        l = streamed_xent(cfg, params, hidden, batch["labels"])
+        return l, {"loss": l}
+    return loss
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    mod = _FAMILY_MODULES[cfg.family]
+    fwd = mod.forward
+
+    def loss(params, batch):
+        hidden = fwd(cfg, params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "image_emb" in batch:
+            hidden = hidden[:, cfg.num_image_tokens:, :]
+        return streamed_xent(cfg, params, hidden, labels), {}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=functools.partial(_init, mod, cfg),
+        forward=functools.partial(fwd, cfg),
+        loss=loss,
+        init_cache=functools.partial(mod.init_cache, cfg),
+        prefill=functools.partial(mod.prefill, cfg),
+        decode_step=functools.partial(mod.decode_step, cfg),
+    )
+
+
+def _init(mod, cfg, rng):
+    return mod.init_params(rng, cfg)
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs of the parameter pytree — no allocation."""
+    mod = _FAMILY_MODULES[cfg.family]
+    return jax.eval_shape(lambda k: mod.init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    import numpy as np
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(specs)))
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    import numpy as np
+    return int(sum(np.prod(s.shape) * s.dtype.itemsize
+                   for s in jax.tree.leaves(specs)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE counts top-k experts only)."""
+    total = param_count(cfg)
+    if not cfg.moe_num_experts:
+        return total
+    # subtract the inactive experts' MLP weights
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = (cfg.moe_num_experts - cfg.moe_top_k) * per_expert * cfg.num_layers
+    return total - inactive

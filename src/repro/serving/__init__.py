@@ -1,0 +1,2 @@
+from . import (costmodel, engine, kv_cache, memory_manager, request,  # noqa: F401
+               scheduler, simulator, workload)

@@ -1,0 +1,133 @@
+"""Analytical roofline step-latency model (the paper-scale execution tier).
+
+Step latency = max(compute term, HBM term) + fixed dispatch overhead, the
+same three-term structure as EXPERIMENTS.md §Roofline.  This model is what
+reproduces the paper's Figure 1/2 crossover on TPU v5e: at small batch the
+decode step is weight-read-bound (speculation amortises the reads), at large
+batch the verification FLOPs push the step into the compute-bound regime
+where speculation loses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..configs.base import ModelConfig
+from ..models import registry
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    peak_flops: float          # FLOP/s (bf16/fp16)
+    hbm_bw: float              # bytes/s
+    hbm_bytes: float           # capacity
+    step_overhead: float       # fixed per-step dispatch latency (s)
+    host_link_bw: float        # bytes/s host<->device (offload path)
+    ici_bw: float = 0.0        # bytes/s per link (multi-chip)
+    chips: int = 1
+
+
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, hbm_bytes=16e9,
+    step_overhead=35e-6, host_link_bw=32e9, ici_bw=50e9, chips=1)
+
+# the paper's single-GPU testbed (for faithful-reproduction benchmarks)
+RTX_4090 = HardwareProfile(
+    name="rtx4090", peak_flops=165e12, hbm_bw=1008e9, hbm_bytes=24e9,
+    step_overhead=120e-6, host_link_bw=25e9)
+
+A100_40G = HardwareProfile(
+    name="a100-40g", peak_flops=312e12, hbm_bw=1555e9, hbm_bytes=40e9,
+    step_overhead=90e-6, host_link_bw=25e9)
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    if cfg.family == "ssm":
+        return 0  # O(1) state
+    layers = cfg.dec_layers if cfg.family == "encdec" else cfg.num_layers
+    if cfg.family == "hybrid":
+        from ..models.hybrid import attn_points
+        layers = len(attn_points(cfg))
+    return 2 * layers * cfg.num_kv_heads * cfg.resolved_head_dim * dtype_bytes
+
+
+class RooflineCostModel:
+    """Latency oracle for one hardware profile."""
+
+    def __init__(self, hw: HardwareProfile = TPU_V5E, *, dtype_bytes: int = 2,
+                 mfu: float = 0.6, bwu: float = 0.8):
+        self.hw = hw
+        self.dtype_bytes = dtype_bytes
+        self.mfu = mfu   # achievable fraction of peak compute
+        self.bwu = bwu   # achievable fraction of HBM bandwidth
+        self._pcache = {}
+
+    # ------------------------------------------------------------------
+    def _params(self, cfg: ModelConfig):
+        key = cfg.name
+        if key not in self._pcache:
+            self._pcache[key] = (registry.param_count(cfg),
+                                 registry.active_param_count(cfg))
+        return self._pcache[key]
+
+    def weight_bytes(self, cfg: ModelConfig) -> float:
+        return self._params(cfg)[0] * self.dtype_bytes
+
+    # ------------------------------------------------------------------
+    def decode_latency(self, cfg: ModelConfig, batch: int, ctx: int,
+                       n_tokens: int = 1) -> float:
+        """One forward over `n_tokens` new positions per sequence."""
+        total, active = self._params(cfg)
+        toks = batch * n_tokens
+        flops = 2.0 * active * toks
+        # attention over the KV cache
+        if cfg.num_heads:
+            flops += 2.0 * 2.0 * toks * ctx * cfg.num_heads * cfg.resolved_head_dim
+        mem = (self.weight_bytes(cfg)
+               + batch * ctx * kv_bytes_per_token(cfg, self.dtype_bytes)
+               + toks * cfg.d_model * self.dtype_bytes * 8)
+        chips = max(self.hw.chips, 1)
+        t_compute = flops / (self.hw.peak_flops * self.mfu * chips)
+        t_mem = mem / (self.hw.hbm_bw * self.bwu * chips)
+        return max(t_compute, t_mem) + self.hw.step_overhead
+
+    def prefill_latency(self, cfg: ModelConfig, batch: int, seq: int) -> float:
+        total, active = self._params(cfg)
+        toks = batch * seq
+        flops = 2.0 * active * toks
+        if cfg.num_heads:
+            flops += 2.0 * 2.0 * batch * seq * seq * cfg.num_heads \
+                * cfg.resolved_head_dim / 2.0  # causal half
+        mem = self.weight_bytes(cfg) + toks * cfg.d_model * self.dtype_bytes * 12
+        chips = max(self.hw.chips, 1)
+        t_compute = flops / (self.hw.peak_flops * self.mfu * chips)
+        t_mem = mem / (self.hw.hbm_bw * self.bwu * chips)
+        return max(t_compute, t_mem) + self.hw.step_overhead
+
+    # ------------------------------------------------------------------
+    def ar_step_latency(self, target: ModelConfig, batch: int, ctx: int) -> float:
+        return self.decode_latency(target, batch, ctx, 1)
+
+    def spec_step_latency(self, target: ModelConfig, draft: ModelConfig,
+                          batch: int, ctx: int, gamma: int) -> float:
+        """Chain-draft gamma (+1 sync) steps, then one (gamma+1)-token verify."""
+        t_draft = (gamma + 1) * self.decode_latency(draft, batch, ctx, 1)
+        t_verify = self.decode_latency(target, batch, ctx, gamma + 1)
+        return t_draft + t_verify
+
+    # ------------------------------------------------------------------
+    def offload_latency(self, cfg: ModelConfig) -> float:
+        return self.weight_bytes(cfg) / self.hw.host_link_bw
+
+    def reload_latency(self, cfg: ModelConfig) -> float:
+        return self.weight_bytes(cfg) / self.hw.host_link_bw
+
+    def kv_capacity_tokens(self, target: ModelConfig, draft: ModelConfig | None,
+                           *, reserve_frac: float = 0.1) -> int:
+        """How many KV tokens fit beside the weights."""
+        used = self.weight_bytes(target)
+        if draft is not None:
+            used += self.weight_bytes(draft)
+        avail = self.hw.hbm_bytes * self.hw.chips * (1 - reserve_frac) - used
+        per = max(kv_bytes_per_token(target, self.dtype_bytes), 1)
+        return max(int(avail / per), 0)

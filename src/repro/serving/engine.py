@@ -1,0 +1,177 @@
+"""The Nightjar serving engine: one driver loop over pluggable backends.
+
+The driver couples the four paper components exactly as Figure 4:
+  Scheduler (continuous batching)  ->  Planner (MAB, batch size as context)
+  ->  Execution (AR step | speculative step)  ->  Elastic Memory Manager.
+
+Backends:
+  * SimulatedBackend (simulator.py) — analytical roofline latencies; the
+    paper-scale tier used by the benchmarks.
+  * RealBackend (real_backend.py)  — actual JAX execution of tiny models;
+    used by tests / examples / C_switch profiling.
+
+Both tiers run the SAME scheduler / planner / memory-manager objects — only
+the latency source differs (DESIGN.md §7).
+
+Semantics of one engine step:
+  1. admit arrivals; prefill the newly admitted sequences
+  2. memory manager trigger check (offload/expand or contract/reload)
+  3. gamma <- planner (forced 0 while the draft model is off-device)
+  4. if switching 0 -> gamma>0: draft catch-up re-prefill of delta_max
+     tokens (the C_switch cost, charged to the clock)
+  5. execute the step; commit tokens; observe latency-per-token
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, Sequence as Seq
+
+import numpy as np
+
+from ..core.bandits import Policy
+from .memory_manager import ElasticMemoryManager
+from .request import Metrics, Request, Sequence
+from .scheduler import ContinuousBatchingScheduler
+
+
+class Backend(Protocol):
+    def prefill(self, seqs: List[Sequence], *, with_draft: bool) -> float: ...
+
+    def step(self, seqs: List[Sequence], gamma: int
+             ) -> "StepOutcome": ...
+
+    def draft_catchup(self, seqs: List[Sequence]) -> float: ...
+
+    def release(self, seq: Sequence) -> None: ...
+
+
+@dataclass
+class StepOutcome:
+    n_committed: List[int]   # per sequence
+    latency: float           # seconds
+
+
+class ServingEngine:
+    def __init__(self, backend: Backend, scheduler: ContinuousBatchingScheduler,
+                 policy: Policy, memmgr: Optional[ElasticMemoryManager] = None,
+                 *, gamma_max: int = 5):
+        self.backend = backend
+        self.scheduler = scheduler
+        self.policy = policy
+        self.memmgr = memmgr
+        self.gamma_max = gamma_max
+        self.clock = 0.0
+        self.prev_gamma_effective = 0
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *, max_steps: int = 1_000_000,
+            record_timeline: bool = True) -> Metrics:
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pi = 0
+        m = Metrics()
+        start_clock = self.clock
+        steps = 0
+
+        while (pi < len(pending) or self.scheduler.num_waiting
+               or self.scheduler.num_running):
+            if steps >= max_steps:
+                break
+            steps += 1
+
+            # 1. arrivals up to now
+            while pi < len(pending) and pending[pi].arrival <= self.clock:
+                self.scheduler.add_request(pending[pi])
+                pi += 1
+
+            draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
+
+            admitted = self.scheduler.schedule()
+            if admitted:
+                t = self.backend.prefill(admitted, with_draft=draft_ok)
+                self.clock += t
+                for s in admitted:
+                    s.prefill_done_at = self.clock
+                    if not draft_ok:
+                        s.delta = s.request.prompt_len  # draft never saw it
+
+            if not self.scheduler.running:
+                if pi < len(pending):
+                    self.clock = max(self.clock, pending[pi].arrival)
+                    continue
+                break
+
+            running = list(self.scheduler.running)
+            B = len(running)
+            delta_max = max((s.delta for s in running), default=0)
+
+            # 2. elastic memory triggers
+            if self.memmgr is not None:
+                self.memmgr.step(
+                    self.clock,
+                    spec_disabled=(self.prev_gamma_effective == 0),
+                    waiting=self.scheduler.num_waiting)
+                draft_ok = self.memmgr.can_speculate(self.clock)
+
+            # 3. arm selection
+            if draft_ok:
+                gamma = self.policy.select(B, delta_max=delta_max)
+            else:
+                gamma = 0
+
+            # 4. switching cost: draft catch-up prefill
+            switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
+            if switched_on and any(s.delta > 0 for s in running):
+                t_catch = self.backend.draft_catchup(running)
+                self.clock += t_catch
+                for s in running:
+                    s.delta = 0
+
+            # 5. execute
+            out = self.backend.step(running, gamma)
+            self.clock += out.latency
+            total_committed = int(sum(out.n_committed))
+
+            for s, n in zip(running, out.n_committed):
+                if n <= 0 or s not in self.scheduler.running:
+                    continue  # finished slot or preempted by an earlier commit
+                if s.first_token_at is None:
+                    s.first_token_at = self.clock
+                    m.ttfts.append(self.clock - s.request.arrival)
+                ok = self.scheduler.commit_tokens(s, int(n))
+                if not ok:
+                    continue  # preempted; will re-run from the queue
+                if gamma == 0:
+                    s.delta += int(n)  # draft cache falls behind
+                if s.done:
+                    s.finished_at = self.clock
+                    m.latencies.append(self.clock - s.request.arrival)
+                    self.scheduler.finish(s)
+                    self.backend.release(s)
+
+            m.total_tokens += total_committed
+            if total_committed > 0 and draft_ok:
+                lpt = out.latency / total_committed
+                self.policy.observe(B, gamma, lpt,
+                                    n_accepted=(total_committed - B) / max(B, 1)
+                                    if gamma else None,
+                                    delta_max=delta_max)
+            if record_timeline:
+                m.timeline.append({
+                    "t": self.clock, "B": B, "gamma": gamma,
+                    "tokens": total_committed, "latency": out.latency,
+                    "free_blocks": self.scheduler.bm.num_free,
+                    "draft_resident": draft_ok,
+                    "waiting": self.scheduler.num_waiting,
+                })
+            if gamma != self.prev_gamma_effective:
+                m.switch_count += 1
+            self.prev_gamma_effective = gamma
+
+        m.elapsed = self.clock - start_clock
+        if self.memmgr is not None:
+            m.offload_events = sum(1 for e in self.memmgr.events
+                                   if e.kind == "offload")
+            m.reload_events = sum(1 for e in self.memmgr.events
+                                  if e.kind == "reload")
+        return m

@@ -1,0 +1,218 @@
+"""Paged KV-cache block management with elastic expansion/contraction.
+
+Implements the paper's §6.3 (expansion) and §6.4 (contraction with logical
+remapping) faithfully:
+
+  * ``BlockManager`` — logical bookkeeping: free list, refcounts, per-sequence
+    block tables, K_boundary, migration-plan construction (§6.4 steps 1-2, 4-5).
+  * ``PhysicalKVPool`` — the actual (L, num_blocks, block_size, KH, hd)
+    arrays; ``migrate()`` executes the §6.4 step-3 vectorised data movement
+    through the block-migration kernel (pure-jnp oracle on CPU, Pallas on TPU).
+
+Invariants (property-tested):
+  I1  a block id is either in the free list or referenced by >=1 sequence
+  I2  refcounts equal the number of tables referencing the block
+  I3  after contraction no table references id >= K_boundary
+  I4  migration preserves every sequence's logical KV contents bit-exactly
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class MigrationPlan:
+    """One-to-one mapping b_old -> b_new (old >= K_boundary, new < K_boundary)."""
+
+    src: List[int]
+    dst: List[int]
+
+    def __len__(self):
+        return len(self.src)
+
+
+class BlockManager:
+    """vLLM-style block allocator + Nightjar's elastic boundary."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.block_size = block_size
+        self.base_blocks = num_blocks      # N_orig
+        self.total_blocks = num_blocks     # N_orig or N_scale
+        self.boundary = num_blocks         # K_boundary
+        self.free: List[int] = list(range(num_blocks))
+        self.refcount: Dict[int, int] = {}
+        self.tables: Dict[int, List[int]] = {}   # seq_id -> block ids
+        self.lengths: Dict[int, int] = {}        # seq_id -> token count
+        self.reserved: set = set()                # blocks mid-migration
+
+    # ------------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    def blocks_needed(self, tokens: int) -> int:
+        return max((tokens + self.block_size - 1) // self.block_size, 1)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.num_free >= self.blocks_needed(tokens)
+
+    # ------------------------------------------------------------------
+    def allocate(self, seq_id: int, tokens: int) -> List[int]:
+        need = self.blocks_needed(tokens)
+        if len(self.free) < need:
+            raise OutOfBlocks(f"need {need}, free {len(self.free)}")
+        blocks = [self.free.pop() for _ in range(need)]
+        for b in blocks:
+            self.refcount[b] = self.refcount.get(b, 0) + 1
+        self.tables[seq_id] = blocks
+        self.lengths[seq_id] = tokens
+        return blocks
+
+    def append_tokens(self, seq_id: int, n: int = 1) -> List[int]:
+        """Extend a sequence by n tokens, allocating new blocks on demand."""
+        table = self.tables[seq_id]
+        old = self.lengths[seq_id]
+        new = old + n
+        need = self.blocks_needed(new) - len(table)
+        added = []
+        if need > 0:
+            if len(self.free) < need:
+                raise OutOfBlocks(f"append needs {need}, free {len(self.free)}")
+            for _ in range(need):
+                b = self.free.pop()
+                self.refcount[b] = self.refcount.get(b, 0) + 1
+                table.append(b)
+                added.append(b)
+        self.lengths[seq_id] = new
+        return added
+
+    def release(self, seq_id: int) -> None:
+        for b in self.tables.pop(seq_id, []):
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                del self.refcount[b]
+                if b < self.total_blocks and b not in self.reserved:
+                    self.free.append(b)
+        self.lengths.pop(seq_id, None)
+
+    # ------------------------------------------------------------------
+    # §6.3 expansion: attach [boundary, boundary + extra) to the pool
+    def expand(self, extra_blocks: int) -> Tuple[int, int]:
+        start = self.total_blocks
+        self.total_blocks += extra_blocks
+        # (1) allocatable ids extended; (2) refcounts implicitly zero;
+        # (3) appended to the free queue
+        self.free.extend(range(start, self.total_blocks))
+        return start, self.total_blocks
+
+    # §6.4 steps 1-2: identify evictees + build the migration plan
+    def plan_contraction(self) -> Optional[MigrationPlan]:
+        if self.total_blocks == self.base_blocks:
+            return None
+        evict = sorted(
+            b for t in self.tables.values() for b in t if b >= self.boundary)
+        # preserved-region free slots
+        low_free = [b for b in self.free if b < self.boundary]
+        if len(low_free) < len(evict):
+            return None  # not enough room — §6.4 step 2 verification failed
+        dst = sorted(low_free)[: len(evict)]
+        # remove migration targets from the free list & mark reserved
+        dst_set = set(dst)
+        self.free = [b for b in self.free if b not in dst_set and b < self.boundary]
+        self.reserved |= dst_set
+        return MigrationPlan(src=evict, dst=dst)
+
+    # §6.4 step 4: atomic metadata update & remapping
+    def commit_contraction(self, plan: MigrationPlan) -> None:
+        mapping = dict(zip(plan.src, plan.dst))
+        for seq_id, table in self.tables.items():
+            self.tables[seq_id] = [mapping.get(b, b) for b in table]
+        for old, new in mapping.items():
+            self.refcount[new] = self.refcount.pop(old)
+            self.reserved.discard(new)
+        # §6.4 step 5: trim the allocator index set
+        self.free = [b for b in self.free if b < self.boundary]
+        self.total_blocks = self.base_blocks
+        self.reserved.clear()
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        refs: Dict[int, int] = {}
+        for t in self.tables.values():
+            for b in t:
+                refs[b] = refs.get(b, 0) + 1
+        assert refs == self.refcount, (refs, self.refcount)
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "duplicate free blocks"
+        for b in refs:
+            assert b not in free_set, f"block {b} both free and referenced"
+            assert 0 <= b < self.total_blocks
+        for b in free_set:
+            assert 0 <= b < self.total_blocks
+
+
+class PhysicalKVPool:
+    """Physical paged KV storage for one model (stacked over layers)."""
+
+    def __init__(self, num_layers: int, num_blocks: int, block_size: int,
+                 num_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        self.shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+        self.block_size = block_size
+        self.k = jnp.zeros(self.shape, dtype)
+        self.v = jnp.zeros(self.shape, dtype)
+
+    @property
+    def bytes_per_block(self) -> int:
+        L, _, bs, kh, hd = self.shape
+        return 2 * L * bs * kh * hd * self.k.dtype.itemsize  # k + v
+
+    def grow(self, extra_blocks: int) -> None:
+        L, n, bs, kh, hd = self.shape
+        pad = jnp.zeros((L, extra_blocks, bs, kh, hd), self.k.dtype)
+        self.k = jnp.concatenate([self.k, pad], axis=1)
+        self.v = jnp.concatenate([self.v, pad], axis=1)
+        self.shape = (L, n + extra_blocks, bs, kh, hd)
+
+    def shrink(self, to_blocks: int) -> None:
+        L, n, bs, kh, hd = self.shape
+        self.k = self.k[:, :to_blocks]
+        self.v = self.v[:, :to_blocks]
+        self.shape = (L, to_blocks, bs, kh, hd)
+
+    def write_tokens(self, layer_k, layer_v, block_table, start_pos: int) -> None:
+        """Write contiguous token K/V (L, T, KH, hd) into paged storage."""
+        L, T = layer_k.shape[0], layer_k.shape[1]
+        for t in range(T):
+            pos = start_pos + t
+            blk = block_table[pos // self.block_size]
+            off = pos % self.block_size
+            self.k = self.k.at[:, blk, off].set(layer_k[:, t])
+            self.v = self.v.at[:, blk, off].set(layer_v[:, t])
+
+    def gather_sequence(self, block_table: Sequence[int], length: int):
+        """Return contiguous (L, length, KH, hd) K/V for one sequence."""
+        idx = jnp.asarray(list(block_table), jnp.int32)
+        k = self.k[:, idx].reshape(self.shape[0], -1, *self.shape[3:])[:, :length]
+        v = self.v[:, idx].reshape(self.shape[0], -1, *self.shape[3:])[:, :length]
+        return k, v
+
+    def migrate(self, plan: MigrationPlan, *, use_kernel: bool = True) -> None:
+        """§6.4 step 3: vectorised block migration (kernel-backed)."""
+        if not len(plan):
+            return
+        from ..kernels import block_migration
+        src = jnp.asarray(plan.src, jnp.int32)
+        dst = jnp.asarray(plan.dst, jnp.int32)
+        self.k = block_migration.migrate_blocks(self.k, src, dst,
+                                                use_kernel=use_kernel)
+        self.v = block_migration.migrate_blocks(self.v, src, dst,
+                                                use_kernel=use_kernel)

@@ -1,0 +1,188 @@
+"""Real-execution backend: actual JAX models behind the serving engine.
+
+Slot-based continuous batching over dense caches:
+
+  * caches are allocated once for ``max_batch`` slots x ``max_seq`` positions;
+  * each step gathers the active slots into a compact batch (padded to a
+    power-of-two bucket so the jit cache stays small), runs the jitted
+    AR / speculative step, and scatters the updated slot caches back;
+  * latencies are wall-clock (block_until_ready) — this is what the planner
+    learns from on this tier, and what the C_switch profiler measures.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.spec_decode import make_ar_step, make_spec_step
+from ..models.registry import ModelAPI
+from .engine import StepOutcome
+from .request import Sequence
+
+
+def _gather(cache, idx):
+    def g(x):
+        if x.ndim == 1:
+            return x[idx]
+        return x[:, idx]
+    return jax.tree.map(g, cache)
+
+
+def _scatter(cache, compact, idx, n_real):
+    def s(x, c):
+        if x.ndim == 1:
+            return x.at[idx[:n_real]].set(c[:n_real])
+        return x.at[:, idx[:n_real]].set(c[:, :n_real])
+    return jax.tree.map(s, cache, compact)
+
+
+def _bucket(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class RealBackend:
+    def __init__(self, target: ModelAPI, draft: ModelAPI, *, max_batch: int = 8,
+                 max_seq: int = 256, seed: int = 0, sampling: str = "greedy",
+                 temperature: float = 1.0):
+        self.target = target
+        self.draft = draft
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.sampling = sampling
+        self.key = jax.random.PRNGKey(seed)
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+        self.tparams = target.init(k1)
+        self.dparams = draft.init(k2)
+        self.dparams_host: Optional[dict] = None  # offloaded copy
+
+        self.tcache = target.init_cache(max_batch, max_seq)
+        self.dcache = draft.init_cache(max_batch, max_seq)
+        self.last_token = np.zeros(max_batch, np.int32)
+        self.tokens_out: Dict[int, List[int]] = {}
+        self.slot_of: Dict[int, int] = {}
+        self._free_slots = list(range(max_batch))[::-1]
+
+        self._spec = make_spec_step(target, draft, sampling=sampling,
+                                    temperature=temperature)
+        self._ar = make_ar_step(target, sampling=sampling,
+                                temperature=temperature)
+        self._spec_jit = jax.jit(self._spec, static_argnames=("gamma",))
+        self._ar_jit = jax.jit(self._ar)
+        self._prefill_t = jax.jit(lambda p, b: target.prefill(p, b, max_seq))
+        self._prefill_d = jax.jit(lambda p, b: draft.prefill(p, b, max_seq))
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def offload_draft(self) -> None:
+        self.dparams_host = jax.tree.map(np.asarray, self.dparams)
+        self.dparams = None
+
+    def reload_draft(self) -> None:
+        assert self.dparams_host is not None
+        self.dparams = jax.tree.map(jnp.asarray, self.dparams_host)
+
+    @property
+    def draft_resident(self) -> bool:
+        return self.dparams is not None
+
+    # ------------------------------------------------------------------
+    def prefill(self, seqs: List[Sequence], *, with_draft: bool) -> float:
+        t0 = time.perf_counter()
+        for s in seqs:
+            slot = self._free_slots.pop()
+            self.slot_of[s.req_id] = slot
+            s.slot = slot
+            toks = np.asarray(s.request.prompt_tokens, np.int32)[None, :]
+            batch = {"tokens": jnp.asarray(toks)}
+            logits, cache1 = self._prefill_t(self.tparams, batch)
+            logits.block_until_ready()
+            self.tcache = _scatter(self.tcache, cache1, np.array([slot]), 1)
+            nxt = int(np.argmax(np.asarray(logits[0, 0])))
+            self.last_token[slot] = nxt
+            self.tokens_out[s.req_id] = [nxt]
+            s.generated = 0  # first token counted at the first decode commit
+            if with_draft and self.draft_resident:
+                _, dcache1 = self._prefill_d(self.dparams, batch)
+                self.dcache = _scatter(self.dcache, dcache1, np.array([slot]), 1)
+                s.delta = 0
+            else:
+                s.delta = s.request.prompt_len
+        return time.perf_counter() - t0
+
+    def draft_catchup(self, seqs: List[Sequence]) -> float:
+        """Re-prefill the draft cache for sequences whose draft state lags
+        (the physical C_switch cost)."""
+        if not self.draft_resident:
+            return 0.0
+        t0 = time.perf_counter()
+        for s in seqs:
+            if s.delta <= 0:
+                continue
+            slot = self.slot_of[s.req_id]
+            ctx = (list(s.request.prompt_tokens)
+                   + self.tokens_out[s.req_id][:-1])
+            batch = {"tokens": jnp.asarray(np.asarray(ctx, np.int32)[None, :])}
+            _, dcache1 = self._prefill_d(self.dparams, batch)
+            jax.block_until_ready(dcache1)
+            self.dcache = _scatter(self.dcache, dcache1, np.array([slot]), 1)
+            s.delta = 0
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def step(self, seqs: List[Sequence], gamma: int) -> StepOutcome:
+        n = len(seqs)
+        bucket = min(_bucket(n), self.max_batch)
+        slots = np.array([self.slot_of[s.req_id] for s in seqs], np.int32)
+        idx = np.concatenate([slots, np.zeros(bucket - n, np.int32)])
+
+        tc = _gather(self.tcache, idx)
+        last = jnp.asarray(self.last_token[idx])
+
+        t0 = time.perf_counter()
+        if gamma == 0:
+            nxt, tc_new = self._ar_jit(self._next_key(), self.tparams, tc, last)
+            jax.block_until_ready(nxt)
+            latency = time.perf_counter() - t0
+            self.tcache = _scatter(self.tcache, tc_new, idx, n)
+            nxt_np = np.asarray(nxt)
+            n_committed = []
+            for i, s in enumerate(seqs):
+                self.tokens_out[s.req_id].append(int(nxt_np[i]))
+                self.last_token[slots[i]] = int(nxt_np[i])
+                n_committed.append(1)
+            return StepOutcome(n_committed=n_committed, latency=latency)
+
+        dc = _gather(self.dcache, idx)
+        res = self._spec_jit(self._next_key(), self.tparams, self.dparams,
+                             tc, dc, last, gamma=gamma)
+        jax.block_until_ready(res.n_accepted)
+        latency = time.perf_counter() - t0
+        self.tcache = _scatter(self.tcache, res.tcache, idx, n)
+        self.dcache = _scatter(self.dcache, res.dcache, idx, n)
+        toks = np.asarray(res.tokens)
+        n_acc = np.asarray(res.n_accepted)
+        last_np = np.asarray(res.last_token)
+        n_committed = []
+        for i, s in enumerate(seqs):
+            committed = [int(t) for t in toks[i] if t >= 0]
+            self.tokens_out[s.req_id].extend(committed)
+            self.last_token[slots[i]] = int(last_np[i])
+            n_committed.append(int(n_acc[i]) + 1)
+        return StepOutcome(n_committed=n_committed, latency=latency)
+
+    # ------------------------------------------------------------------
+    def release(self, seq: Sequence) -> None:
+        slot = self.slot_of.pop(seq.req_id, None)
+        if slot is not None:
+            self._free_slots.append(slot)
+
+    def output_tokens(self, req_id: int) -> List[int]:
+        return self.tokens_out.get(req_id, [])

@@ -1,0 +1,79 @@
+"""Request and sequence lifecycle for the serving engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class Request:
+    req_id: int
+    arrival: float            # seconds
+    prompt_len: int
+    output_len: int
+    alpha: float = 0.8        # per-token draft-acceptance quality (sim tier)
+    prompt_tokens: Optional[List[int]] = None  # real tier
+
+
+@dataclass
+class Sequence:
+    """A request admitted to the running batch."""
+
+    request: Request
+    slot: int = -1
+    generated: int = 0
+    delta: int = 0            # draft-model skip length (tokens missing from
+                              # the draft KV cache) — drives C_switch lookup
+    prefill_done_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def req_id(self) -> int:
+        return self.request.req_id
+
+    @property
+    def context_len(self) -> int:
+        return self.request.prompt_len + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.request.output_len
+
+
+@dataclass
+class Metrics:
+    """Aggregated per-run serving metrics."""
+
+    total_tokens: int = 0
+    elapsed: float = 0.0
+    latencies: List[float] = field(default_factory=list)   # per-request e2e
+    ttfts: List[float] = field(default_factory=list)
+    timeline: List[dict] = field(default_factory=list)     # per-step records
+    switch_count: int = 0
+    offload_events: int = 0
+    reload_events: int = 0
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / self.elapsed if self.elapsed else 0.0
+
+    @property
+    def mean_latency(self) -> float:
+        return sum(self.latencies) / len(self.latencies) if self.latencies else 0.0
+
+    @property
+    def mean_ttft(self) -> float:
+        return sum(self.ttfts) / len(self.ttfts) if self.ttfts else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "throughput_tok_s": round(self.throughput, 2),
+            "mean_latency_s": round(self.mean_latency, 4),
+            "mean_ttft_s": round(self.mean_ttft, 4),
+            "total_tokens": self.total_tokens,
+            "elapsed_s": round(self.elapsed, 3),
+            "switches": self.switch_count,
+            "offloads": self.offload_events,
+            "reloads": self.reload_events,
+        }

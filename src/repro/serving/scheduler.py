@@ -1,0 +1,98 @@
+"""Continuous batching scheduler (Orca-style iteration-level scheduling).
+
+Admission is gated on paged-KV block availability through the
+:class:`BlockManager`; finished sequences release their blocks at every
+step; over-commit is resolved by preempt-and-recompute of the youngest
+sequence (vLLM's recompute policy).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from .kv_cache import BlockManager, OutOfBlocks
+from .request import Request, Sequence
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, block_manager: BlockManager, *, max_batch: int = 64,
+                 watermark_frac: float = 0.02):
+        self.bm = block_manager
+        self.max_batch = max_batch
+        self.watermark_frac = watermark_frac
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Sequence] = []
+        self._next_seq = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def num_running(self) -> int:
+        return len(self.running)
+
+    def add_request(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------------
+    def schedule(self) -> List[Sequence]:
+        """Admit waiting requests while blocks + batch slots allow."""
+        admitted: List[Sequence] = []
+        watermark = int(self.bm.total_blocks * self.watermark_frac)
+        while (self.waiting and len(self.running) < self.max_batch):
+            req = self.waiting[0]
+            need = self.bm.blocks_needed(req.prompt_len + 1)
+            if self.bm.num_free - need < watermark:
+                break
+            self.waiting.popleft()
+            seq = Sequence(request=req)
+            self.bm.allocate(self._seq_key(seq), req.prompt_len + 1)
+            self.running.append(seq)
+            admitted.append(seq)
+        return admitted
+
+    def _seq_key(self, seq: Sequence) -> int:
+        return seq.req_id
+
+    # ------------------------------------------------------------------
+    def commit_tokens(self, seq: Sequence, n: int) -> bool:
+        """Record n committed tokens; returns False if the sequence had to be
+        preempted (blocks exhausted)."""
+        if self._seq_key(seq) not in self.bm.tables:
+            return False  # already preempted this step
+        try:
+            self.bm.append_tokens(self._seq_key(seq), n)
+            seq.generated += n
+            return True
+        except OutOfBlocks:
+            self._preempt_youngest(exclude=seq)
+            try:
+                self.bm.append_tokens(self._seq_key(seq), n)
+                seq.generated += n
+                return True
+            except OutOfBlocks:
+                self._preempt(seq)
+                return False
+
+    def _preempt_youngest(self, exclude: Optional[Sequence] = None) -> None:
+        candidates = [s for s in self.running if s is not exclude]
+        if not candidates:
+            return
+        victim = max(candidates, key=lambda s: s.request.arrival)
+        self._preempt(victim)
+
+    def _preempt(self, seq: Sequence) -> None:
+        """Recompute policy: release blocks, requeue at the front."""
+        self.bm.release(self._seq_key(seq))
+        if seq in self.running:
+            self.running.remove(seq)
+        req = seq.request
+        # recompute from scratch: prompt + already-generated tokens count
+        self.waiting.appendleft(req)
+
+    def finish(self, seq: Sequence) -> None:
+        self.bm.release(self._seq_key(seq))
+        if seq in self.running:
+            self.running.remove(seq)

@@ -1,0 +1,112 @@
+"""Workload generation: arrival processes + dataset length distributions.
+
+The paper's datasets (ShareGPT / Alpaca / SpecBench) and the Azure trace are
+not available offline; we synthesise length distributions matched to the
+shapes reported in Figure 8 (lognormal fits) and a dynamic request-rate trace
+shaped like Figure 10.  Acceptance quality per request is drawn from a Beta
+distribution (harder requests accept fewer draft tokens).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from .request import Request
+
+# (prompt mu, prompt sigma, output mu, output sigma, alpha_a, alpha_b)
+# lognormal parameters matched to Figure 8's reported input/output shapes
+DATASETS = {
+    # chat: long-ish prompts, medium outputs, moderate acceptance
+    "sharegpt": dict(p_mu=5.4, p_sigma=0.9, o_mu=5.2, o_sigma=0.8,
+                     a_a=6.0, a_b=3.0),
+    # instruction: short prompts, short outputs
+    "alpaca": dict(p_mu=3.6, p_sigma=0.7, o_mu=4.2, o_sigma=0.8,
+                   a_a=5.0, a_b=3.0),
+    # mixed six-task benchmark: broad spread, hardest for the draft
+    "specbench": dict(p_mu=5.0, p_sigma=1.2, o_mu=5.0, o_sigma=1.0,
+                      a_a=4.0, a_b=3.0),
+}
+
+
+def _lengths(rng, mu, sigma, n, lo, hi):
+    x = rng.lognormal(mu, sigma, size=n)
+    return np.clip(x, lo, hi).astype(int)
+
+
+def poisson_requests(rate_qps: float, n: int, *, dataset: str = "sharegpt",
+                     seed: int = 0, max_prompt: int = 2048,
+                     max_output: int = 1024) -> List[Request]:
+    """Poisson arrivals at a static rate."""
+    rng = np.random.default_rng(seed)
+    d = DATASETS[dataset]
+    gaps = rng.exponential(1.0 / rate_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    prompts = _lengths(rng, d["p_mu"], d["p_sigma"], n, 4, max_prompt)
+    outputs = _lengths(rng, d["o_mu"], d["o_sigma"], n, 4, max_output)
+    alphas = rng.beta(d["a_a"], d["a_b"], size=n)
+    return [Request(i, float(arrivals[i]), int(prompts[i]), int(outputs[i]),
+                    float(alphas[i])) for i in range(n)]
+
+
+def dynamic_rate_trace(duration_s: float = 120.0, *, low: float = 2.0,
+                       high: float = 30.0, period_s: float = 40.0,
+                       seed: int = 0) -> "RateTrace":
+    """Figure-10-like trace: alternating low/high phases with ramps."""
+    rng = np.random.default_rng(seed)
+    ts, rates = [], []
+    t = 0.0
+    while t < duration_s:
+        phase = (t // period_s) % 2
+        base = low if phase == 0 else high
+        jitter = rng.uniform(0.8, 1.2)
+        ts.append(t)
+        rates.append(base * jitter)
+        t += period_s / 8
+    return RateTrace(np.asarray(ts), np.asarray(rates))
+
+
+@dataclass
+class RateTrace:
+    times: np.ndarray
+    rates: np.ndarray
+
+    def rate_at(self, t: float) -> float:
+        i = int(np.searchsorted(self.times, t, side="right")) - 1
+        return float(self.rates[max(i, 0)])
+
+    def sample_requests(self, n: int, *, dataset: str = "sharegpt",
+                        seed: int = 0, max_prompt: int = 2048,
+                        max_output: int = 1024) -> List[Request]:
+        """Non-homogeneous Poisson via thinning."""
+        rng = np.random.default_rng(seed)
+        d = DATASETS[dataset]
+        rmax = float(self.rates.max())
+        arrivals: List[float] = []
+        t = 0.0
+        while len(arrivals) < n:
+            t += rng.exponential(1.0 / rmax)
+            if rng.uniform() < self.rate_at(t) / rmax:
+                arrivals.append(t)
+        prompts = _lengths(rng, d["p_mu"], d["p_sigma"], n, 4, max_prompt)
+        outputs = _lengths(rng, d["o_mu"], d["o_sigma"], n, 4, max_output)
+        alphas = rng.beta(d["a_a"], d["a_b"], size=n)
+        return [Request(i, arrivals[i], int(prompts[i]), int(outputs[i]),
+                        float(alphas[i])) for i in range(n)]
+
+
+def tiny_requests(n: int, *, rate_qps: float = 100.0, prompt_len: int = 16,
+                  output_len: int = 8, seed: int = 0, vocab: int = 256,
+                  alpha: float = 0.9) -> List[Request]:
+    """Small deterministic workload for the real-execution tier / tests."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    out = []
+    for i in range(n):
+        toks = rng.integers(0, vocab, size=prompt_len).tolist()
+        out.append(Request(i, float(arrivals[i]), prompt_len, output_len,
+                           alpha, prompt_tokens=toks))
+    return out

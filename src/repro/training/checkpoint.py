@@ -1,0 +1,94 @@
+"""Checkpointing: atomic, restart-safe pytree save/restore.
+
+Layout: <dir>/step_<N>/
+           arrays.npz      — flattened leaves
+           manifest.json   — treedef + dtypes + metadata
+        <dir>/LATEST        — committed pointer (atomic rename)
+
+Multi-host note: on a real cluster each host writes its process-local shards
+(jax.experimental.multihost_utils); here the single-process path saves the
+addressable arrays.  The commit protocol (write-all, then atomically move the
+LATEST pointer) is the part that matters for fault tolerance: a crash
+mid-write never corrupts the last valid checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, str(treedef)
+
+
+def save(directory: str, params, opt, meta: dict) -> str:
+    os.makedirs(directory, exist_ok=True)
+    step = meta.get("step", 0)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    state = {"params": params, "opt": opt}
+    leaves, treedef = jax.tree.flatten(state)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind == "V":  # bfloat16: npz cannot round-trip it
+            a = a.view(np.uint16)
+        arrays[f"leaf_{i}"] = a
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"meta": meta, "num_leaves": len(leaves),
+                   "dtypes": dtypes}, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic pointer commit
+    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(f"step_{step}")
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def restore_latest(directory: str, *, template: Optional[Any] = None
+                   ) -> Optional[Tuple[Any, Any, dict]]:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    path = os.path.join(directory, name)
+    if not os.path.isdir(path):
+        return None
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    import ml_dtypes
+    leaves = []
+    for i in range(manifest["num_leaves"]):
+        a = data[f"leaf_{i}"]
+        want = manifest.get("dtypes", [None] * (i + 1))[i]
+        if want == "bfloat16":
+            a = a.view(ml_dtypes.bfloat16)
+        leaves.append(a)
+
+    if template is not None:
+        treedef = jax.tree.structure(template)
+    else:
+        # reconstruct structure by saving a probe is impossible without the
+        # template; training resaves with the same model so we rebuild lazily
+        raise ValueError("restore_latest requires template=... for structure")
+    state = jax.tree.unflatten(treedef, [jax.numpy.asarray(x) for x in leaves])
+    return state["params"], state["opt"], manifest["meta"]

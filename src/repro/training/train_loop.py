@@ -1,0 +1,98 @@
+"""Jit-able train step factory + fault-tolerant training loop.
+
+make_train_step(cfg) builds `(params, opt, batch) -> (metrics, params, opt)`
+with donated parameter/optimizer buffers — this is the function the dry-run
+lowers on the production mesh for every `train_4k` cell.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import get_model
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_step(cfg, *, base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, accum: int = 1,
+                    accum_dtype=jnp.float32):
+    api = get_model(cfg)
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        loss, _ = api.loss(params, batch)
+        return loss
+
+    def train_step(params, opt: AdamWState, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # gradient accumulation over `accum` microbatches (leading axis)
+            def micro(carry, mb):
+                acc_loss, acc_grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc_loss + l,
+                        jax.tree.map(lambda a, b: (a + b.astype(a.dtype)),
+                                     acc_grads, g)), None
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.float32(0.0), zeros), batch)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        params, opt, gnorm = adamw_update(grads, opt, params, lr_fn=lr_fn)
+        return {"loss": loss, "grad_norm": gnorm}, params, opt
+
+    return api, train_step
+
+
+def train(cfg, *, steps: int, batch_iter, rng=None,
+          checkpoint_dir: Optional[str] = None, checkpoint_every: int = 50,
+          resume: bool = True, hooks: Optional[list] = None,
+          base_lr: float = 1e-3, warmup: int = 10) -> Dict[str, Any]:
+    """Single-host training loop with checkpoint/restart fault tolerance."""
+    from . import checkpoint as ckpt
+
+    api, train_step = make_train_step(cfg, base_lr=base_lr, warmup=warmup,
+                                      total_steps=max(steps, 100))
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    start_step = 0
+    params = opt = None
+    if checkpoint_dir and resume:
+        p_t = jax.eval_shape(api.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        o_t = jax.eval_shape(adamw_init, p_t)
+        restored = ckpt.restore_latest(checkpoint_dir,
+                                       template={"params": p_t, "opt": o_t})
+        if restored is not None:
+            params, opt, meta = restored
+            start_step = int(meta["step"])
+
+    if params is None:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        params = api.init(rng)
+        opt = adamw_init(params)
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, steps):
+        batch = batch_iter(step)
+        metrics, params, opt = step_fn(params, opt, batch)
+        if hooks:
+            for h in hooks:
+                h(step, metrics)
+        if step % 10 == 0 or step == steps - 1:
+            history.append({"step": step,
+                            "loss": float(metrics["loss"]),
+                            "grad_norm": float(metrics["grad_norm"])})
+        if checkpoint_dir and (step + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, params, opt, {"step": step + 1})
+    elapsed = time.perf_counter() - t0
+    if checkpoint_dir:
+        ckpt.save(checkpoint_dir, params, opt, {"step": steps})
+    return {"history": history, "params": params, "opt": opt,
+            "elapsed_s": elapsed, "final_loss": history[-1]["loss"]}

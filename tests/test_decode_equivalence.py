@@ -1,0 +1,77 @@
+"""Serving-correctness invariant: prefill + step-by-step decode must equal
+the full-sequence forward, per model family (fp32, atol 1e-4)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import registry
+from repro.models.registry import _unembed_table
+
+FAMS = ["deepseek-7b", "qwen3-14b", "grok-1-314b", "paligemma-3b",
+        "mamba2-780m", "zamba2-1.2b", "whisper-medium", "gemma-7b"]
+
+
+def _setup(arch, S=16):
+    cfg = configs.reduced(configs.get_config(arch)).replace(dtype="float32")
+    api = registry.get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = api.init(rng)
+    B = 2
+    tok = jax.random.randint(rng, (B, S + 4), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["enc_emb"] = jax.random.normal(rng, (B, 12, cfg.d_model),
+                                             jnp.float32)
+    if cfg.family == "vlm":
+        extra["image_emb"] = jax.random.normal(
+            rng, (B, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    return cfg, api, params, tok, extra
+
+
+def _ref_logits(cfg, api, params, tokens, extra):
+    h = api.forward(params, {"tokens": tokens, **extra})
+    table = _unembed_table(cfg, params)
+    logits = jnp.einsum("bsd,vd->bsv", h, table,
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_decode_matches_forward(arch):
+    S = 16
+    cfg, api, params, tok, extra = _setup(arch, S)
+    off = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    max_len = off + S + 8
+
+    ref = _ref_logits(cfg, api, params, tok[:, :S + 3], extra)
+
+    logits_p, cache = api.prefill(params, {"tokens": tok[:, :S], **extra},
+                                  max_len)
+    outs = [logits_p[:, 0]]
+    for t in range(S, S + 3):
+        lg, cache = api.decode_step(params, cache, tok[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs[:-1] + [outs[-1]], axis=1)
+    want = ref[:, off + S - 1: off + S + 3]
+    assert jnp.max(jnp.abs(dec - want)) < 1e-3
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_multitoken_extension_matches(arch):
+    """decode_step with T=gamma+1 (the speculative verify path)."""
+    S = 16
+    cfg, api, params, tok, extra = _setup(arch, S)
+    off = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    max_len = off + S + 8
+
+    ref = _ref_logits(cfg, api, params, tok[:, :S + 3], extra)
+    _, cache = api.prefill(params, {"tokens": tok[:, :S], **extra}, max_len)
+    lg3, cache = api.decode_step(params, cache, tok[:, S:S + 3])
+    want = ref[:, off + S: off + S + 3]
+    assert jnp.max(jnp.abs(lg3 - want)) < 1e-3
+    # SSM families must emit rollback checkpoints on multi-token extension
+    if cfg.family in ("ssm", "hybrid"):
+        assert "checkpoints" in cache

@@ -1,0 +1,155 @@
+"""Nightjar planner (Algorithm 1) invariants + regret behaviour."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.bandits import AdaBinGreedy, DSD, make_policy
+from repro.core.cswitch import CSwitchTable
+from repro.core.planner import NightjarPlanner
+
+
+def run_planner(planner, latency_fn, T, B=8, seed=0):
+    rng = np.random.default_rng(seed)
+    picks = []
+    for t in range(T):
+        g = planner.select(B)
+        lat = latency_fn(g) + rng.normal(0, 0.001)
+        planner.observe(B, g, max(lat, 1e-6))
+        picks.append(g)
+    return picks
+
+
+def test_bin_locking():
+    """The arm may only change at bin boundaries."""
+    pl = NightjarPlanner(5, seed=1)
+    B = 4
+    changes_inside_bin = 0
+    prev = None
+    for t in range(2000):
+        st = pl.states.get(pl.bucket(B))
+        at_bin_start = st is None or st.tau == 1
+        g = pl.select(B)
+        if prev is not None and g != prev and not at_bin_start:
+            changes_inside_bin += 1
+        prev = g
+        pl.observe(B, g, 0.01)
+    assert changes_inside_bin == 0
+
+
+def test_converges_to_best_arm():
+    """Stationary latencies: exploitation converges to the argmin arm."""
+    pl = NightjarPlanner(5, seed=0)
+    lat = {0: 0.030, 1: 0.022, 2: 0.017, 3: 0.015, 4: 0.019, 5: 0.024}
+    picks = run_planner(pl, lambda g: lat[g], 6000)
+    tail = picks[-1500:]
+    frac_best = sum(1 for g in tail if g == 3) / len(tail)
+    assert frac_best > 0.5, frac_best
+
+
+def test_switch_cost_discourages_reenable():
+    """With a huge C_switch, the planner avoids 0 -> gamma>0 transitions that
+    a switch-blind planner would take."""
+    table = CSwitchTable.constant(10.0)  # enormous
+    pl = NightjarPlanner(3, table, seed=0)
+    # gamma=0 slightly worse than gamma=2 — but switching costs 10s
+    lat = {0: 0.020, 1: 0.019, 2: 0.018, 3: 0.019}
+    run_planner(pl, lambda g: lat[g], 800)
+    # eq4 from prev_gamma=0 must keep 0 (10/g penalty dwarfs 2ms gain)
+    pl.prev_gamma = 0
+    assert pl._eq4(pl.bucket(8), 128, 8) == 0
+    # switch-blind ablation prefers 2
+    ab = AdaBinGreedy(3, seed=0)
+    run_planner(ab, lambda g: lat[g], 800)
+    assert ab._eq4(ab.bucket(8), 128, 8) == 2
+
+
+def test_per_batch_size_contexts_independent():
+    pl = NightjarPlanner(3, seed=0)
+    # B=2: speculation great; B=64: speculation terrible
+    for t in range(3000):
+        for B, lat in ((2, {0: 0.03, 1: 0.02, 2: 0.012, 3: 0.010}),
+                       (64, {0: 0.010, 1: 0.02, 2: 0.03, 3: 0.04})):
+            g = pl.select(B)
+            pl.observe(B, g, lat[g])
+    assert pl._eq4(pl.bucket(2), 0, 2) == 3
+    # prev_gamma currently 3 => no switch penalty for B=64 exploitation
+    assert pl._eq4(pl.bucket(64), 0, 64) == 0
+
+
+def test_switch_count_sublinear():
+    """Bin locking bounds switches to O(sqrt(T))."""
+    pl = NightjarPlanner(4, seed=3)
+    rng = np.random.default_rng(0)
+    T = 20_000
+    for t in range(T):
+        g = pl.select(8)
+        pl.observe(8, g, 0.02 + 0.001 * abs(g - 2) + rng.normal(0, 1e-4))
+    # generous constant: c*sqrt(T)*log(T)
+    assert pl.switch_count < 10 * math.sqrt(T) * math.log(T), pl.switch_count
+
+
+def test_regret_sublinear():
+    """Cumulative regret grows sublinearly (R(2T)/R(T) << 2)."""
+    def regret_at(T):
+        pl = NightjarPlanner(3, seed=5)
+        lat = {0: 0.03, 1: 0.022, 2: 0.015, 3: 0.02}
+        best = min(lat.values())
+        rng = np.random.default_rng(7)
+        R = 0.0
+        for t in range(T):
+            g = pl.select(4)
+            obs = lat[g] + rng.normal(0, 0.002)
+            pl.observe(4, g, max(obs, 1e-6))
+            R += lat[g] - best
+        return R
+
+    r1, r2 = regret_at(4000), regret_at(16_000)
+    assert r2 / r1 < 3.0, (r1, r2)  # 4x steps -> ~2x regret for sqrt(T)
+
+
+def test_planner_state_roundtrip():
+    """Fault tolerance: serialised planner resumes with identical behaviour."""
+    import json
+    pl = NightjarPlanner(4, seed=9)
+    run_planner(pl, lambda g: 0.02 + 0.001 * g, 500)
+    blob = json.dumps(pl.state_dict())
+
+    pl2 = NightjarPlanner(4, seed=9)
+    pl2.load_state_dict(json.loads(blob))
+    seq1 = [pl.select(8) for _ in range(50)]
+    seq2 = [pl2.select(8) for _ in range(50)]
+    assert seq1 == seq2
+
+
+def test_dsd_deadlock_reproduced():
+    """DSD stops updating acceptance once it selects gamma=0 — the paper's
+    motivating vulnerability (§9.1)."""
+    dsd = DSD(3, ema=0.5)
+    # phase 1: drafts are terrible (0 accepted) and spec steps are slow
+    reached_zero = False
+    for _ in range(300):
+        g = dsd.select(8)
+        dsd.observe(8, g, 0.05 if g else 0.02,
+                    n_accepted=0 if g else None)
+        if g == 0:
+            reached_zero = True
+            break
+    assert reached_zero, "DSD should disable speculation under bad drafts"
+    a_before = dsd.alpha
+    # phase 2: the ENVIRONMENT improves (drafts would now be perfect), but
+    # DSD can never observe it — gamma=0 collects no acceptance data
+    for _ in range(500):
+        g = dsd.select(8)
+        assert g == 0  # stuck: the deadlock
+        dsd.observe(8, g, 0.02, n_accepted=None)
+    assert dsd.alpha == a_before  # never recovers
+
+
+def test_exploration_probability_decays():
+    pl = NightjarPlanner(3, seed=11)
+    run_planner(pl, lambda g: 0.02, 5000)
+    st = pl.states[pl.bucket(8)]
+    assert st.j >= 3  # blocks grew
+    assert st.H == 2.0 ** (st.j - 1)

@@ -1,0 +1,185 @@
+"""Speculative decoding + serving engine integration tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.bandits import make_policy
+from repro.core.spec_decode import make_ar_step, make_spec_step
+from repro.models import registry
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import BlockManager
+from repro.serving.memory_manager import ElasticMemoryManager
+from repro.serving.real_backend import RealBackend
+from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.simulator import SimConfig, build_sim_engine
+from repro.serving.workload import poisson_requests, tiny_requests
+
+
+def _apis(arch):
+    cfg = configs.reduced(configs.get_config(arch)).replace(dtype="float32")
+    dcfg = configs.reduced(configs.get_draft_config(arch)).replace(
+        dtype="float32")
+    return registry.get_model(cfg), registry.get_model(dcfg)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mamba2-780m"])
+def test_spec_step_greedy_equals_ar(arch):
+    """Greedy speculative decoding must emit exactly the AR greedy sequence,
+    for attention AND ssm targets (state-checkpoint rollback)."""
+    target, draft = _apis(arch)
+    rng = jax.random.PRNGKey(0)
+    tparams = target.init(rng)
+    dparams = draft.init(jax.random.PRNGKey(1))
+    B, S, steps, gamma = 2, 8, 6, 3
+    toks = jax.random.randint(rng, (B, S), 0, target.cfg.vocab_size)
+    max_len = S + steps * (gamma + 1) + 4
+
+    # AR reference
+    _, tc = target.prefill(tparams, {"tokens": toks}, max_len)
+    logits0, _ = target.prefill(tparams, {"tokens": toks}, max_len)
+    last = jnp.argmax(logits0[:, 0], -1)
+    ar = make_ar_step(target)
+    ar_out = [last]
+    tc_ar = tc
+    for _ in range(steps * (gamma + 1)):
+        last, tc_ar = ar(rng, tparams, tc_ar, last)
+        ar_out.append(last)
+    ar_seq = np.stack([np.asarray(t) for t in ar_out], 1)
+
+    # speculative
+    spec = make_spec_step(target, draft)
+    _, tc2 = target.prefill(tparams, {"tokens": toks}, max_len)
+    _, dc2 = draft.prefill(dparams, {"tokens": toks}, max_len)
+    last2 = jnp.argmax(logits0[:, 0], -1)
+    out = [np.asarray(last2)[:, None]]
+    total = np.zeros(B, int)
+    while total.min() < steps * (gamma + 1) - (gamma + 1):
+        res = spec(rng, tparams, dparams, tc2, dc2, last2, gamma=gamma)
+        tc2, dc2, last2 = res.tcache, res.dcache, res.last_token
+        toks_np = np.asarray(res.tokens)
+        out.append(np.where(toks_np >= 0, toks_np, -1))
+        total += np.asarray(res.n_committed)
+
+    # flatten committed streams and compare prefixes
+    for b in range(B):
+        spec_stream = [int(out[0][b, 0])]
+        for chunk in out[1:]:
+            spec_stream.extend(int(t) for t in chunk[b] if t >= 0)
+        n = min(len(spec_stream), ar_seq.shape[1])
+        assert spec_stream[:n] == list(ar_seq[b, :n]), f"seq {b} diverged"
+
+
+def test_spec_caches_stay_synced():
+    target, draft = _apis("deepseek-7b")
+    tparams = target.init(jax.random.PRNGKey(0))
+    dparams = draft.init(jax.random.PRNGKey(1))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              target.cfg.vocab_size)
+    lg, tc = target.prefill(tparams, {"tokens": toks}, 64)
+    _, dc = draft.prefill(dparams, {"tokens": toks}, 64)
+    last = jnp.argmax(lg[:, 0], -1)
+    spec = make_spec_step(target, draft)
+    for i in range(4):
+        res = spec(jax.random.PRNGKey(i), tparams, dparams, tc, dc, last,
+                   gamma=2)
+        tc, dc, last = res.tcache, res.dcache, res.last_token
+        np.testing.assert_array_equal(np.asarray(tc["length"]),
+                                      np.asarray(dc["length"]))
+
+
+def test_engine_lossless_across_policies():
+    """End-to-end: greedy token streams identical under AR / fixed-gamma /
+    Nightjar scheduling."""
+    target, draft = _apis("granite-moe-1b-a400m")
+    streams = {}
+    for pol in ["ar", "fixed-2", "nightjar"]:
+        be = RealBackend(target, draft, max_batch=4, max_seq=96, seed=0)
+        bm = BlockManager(256, block_size=8)
+        sched = ContinuousBatchingScheduler(bm, max_batch=4)
+        eng = ServingEngine(be, sched, make_policy(pol, 3, seed=0), None,
+                            gamma_max=3)
+        reqs = tiny_requests(4, rate_qps=1e6, prompt_len=10, output_len=8,
+                             vocab=target.cfg.vocab_size, seed=5)
+        eng.run(reqs, max_steps=500)
+        streams[pol] = {r.req_id: be.output_tokens(r.req_id)[:9]
+                        for r in reqs}
+    assert streams["ar"] == streams["fixed-2"] == streams["nightjar"]
+
+
+def test_sim_crossover_exists():
+    """Cost model reproduces Figure 1/2: SD beats AR at B=1, loses at B=256."""
+    from repro.serving.costmodel import RooflineCostModel, RTX_4090
+    t = configs.get_config("paper-7b")
+    d = configs.get_draft_config("paper-7b")
+    cm = RooflineCostModel(RTX_4090)
+    exp_tokens = 2.5  # E[committed] per seq at alpha~0.65, gamma=3
+    lo = (exp_tokens / cm.spec_step_latency(t, d, 1, 512, 3)) / \
+         (1.0 / cm.ar_step_latency(t, 1, 512))
+    hi = (exp_tokens / cm.spec_step_latency(t, d, 256, 512, 3)) / \
+         (1.0 / cm.ar_step_latency(t, 256, 512))
+    assert lo > 1.2, lo     # memory-bound regime: SD wins
+    assert hi < 1.0, hi     # compute-bound regime: SD loses
+
+
+def test_sim_nightjar_tracks_best_arm():
+    """Nightjar ends within 10% of the better of (AR, SD) at both load
+    extremes — the paper's core claim, on the analytical tier."""
+    from repro.serving.costmodel import RTX_4090
+    t = configs.get_config("paper-7b")
+    d = configs.get_draft_config("paper-7b")
+    res = {}
+    for rate in (4, 30):
+        row = {}
+        for pol in ("ar", "sd", "nightjar"):
+            eng = build_sim_engine(
+                SimConfig(target=t, draft=d, hw=RTX_4090, max_batch=256,
+                          seed=0), pol)
+            reqs = poisson_requests(rate, min(int(rate * 15), 300),
+                                    dataset="sharegpt", seed=1)
+            row[pol] = eng.run(reqs, max_steps=300_000).throughput
+        res[rate] = row
+    for rate, row in res.items():
+        best = max(row["ar"], row["sd"])
+        assert row["nightjar"] > 0.85 * best, (rate, row)
+
+
+def test_memory_manager_offload_reload_cycle():
+    bm = BlockManager(100, block_size=4)
+    events = []
+    mm = ElasticMemoryManager(
+        bm, draft_blocks=10, tau_low_frac=0.1, t_persist=2,
+        offload_latency=0.01, reload_latency=0.01,
+        offload_fn=lambda: events.append("off"),
+        reload_fn=lambda: events.append("re"))
+    bm.allocate(1, 370)  # 93 blocks -> free 7 < tau_low 10
+    now = 0.0
+    for i in range(3):
+        mm.step(now, spec_disabled=True, waiting=5)
+        now += 0.1
+    assert not mm.draft_resident and mm.expanded
+    assert bm.total_blocks == 110
+    assert events == ["off"]
+    # drain: release the sequence, queue empty -> contraction + reload
+    bm.release(1)
+    mm.step(now, spec_disabled=True, waiting=0)
+    assert mm.draft_resident and not mm.expanded
+    assert bm.total_blocks == 100
+    assert events == ["off", "re"]
+
+
+def test_memory_manager_hysteresis():
+    """No reload while the waiting queue is non-empty (thrash prevention)."""
+    bm = BlockManager(100, block_size=4)
+    mm = ElasticMemoryManager(bm, draft_blocks=10, tau_low_frac=0.1,
+                              t_persist=1)
+    bm.allocate(1, 380)
+    mm.step(0.0, spec_disabled=True, waiting=3)
+    assert not mm.draft_resident
+    bm.release(1)
+    mm.step(1.0, spec_disabled=True, waiting=2)   # queue not empty
+    assert not mm.draft_resident
+    mm.step(2.0, spec_disabled=True, waiting=0)
+    assert mm.draft_resident

@@ -1,0 +1,116 @@
+"""Property tests for rejection-sampling verification (losslessness).
+
+The key theorem (Leviathan et al.): for any draft distribution q and target
+distribution p, the committed token at each position is distributed exactly
+as p.  We verify this by Monte-Carlo on enumerable vocabularies with
+hypothesis-generated distributions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.verify import verify_greedy, verify_rejection
+
+
+def _dist(rng, V, temp):
+    x = rng.normal(size=V) * temp
+    e = np.exp(x - x.max())
+    return e / e.sum()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), vocab=st.integers(2, 6),
+       temp=st.floats(0.3, 3.0))
+def test_first_position_distribution_preserved(seed, vocab, temp):
+    """Empirical distribution of the first committed token ~= target p."""
+    rng = np.random.default_rng(seed)
+    p = _dist(rng, vocab, temp)
+    q = _dist(rng, vocab, temp * 2)
+
+    N = 20_000
+    g = 1
+    key = jax.random.PRNGKey(seed)
+    kd, kv = jax.random.split(key)
+    draft_tokens = jax.random.categorical(
+        kd, jnp.log(jnp.asarray(q))[None, :].repeat(N, 0))[:, None]
+    draft_probs = jnp.broadcast_to(jnp.asarray(q), (N, g, vocab))
+    # target gives p at the draft position and at the bonus position
+    target_probs = jnp.broadcast_to(jnp.asarray(p), (N, g + 1, vocab))
+
+    res = verify_rejection(kv, draft_tokens, draft_probs, target_probs)
+    first = np.asarray(res["tokens"][:, 0])
+    emp = np.bincount(first, minlength=vocab) / N
+    assert np.max(np.abs(emp - p)) < 0.02, (emp, p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), vocab=st.integers(2, 8),
+       g=st.integers(1, 4))
+def test_committed_structure_invariants(seed, vocab, g):
+    """n_accepted in [0, g]; committed = accepted prefix + 1 sampled token;
+    padding is -1 beyond n_accepted+1."""
+    rng = np.random.default_rng(seed)
+    B = 16
+    key = jax.random.PRNGKey(seed)
+    draft_tokens = jnp.asarray(rng.integers(0, vocab, size=(B, g)))
+    dp = rng.dirichlet(np.ones(vocab), size=(B, g))
+    tp = rng.dirichlet(np.ones(vocab), size=(B, g + 1))
+    res = verify_rejection(key, draft_tokens, jnp.asarray(dp), jnp.asarray(tp))
+    n = np.asarray(res["n_accepted"])
+    toks = np.asarray(res["tokens"])
+    assert ((0 <= n) & (n <= g)).all()
+    for b in range(B):
+        # accepted prefix equals the draft tokens
+        assert (toks[b, :n[b]] == np.asarray(draft_tokens)[b, :n[b]]).all()
+        # exactly one sampled token after the prefix
+        assert toks[b, n[b]] >= 0
+        assert (toks[b, n[b] + 1:] == -1).all()
+        assert toks[b, n[b]] == int(res["next_token"][b])
+
+
+def test_identical_models_accept_everything():
+    """If q == p, every draft token is accepted (ratio = 1)."""
+    V, g, B = 16, 4, 8
+    rng = np.random.default_rng(0)
+    p = rng.dirichlet(np.ones(V), size=(B, g + 1))
+    draft_probs = jnp.asarray(p[:, :g])
+    key = jax.random.PRNGKey(1)
+    draft_tokens = jax.random.categorical(key, jnp.log(draft_probs))
+    res = verify_rejection(key, draft_tokens, draft_probs, jnp.asarray(p))
+    assert (np.asarray(res["n_accepted"]) == g).all()
+
+
+def test_disjoint_support_rejects_everything():
+    """If p puts zero mass on drafted tokens, n_accepted == 0 and the
+    correction comes from p."""
+    V, g, B = 4, 3, 64
+    q = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    p = jnp.asarray([0.0, 0.0, 0.5, 0.5])
+    draft_tokens = jnp.zeros((B, g), jnp.int32)
+    dp = jnp.broadcast_to(q, (B, g, V))
+    tp = jnp.broadcast_to(p, (B, g + 1, V))
+    res = verify_rejection(jax.random.PRNGKey(0), draft_tokens, dp, tp)
+    assert (np.asarray(res["n_accepted"]) == 0).all()
+    nxt = np.asarray(res["next_token"])
+    assert np.isin(nxt, [2, 3]).all()
+
+
+def test_greedy_verification_exact():
+    """Greedy verify accepts exactly the matching prefix and corrects with
+    the target argmax."""
+    V, g = 8, 3
+    B = 4
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(B, g + 1, V)).astype(np.float32))
+    tgt = np.asarray(jnp.argmax(logits, -1))
+    draft = tgt[:, :g].copy()
+    draft[1, 1] = (draft[1, 1] + 1) % V  # inject one mismatch
+    draft[3, 0] = (draft[3, 0] + 1) % V
+    res = verify_greedy(jnp.asarray(draft), logits)
+    n = np.asarray(res["n_accepted"])
+    assert n[0] == g and n[2] == g
+    assert n[1] == 1 and n[3] == 0
+    assert int(res["next_token"][1]) == tgt[1, 1]
+    assert int(res["next_token"][0]) == tgt[0, g]
