@@ -11,7 +11,8 @@ from repro import configs  # noqa: E402
 from repro.configs.base import ModelConfig  # noqa: E402
 from repro.serving.costmodel import (A100_40G, RTX_4090, TPU_V5E,  # noqa: E402
                                      RooflineCostModel)
-from repro.serving.simulator import SimConfig, build_sim_engine  # noqa: E402
+from repro.serving.simulator import (SimConfig, build_sim_cluster,  # noqa: E402
+                                     build_sim_engine)
 from repro.serving.workload import (dynamic_rate_trace,  # noqa: E402
                                     poisson_requests)
 
@@ -53,6 +54,33 @@ def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
         reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1)
     m = eng.run(reqs, max_steps=500_000)
     return m, eng
+
+
+def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
+                router: str = "jsq", rate: float = 10.0, n: int = 100,
+                dataset: str = "alpaca", max_batch: int = 256, seed: int = 0):
+    """Run one cluster cell on the simulated tier; rate is the TOTAL fleet
+    arrival rate.  Returns (ClusterMetrics, ServingCluster)."""
+    target, draft, hw = PAIRS[pair]
+    cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
+                    seed=seed)
+    cl = build_sim_cluster(cfg, n_replicas, policy, router=router)
+    reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1)
+    m = cl.run(reqs)
+    return m, cl
+
+
+def saturated_gamma_stats(metrics, max_batch: int, *, last: int = 200):
+    """Planner behaviour in the saturated (high-batch) regime: over the final
+    `last` decode steps whose batch exceeded max_batch/2, the mean gamma and
+    the fraction of pure-AR (gamma == 0) steps.  (None, None) when the
+    replica never reached that regime."""
+    hb = [r["gamma"] for r in metrics.timeline if r["B"] > max_batch // 2]
+    if not hb:
+        return None, None
+    tail = hb[-min(last, len(hb)):]
+    return (sum(tail) / len(tail),
+            sum(1 for g in tail if g == 0) / len(tail))
 
 
 class CSV:

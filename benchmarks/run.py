@@ -22,7 +22,8 @@ import time
 import numpy as np
 
 from .common import (CSV, PAIRS, POLICIES, POLICY_LABEL, VICUNA_13B,
-                     VICUNA_68M, run_serving, timed)
+                     VICUNA_68M, run_cluster, run_serving,
+                     saturated_gamma_stats, timed)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -183,6 +184,80 @@ def fig15_fixed_vs_adaptive(csv: CSV, fast: bool):
         csv.add(f"fig15.qps{rate}.nightjar", 0.0,
                 f"throughput={m.throughput:.1f}tok/s;"
                 f"best_fixed={best_name}:{best_fixed:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Cluster tier: replica-count x arrival-rate grid (the fleet scenario)
+# ---------------------------------------------------------------------------
+
+
+def _gamma_trace(metrics, *, window_s: float = 2.0, max_windows: int = 16):
+    """Mean gamma per virtual-time window — the per-replica gamma trace."""
+    acc, cnt = {}, {}
+    for r in metrics.timeline:
+        w = int(r["t"] // window_s)
+        acc[w] = acc.get(w, 0) + r["gamma"]
+        cnt[w] = cnt.get(w, 0) + 1
+    ws = sorted(acc)[:max_windows]
+    return "|".join(f"{acc[w] / cnt[w]:.1f}" for w in ws)
+
+
+def cluster_sweep(csv: CSV, fast: bool):
+    """Weak-scaling grid: {1,2,4} replicas x {low,high} per-replica rate.
+
+    The total arrival rate scales with replica count (every replica sees the
+    same offered load), so the high cell keeps every replica saturated: each
+    replica's planner must independently learn gamma -> 0 while the low cell
+    keeps speculation on.  Emits per-replica gamma traces, saturated-regime
+    gamma stats and the planner's final exploit arm for the full batch."""
+    max_batch = 256
+    reps_list = (1, 2) if fast else (1, 2, 4)
+    dur = 6 if fast else 12
+    agg = {}
+    for n_rep in reps_list:
+        for label, rate_per in (("low", 4), ("high", 200)):
+            rate = rate_per * n_rep
+            n = max(int(rate * dur), 40)
+            t0 = time.perf_counter()
+            m, cl = run_cluster("7b", n_rep, "nightjar", router="jsq",
+                                rate=rate, n=n, dataset="alpaca",
+                                max_batch=max_batch)
+            agg[(n_rep, label)] = m.throughput
+            sat, arms = [], []
+            for i, rm in enumerate(m.per_replica):
+                g, f0 = saturated_gamma_stats(rm, max_batch)
+                sat.append(f"r{i}:{'-' if g is None else f'{g:.2f}/{f0:.2f}'}")
+                pol = cl.replicas[i].policy
+                arms.append(str(pol._eq4(pol.bucket(max_batch), 0, max_batch))
+                            if hasattr(pol, "_eq4") else "-")
+            csv.add(f"cluster.reps{n_rep}.{label}",
+                    (time.perf_counter() - t0) * 1e6,
+                    f"throughput={m.throughput:.1f}tok/s;"
+                    f"sat_gamma={','.join(sat)};"
+                    f"exploit_arm={','.join(arms)};"
+                    f"requests={'/'.join(map(str, m.replica_counts()))}")
+            for i, rm in enumerate(m.per_replica):
+                csv.add(f"cluster.reps{n_rep}.{label}.gamma_trace.r{i}", 0.0,
+                        f"trace={_gamma_trace(rm)}")
+    hi = reps_list[-1]
+    csv.add("cluster.weak_scaling", 0.0,
+            f"reps{hi}_vs_reps1_high="
+            f"{agg[(hi, 'high')] / agg[(1, 'high')]:.2f}x;"
+            f"reps{hi}_vs_reps1_low="
+            f"{agg[(hi, 'low')] / agg[(1, 'low')]:.2f}x")
+
+
+def cluster_routers(csv: CSV, fast: bool):
+    """Router-policy comparison at moderate load on 2 replicas."""
+    for router in ("rr", "jsq", "kv"):
+        rate, n = 40, (160 if fast else 400)
+        t0 = time.perf_counter()
+        m, _ = run_cluster("7b", 2, "nightjar", router=router, rate=rate,
+                           n=n, dataset="sharegpt")
+        csv.add(f"cluster.router.{router}", (time.perf_counter() - t0) * 1e6,
+                f"throughput={m.throughput:.1f}tok/s;"
+                f"mean_latency={m.mean_latency:.2f}s;"
+                f"balance={'/'.join(map(str, m.replica_counts()))}")
 
 
 # ---------------------------------------------------------------------------
@@ -367,6 +442,8 @@ BENCHES = {
     "fig13": fig13_offload,
     "fig14": fig14_threshold,
     "fig15": fig15_fixed_vs_adaptive,
+    "cluster": cluster_sweep,
+    "routers": cluster_routers,
     "table3": table3_cswitch,
     "table7": table7_memops,
     "regret": appendix_regret,

@@ -1,0 +1,76 @@
+"""Multi-replica cluster demo: one arrival stream, N Nightjar replicas.
+
+Shows the fleet-tier story: at low offered load every replica keeps
+speculation on (memory-bound regime); crank the rate and each replica's
+planner independently drives gamma to 0 (compute-bound regime), while the
+router keeps the fleet balanced.  Also compares dispatch policies.
+
+    PYTHONPATH=src python examples/cluster_demo.py [--replicas 2]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs  # noqa: E402
+from repro.serving.costmodel import RTX_4090  # noqa: E402
+from repro.serving.simulator import SimConfig, build_sim_cluster  # noqa: E402
+from repro.serving.workload import poisson_requests  # noqa: E402
+
+
+def sparkline(vals, width=48):
+    blocks = " ▁▂▃▄▅▆▇█"
+    if not vals:
+        return ""
+    mx = max(vals) or 1
+    step = max(len(vals) // width, 1)
+    v = [max(vals[i:i + step]) for i in range(0, len(vals), step)]
+    return "".join(blocks[int(x / mx * (len(blocks) - 1))] for x in v)
+
+
+def gamma_windows(m, window_s=1.0):
+    acc, cnt = {}, {}
+    for r in m.timeline:
+        w = int(r["t"] // window_s)
+        acc[w] = acc.get(w, 0) + r["gamma"]
+        cnt[w] = cnt.get(w, 0) + 1
+    return [acc[w] / cnt[w] for w in sorted(acc)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--duration", type=float, default=10.0)
+    args = ap.parse_args()
+
+    cfg = SimConfig(target=configs.get_config("paper-7b"),
+                    draft=configs.get_draft_config("paper-7b"),
+                    hw=RTX_4090, max_batch=256, seed=0)
+
+    print(f"=== {args.replicas}-replica cluster, low vs high offered load ===")
+    for label, rate_per in (("low ", 4), ("high", 200)):
+        rate = rate_per * args.replicas
+        n = max(int(rate * args.duration), 40)
+        cl = build_sim_cluster(cfg, args.replicas, "nightjar", router="jsq")
+        m = cl.run(poisson_requests(rate, n, dataset="alpaca", seed=1))
+        print(f"\n{label} ({rate} req/s total, {n} requests): "
+              f"aggregate {m.throughput:7.1f} tok/s, "
+              f"mean latency {m.mean_latency:.2f}s")
+        for i, rm in enumerate(m.per_replica):
+            gw = gamma_windows(rm)
+            print(f"  replica {i}: gamma {sparkline(gw)}  "
+                  f"(mean {sum(gw) / max(len(gw), 1):.2f})  "
+                  f"{m.replica_counts()[i]} reqs, {rm.throughput:7.1f} tok/s")
+
+    print("\n=== router comparison (2 replicas, 40 req/s sharegpt) ===")
+    for router in ("rr", "jsq", "kv"):
+        cl = build_sim_cluster(cfg, 2, "nightjar", router=router)
+        m = cl.run(poisson_requests(40, 300, dataset="sharegpt", seed=1))
+        print(f"  {router:3s}: {m.throughput:7.1f} tok/s, "
+              f"latency {m.mean_latency:5.2f}s, "
+              f"balance {m.replica_counts()}")
+
+
+if __name__ == "__main__":
+    main()

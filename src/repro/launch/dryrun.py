@@ -31,7 +31,7 @@ from .. import configs
 from ..configs.base import ShapeConfig, shapes_for
 from ..distributed import sharding as shd
 from ..models import registry
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, mesh_context
 
 # hardware constants (TPU v5e)
 PEAK_FLOPS = 197e12
@@ -261,7 +261,7 @@ def run_cell(arch: str, shape: ShapeConfig, mesh, *, spec_decode=False,
     fn, args, in_sh, out_sh, donate, meta = build_cell(
         arch, shape, mesh, spec_decode=spec_decode, cfg_override=cfg_override,
         accum_override=accum_override)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)

@@ -6,6 +6,11 @@ Real execution tier (reduced configs, actual JAX compute):
 Analytical paper-scale tier (TPU v5e cost model):
   PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
       --rate 20 --requests 300 --policy nightjar
+
+Multi-replica cluster on the simulated tier (per-replica planners behind a
+router; --rate is the TOTAL arrival rate across the fleet):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --replicas 4 --router jsq --rate 80 --requests 800
 """
 from __future__ import annotations
 
@@ -25,13 +30,19 @@ def main():
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="sim tier only: number of engine replicas")
+    ap.add_argument("--router", default="jsq",
+                    choices=["rr", "jsq", "kv"],
+                    help="dispatch policy for --replicas > 1")
     args = ap.parse_args()
 
     from .. import configs
 
     if args.tier == "sim":
         from ..serving.costmodel import TPU_V5E
-        from ..serving.simulator import SimConfig, build_sim_engine
+        from ..serving.simulator import (SimConfig, build_sim_cluster,
+                                         build_sim_engine)
         from ..serving.workload import poisson_requests
 
         cfg = SimConfig(
@@ -39,10 +50,15 @@ def main():
             draft=configs.get_draft_config(args.arch),
             hw=TPU_V5E, gamma_max=args.gamma_max, max_batch=args.max_batch,
             enable_offload=not args.no_offload, seed=args.seed)
-        engine = build_sim_engine(cfg, args.policy)
         reqs = poisson_requests(args.rate, args.requests,
                                 dataset=args.dataset, seed=args.seed + 1)
-        metrics = engine.run(reqs)
+        if args.replicas > 1:
+            cluster = build_sim_cluster(cfg, args.replicas, args.policy,
+                                        router=args.router)
+            metrics = cluster.run(reqs)
+        else:
+            engine = build_sim_engine(cfg, args.policy)
+            metrics = engine.run(reqs)
     else:
         from ..core.bandits import make_policy
         from ..models import registry

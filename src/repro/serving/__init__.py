@@ -1,2 +1,14 @@
-from . import (costmodel, engine, kv_cache, memory_manager, request,  # noqa: F401
-               scheduler, simulator, workload)
+"""Nightjar serving stack.
+
+Single replica: ``engine.ServingEngine`` — a steppable, clock-driven driver
+(``submit`` / ``step(now)`` / ``peek_next_event``) over a pluggable backend
+(simulated roofline tier or real JAX tier), coupling the continuous-batching
+scheduler, the MAB planner and the elastic memory manager.
+
+Fleet: ``cluster.ServingCluster`` — N replicas advanced by a shared virtual
+event clock behind a ``router.Router`` dispatch policy (round-robin /
+join-shortest-queue / KV-headroom-aware).  ``simulator.build_sim_cluster``
+builds the whole thing on the analytical tier.
+"""
+from . import (cluster, costmodel, engine, kv_cache, memory_manager,  # noqa: F401
+               request, router, scheduler, simulator, workload)

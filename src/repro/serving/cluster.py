@@ -1,0 +1,162 @@
+"""Multi-replica serving cluster on a shared virtual event clock.
+
+``ServingCluster`` owns N independent :class:`ServingEngine` replicas — each
+with its own :class:`ContinuousBatchingScheduler`, MAB planner and
+:class:`ElasticMemoryManager` — plus one :class:`Router` that dispatches a
+single global arrival stream across them.  This is the fleet tier the paper
+motivates ("dynamic request rates from millions of users"): per-replica
+planners adapt their speculative length *independently* to the load each
+replica actually sees.
+
+Event-clock semantics
+---------------------
+Every engine advances its own virtual clock as it executes steps; the
+cluster interleaves them with a classic discrete-event loop:
+
+  1. the next *engine* event is ``min over replicas of peek_next_event()``;
+  2. the next *arrival* event is the head of the global request stream;
+  3. whichever is earlier happens: an arrival is routed (based on replica
+     state observed *now*) and submitted, or the earliest-clock replica
+     executes one ``step()``.
+
+Because a replica is only stepped when it holds the minimum clock, replica
+timelines interleave correctly in virtual time, and routing decisions see
+queue/KV state no newer than the arrival instant — the same information a
+real front-end would have.
+
+Determinism: engines, router tie-breaks and workload generation are all
+seeded/deterministic, so a cluster run is exactly reproducible (golden-value
+tested in tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from .engine import ServingEngine
+from .request import Metrics, Request
+from .router import Router
+
+
+@dataclass
+class ClusterMetrics:
+    """Aggregate + per-replica metrics for one cluster run."""
+
+    per_replica: List[Metrics]
+    elapsed: float = 0.0              # virtual makespan across replicas
+    assignments: Dict[int, int] = field(default_factory=dict)  # req -> replica
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(m.total_tokens for m in self.per_replica)
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / self.elapsed if self.elapsed else 0.0
+
+    @property
+    def latencies(self) -> List[float]:
+        return [x for m in self.per_replica for x in m.latencies]
+
+    @property
+    def ttfts(self) -> List[float]:
+        return [x for m in self.per_replica for x in m.ttfts]
+
+    @property
+    def mean_latency(self) -> float:
+        lat = self.latencies
+        return sum(lat) / len(lat) if lat else 0.0
+
+    @property
+    def mean_ttft(self) -> float:
+        t = self.ttfts
+        return sum(t) / len(t) if t else 0.0
+
+    def replica_counts(self) -> List[int]:
+        """Requests routed to each replica."""
+        n = len(self.per_replica)
+        counts = [0] * n
+        for idx in self.assignments.values():
+            counts[idx] += 1
+        return counts
+
+    def summary(self) -> dict:
+        return {
+            "replicas": len(self.per_replica),
+            "throughput_tok_s": round(self.throughput, 2),
+            "mean_latency_s": round(self.mean_latency, 4),
+            "mean_ttft_s": round(self.mean_ttft, 4),
+            "total_tokens": self.total_tokens,
+            "elapsed_s": round(self.elapsed, 3),
+            "per_replica_tok_s": [round(m.throughput, 2)
+                                  for m in self.per_replica],
+            "per_replica_requests": self.replica_counts(),
+            "switches": sum(m.switch_count for m in self.per_replica),
+            "offloads": sum(m.offload_events for m in self.per_replica),
+            "reloads": sum(m.reload_events for m in self.per_replica),
+        }
+
+
+class ServingCluster:
+    def __init__(self, replicas: Sequence[ServingEngine], router: Router):
+        if not replicas:
+            raise ValueError("cluster needs at least one replica")
+        self.replicas = list(replicas)
+        for i, eng in enumerate(self.replicas):
+            eng.replica_id = i
+        self.router = router
+        self.assignments: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    def submit(self, req: Request) -> int:
+        """Route one request and enqueue it on the chosen replica."""
+        idx = self.router.route(req, self.replicas)
+        self.replicas[idx].submit(req)
+        self.assignments[req.req_id] = idx
+        return idx
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.replicas)
+
+    def peek_next_event(self) -> Optional[float]:
+        evs = [t for t in (e.peek_next_event() for e in self.replicas)
+               if t is not None]
+        return min(evs) if evs else None
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *, max_steps: int = 5_000_000,
+            record_timeline: bool = True) -> ClusterMetrics:
+        """Discrete-event loop: route arrivals / step the earliest replica."""
+        for e in self.replicas:
+            e.record_timeline = record_timeline
+        pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+        starts = [e.clock for e in self.replicas]
+        pi = 0
+        steps = 0
+        while steps < max_steps:
+            evs = [(t, i) for i, t in
+                   enumerate(e.peek_next_event() for e in self.replicas)
+                   if t is not None]
+            t_engine = min(evs)[0] if evs else float("inf")
+            if pi < len(pending) and pending[pi].arrival <= t_engine:
+                self.submit(pending[pi])
+                pi += 1
+                continue
+            if not evs:
+                break
+            _, idx = min(evs)
+            self.replicas[idx].step()
+            steps += 1
+
+        per = [e.finalize_metrics(starts[i])
+               for i, e in enumerate(self.replicas)]
+        makespan = max((e.clock - starts[i]
+                        for i, e in enumerate(self.replicas)
+                        if e.metrics.total_tokens or e.clock > starts[i]),
+                       default=0.0)
+        return ClusterMetrics(per_replica=per, elapsed=makespan,
+                              assignments=dict(self.assignments))

@@ -1,4 +1,4 @@
-"""The Nightjar serving engine: one driver loop over pluggable backends.
+"""The Nightjar serving engine: a steppable driver over pluggable backends.
 
 The driver couples the four paper components exactly as Figure 4:
   Scheduler (continuous batching)  ->  Planner (MAB, batch size as context)
@@ -13,7 +13,20 @@ Backends:
 Both tiers run the SAME scheduler / planner / memory-manager objects — only
 the latency source differs (DESIGN.md §7).
 
-Semantics of one engine step:
+Steppable API (the cluster tier, serving/cluster.py, is built on this):
+  * ``submit(request)``      — enqueue a request; it is admitted once the
+    engine's virtual clock reaches ``request.arrival``.
+  * ``peek_next_event()``    — the virtual time at which this engine next
+    has work to do (its clock if anything is runnable, the earliest pending
+    arrival if idle, or ``None`` when fully drained).  A cluster driver
+    advances the replica with the smallest next-event time so N independent
+    engine clocks interleave correctly in virtual time.
+  * ``step(now=None)``       — execute ONE engine iteration and return a
+    :class:`StepReport` (``None`` when there is nothing left to do).
+  * ``run(requests)``        — the classic run-to-completion loop, now a
+    thin wrapper: submit everything, step until drained.
+
+Semantics of one engine step (identical to the original monolithic loop):
   1. admit arrivals; prefill the newly admitted sequences
   2. memory manager trigger check (offload/expand or contract/reload)
   3. gamma <- planner (forced 0 while the draft model is off-device)
@@ -23,11 +36,9 @@ Semantics of one engine step:
 """
 from __future__ import annotations
 
-import math
+import heapq
 from dataclasses import dataclass
 from typing import List, Optional, Protocol, Sequence as Seq
-
-import numpy as np
 
 from ..core.bandits import Policy
 from .memory_manager import ElasticMemoryManager
@@ -52,122 +63,185 @@ class StepOutcome:
     latency: float           # seconds
 
 
+@dataclass
+class StepReport:
+    """What one ``ServingEngine.step`` call did (cluster/benchmark probe)."""
+
+    kind: str                # "decode" (executed a batch) | "idle" (clock
+                             # fast-forwarded to the next pending arrival)
+    t_start: float           # engine clock when the step began
+    t_end: float             # engine clock after the step
+    batch: int = 0           # decode batch size B
+    gamma: int = 0           # speculative length used this step
+    tokens: int = 0          # committed tokens
+    admitted: int = 0        # sequences admitted (prefilled) this step
+    finished: int = 0        # sequences that completed this step
+
+
 class ServingEngine:
     def __init__(self, backend: Backend, scheduler: ContinuousBatchingScheduler,
                  policy: Policy, memmgr: Optional[ElasticMemoryManager] = None,
-                 *, gamma_max: int = 5):
+                 *, gamma_max: int = 5, replica_id: int = 0):
         self.backend = backend
         self.scheduler = scheduler
         self.policy = policy
         self.memmgr = memmgr
         self.gamma_max = gamma_max
+        self.replica_id = replica_id
         self.clock = 0.0
         self.prev_gamma_effective = 0
+        self.metrics = Metrics()
+        self.record_timeline = True
+        self._pending: List = []   # heap of (arrival, req_id, Request)
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request], *, max_steps: int = 1_000_000,
-            record_timeline: bool = True) -> Metrics:
-        pending = sorted(requests, key=lambda r: r.arrival)
-        pi = 0
-        m = Metrics()
-        start_clock = self.clock
-        steps = 0
+    # steppable surface
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Enqueue a request; admitted once the clock reaches its arrival."""
+        heapq.heappush(self._pending, (req.arrival, req.req_id, req))
 
-        while (pi < len(pending) or self.scheduler.num_waiting
-               or self.scheduler.num_running):
-            if steps >= max_steps:
-                break
-            steps += 1
+    @property
+    def num_pending(self) -> int:
+        """Submitted requests whose arrival the clock has not reached."""
+        return len(self._pending)
 
-            # 1. arrivals up to now
-            while pi < len(pending) and pending[pi].arrival <= self.clock:
-                self.scheduler.add_request(pending[pi])
-                pi += 1
+    @property
+    def load(self) -> int:
+        """Total requests owned by this replica that are not yet finished
+        admission: pending + waiting + running (router load signal)."""
+        return (len(self._pending) + self.scheduler.num_waiting
+                + self.scheduler.num_running)
 
-            draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
+    def has_work(self) -> bool:
+        return bool(self._pending or self.scheduler.num_waiting
+                    or self.scheduler.num_running)
 
-            admitted = self.scheduler.schedule()
-            if admitted:
-                t = self.backend.prefill(admitted, with_draft=draft_ok)
-                self.clock += t
-                for s in admitted:
-                    s.prefill_done_at = self.clock
-                    if not draft_ok:
-                        s.delta = s.request.prompt_len  # draft never saw it
+    def peek_next_event(self) -> Optional[float]:
+        """Virtual time of this engine's next actionable event.
 
-            if not self.scheduler.running:
-                if pi < len(pending):
-                    self.clock = max(self.clock, pending[pi].arrival)
-                    continue
-                break
+        ``None`` means drained (or stuck: waiting requests that can never be
+        admitted because nothing is running and no arrivals remain — the
+        run-to-completion loop historically terminated there too)."""
+        if self.scheduler.num_running:
+            return self.clock
+        if self.scheduler.num_waiting:
+            # admission is only retried when the clock moves or arrivals
+            # land; with nothing running the next chance is the next arrival
+            if self._pending:
+                return max(self.clock, self._pending[0][0])
+            return None
+        if self._pending:
+            return max(self.clock, self._pending[0][0])
+        return None
 
-            running = list(self.scheduler.running)
-            B = len(running)
-            delta_max = max((s.delta for s in running), default=0)
+    # ------------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> Optional[StepReport]:
+        """Advance the engine by one iteration of the Figure-4 loop."""
+        if now is not None and now > self.clock:
+            self.clock = now
+        m = self.metrics
+        t_start = self.clock
 
-            # 2. elastic memory triggers
-            if self.memmgr is not None:
-                self.memmgr.step(
-                    self.clock,
-                    spec_disabled=(self.prev_gamma_effective == 0),
-                    waiting=self.scheduler.num_waiting)
-                draft_ok = self.memmgr.can_speculate(self.clock)
+        # 1. arrivals up to now
+        while self._pending and self._pending[0][0] <= self.clock:
+            self.scheduler.add_request(heapq.heappop(self._pending)[2])
 
-            # 3. arm selection
-            if draft_ok:
-                gamma = self.policy.select(B, delta_max=delta_max)
-            else:
-                gamma = 0
+        draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
 
-            # 4. switching cost: draft catch-up prefill
-            switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
-            if switched_on and any(s.delta > 0 for s in running):
-                t_catch = self.backend.draft_catchup(running)
-                self.clock += t_catch
-                for s in running:
-                    s.delta = 0
+        admitted = self.scheduler.schedule()
+        if admitted:
+            t = self.backend.prefill(admitted, with_draft=draft_ok)
+            self.clock += t
+            for s in admitted:
+                s.prefill_done_at = self.clock
+                if not draft_ok:
+                    s.delta = s.request.prompt_len  # draft never saw it
 
-            # 5. execute
-            out = self.backend.step(running, gamma)
-            self.clock += out.latency
-            total_committed = int(sum(out.n_committed))
+        if not self.scheduler.running:
+            if self._pending:
+                # idle: fast-forward to the next arrival
+                self.clock = max(self.clock, self._pending[0][0])
+                return StepReport("idle", t_start, self.clock,
+                                  admitted=len(admitted))
+            return None
 
-            for s, n in zip(running, out.n_committed):
-                if n <= 0 or s not in self.scheduler.running:
-                    continue  # finished slot or preempted by an earlier commit
-                if s.first_token_at is None:
-                    s.first_token_at = self.clock
-                    m.ttfts.append(self.clock - s.request.arrival)
-                ok = self.scheduler.commit_tokens(s, int(n))
-                if not ok:
-                    continue  # preempted; will re-run from the queue
-                if gamma == 0:
-                    s.delta += int(n)  # draft cache falls behind
-                if s.done:
-                    s.finished_at = self.clock
-                    m.latencies.append(self.clock - s.request.arrival)
-                    self.scheduler.finish(s)
-                    self.backend.release(s)
+        running = list(self.scheduler.running)
+        B = len(running)
+        delta_max = max((s.delta for s in running), default=0)
 
-            m.total_tokens += total_committed
-            if total_committed > 0 and draft_ok:
-                lpt = out.latency / total_committed
-                self.policy.observe(B, gamma, lpt,
-                                    n_accepted=(total_committed - B) / max(B, 1)
-                                    if gamma else None,
-                                    delta_max=delta_max)
-            if record_timeline:
-                m.timeline.append({
-                    "t": self.clock, "B": B, "gamma": gamma,
-                    "tokens": total_committed, "latency": out.latency,
-                    "free_blocks": self.scheduler.bm.num_free,
-                    "draft_resident": draft_ok,
-                    "waiting": self.scheduler.num_waiting,
-                })
-            if gamma != self.prev_gamma_effective:
-                m.switch_count += 1
-            self.prev_gamma_effective = gamma
+        # 2. elastic memory triggers
+        if self.memmgr is not None:
+            self.memmgr.step(
+                self.clock,
+                spec_disabled=(self.prev_gamma_effective == 0),
+                waiting=self.scheduler.num_waiting)
+            draft_ok = self.memmgr.can_speculate(self.clock)
 
+        # 3. arm selection
+        if draft_ok:
+            gamma = self.policy.select(B, delta_max=delta_max)
+        else:
+            gamma = 0
+
+        # 4. switching cost: draft catch-up prefill
+        switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
+        if switched_on and any(s.delta > 0 for s in running):
+            t_catch = self.backend.draft_catchup(running)
+            self.clock += t_catch
+            for s in running:
+                s.delta = 0
+
+        # 5. execute
+        out = self.backend.step(running, gamma)
+        self.clock += out.latency
+        total_committed = int(sum(out.n_committed))
+
+        finished = 0
+        for s, n in zip(running, out.n_committed):
+            if n <= 0 or s not in self.scheduler.running:
+                continue  # finished slot or preempted by an earlier commit
+            if s.first_token_at is None:
+                s.first_token_at = self.clock
+                m.ttfts.append(self.clock - s.request.arrival)
+            ok = self.scheduler.commit_tokens(s, int(n))
+            if not ok:
+                continue  # preempted; will re-run from the queue
+            if gamma == 0:
+                s.delta += int(n)  # draft cache falls behind
+            if s.done:
+                s.finished_at = self.clock
+                m.latencies.append(self.clock - s.request.arrival)
+                self.scheduler.finish(s)
+                self.backend.release(s)
+                finished += 1
+
+        m.total_tokens += total_committed
+        if total_committed > 0 and draft_ok:
+            lpt = out.latency / total_committed
+            self.policy.observe(B, gamma, lpt,
+                                n_accepted=(total_committed - B) / max(B, 1)
+                                if gamma else None,
+                                delta_max=delta_max)
+        if self.record_timeline:
+            m.timeline.append({
+                "t": self.clock, "B": B, "gamma": gamma,
+                "tokens": total_committed, "latency": out.latency,
+                "free_blocks": self.scheduler.bm.num_free,
+                "draft_resident": draft_ok,
+                "waiting": self.scheduler.num_waiting,
+            })
+        if gamma != self.prev_gamma_effective:
+            m.switch_count += 1
+        self.prev_gamma_effective = gamma
+        return StepReport("decode", t_start, self.clock, batch=B, gamma=gamma,
+                          tokens=total_committed, admitted=len(admitted),
+                          finished=finished)
+
+    # ------------------------------------------------------------------
+    def finalize_metrics(self, start_clock: float = 0.0) -> Metrics:
+        """Stamp elapsed time + memory-manager counters onto the metrics."""
+        m = self.metrics
         m.elapsed = self.clock - start_clock
         if self.memmgr is not None:
             m.offload_events = sum(1 for e in self.memmgr.events
@@ -175,3 +249,22 @@ class ServingEngine:
             m.reload_events = sum(1 for e in self.memmgr.events
                                   if e.kind == "reload")
         return m
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *, max_steps: int = 1_000_000,
+            record_timeline: bool = True) -> Metrics:
+        """Run-to-completion convenience wrapper over ``step``.
+
+        Each call returns metrics for THIS batch of requests only (fresh
+        Metrics object); the virtual clock and planner state carry over."""
+        self.metrics = Metrics()
+        self.record_timeline = record_timeline
+        for r in requests:
+            self.submit(r)
+        start_clock = self.clock
+        steps = 0
+        while steps < max_steps:
+            if self.step() is None:
+                break
+            steps += 1
+        return self.finalize_metrics(start_clock)

@@ -1,0 +1,86 @@
+"""Request routers for the multi-replica serving cluster.
+
+A :class:`Router` maps each arriving :class:`~repro.serving.request.Request`
+to one replica (:class:`~repro.serving.engine.ServingEngine`).  Routing is a
+pure function of the request and the replicas' *observable* state at dispatch
+time — queue depths and KV-block headroom — never of simulator internals, so
+the same policies transfer to the real-execution tier unchanged.
+
+Policies:
+  * ``RoundRobinRouter``   — cycle through replicas; the static baseline.
+  * ``JoinShortestQueue``  — send to the replica with the fewest unfinished
+    requests (pending + waiting + running); the classic JSQ policy used by
+    SLO-aware SD serving systems (SpecServe, AdaSD).
+  * ``KVHeadroomRouter``   — send to the replica with the most free paged-KV
+    blocks, tie-broken by queue length.  Because Nightjar's planner reacts to
+    memory pressure (speculation off, draft offload), balancing *headroom*
+    rather than queue depth keeps more replicas inside the speculation-
+    friendly regime at moderate load.
+
+All policies are deterministic (ties broken by replica index) so cluster
+runs are exactly reproducible.
+
+Construct by name with :func:`make_router` ("rr" | "jsq" | "kv").
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from .engine import ServingEngine
+from .request import Request
+
+
+class Router:
+    """Base class: pick the replica index that receives ``req``."""
+
+    name = "router"
+
+    def route(self, req: Request, replicas: Sequence[ServingEngine]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, req: Request, replicas: Sequence[ServingEngine]) -> int:
+        idx = self._next % len(replicas)
+        self._next += 1
+        return idx
+
+
+class JoinShortestQueue(Router):
+    name = "jsq"
+
+    def route(self, req: Request, replicas: Sequence[ServingEngine]) -> int:
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].load, i))
+
+
+class KVHeadroomRouter(Router):
+    name = "kv-headroom"
+
+    def route(self, req: Request, replicas: Sequence[ServingEngine]) -> int:
+        def key(i: int):
+            bm = replicas[i].scheduler.bm
+            # most free blocks first, then shortest queue, then index
+            return (-bm.num_free, replicas[i].load, i)
+        return min(range(len(replicas)), key=key)
+
+
+_ROUTERS = {
+    "rr": RoundRobinRouter,
+    "round-robin": RoundRobinRouter,
+    "jsq": JoinShortestQueue,
+    "kv": KVHeadroomRouter,
+    "kv-headroom": KVHeadroomRouter,
+}
+
+
+def make_router(name: str) -> Router:
+    try:
+        return _ROUTERS[name]()
+    except KeyError:
+        raise KeyError(f"unknown router {name!r}; one of {sorted(_ROUTERS)}")

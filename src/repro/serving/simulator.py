@@ -8,7 +8,7 @@ planner, elastic memory manager — is the real thing.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import List, Optional
 
 import numpy as np
@@ -16,11 +16,13 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.bandits import Policy, make_policy
 from ..core.cswitch import CSwitchTable
+from .cluster import ServingCluster
 from .costmodel import HardwareProfile, RooflineCostModel, TPU_V5E, kv_bytes_per_token
 from .engine import ServingEngine, StepOutcome
 from .kv_cache import BlockManager
 from .memory_manager import ElasticMemoryManager
 from .request import Request, Sequence
+from .router import make_router
 from .scheduler import ContinuousBatchingScheduler
 
 
@@ -130,3 +132,19 @@ def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
                              seed=cfg.seed)
     return ServingEngine(backend, sched, policy, memmgr,
                          gamma_max=cfg.gamma_max)
+
+
+def build_sim_cluster(cfg: SimConfig, n_replicas: int,
+                      policy_name: str = "nightjar", *,
+                      router: str = "jsq") -> ServingCluster:
+    """N independent simulated replicas behind one router.
+
+    Every replica gets its OWN scheduler, planner, elastic memory manager
+    and acceptance RNG (seed offset by replica index so replicas do not see
+    correlated acceptance draws), exactly like N separate serving processes
+    behind a front-end."""
+    engines = [
+        build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
+        for i in range(n_replicas)
+    ]
+    return ServingCluster(engines, make_router(router))

@@ -97,6 +97,23 @@ class RateTrace:
                         float(alphas[i])) for i in range(n)]
 
 
+def split_requests(requests: List[Request], n_replicas: int
+                   ) -> List[List[Request]]:
+    """Deterministically split ONE arrival stream across N replicas.
+
+    Round-robin in arrival order (ties broken by req_id), preserving each
+    request's absolute arrival time — the static-partition baseline against
+    the dynamic routers in serving/router.py, and the tool for replaying the
+    same global trace against fleets of different sizes."""
+    if n_replicas < 1:
+        raise ValueError("n_replicas must be >= 1")
+    shards: List[List[Request]] = [[] for _ in range(n_replicas)]
+    for i, req in enumerate(sorted(requests,
+                                   key=lambda r: (r.arrival, r.req_id))):
+        shards[i % n_replicas].append(req)
+    return shards
+
+
 def tiny_requests(n: int, *, rate_qps: float = 100.0, prompt_len: int = 16,
                   output_len: int = 8, seed: int = 0, vocab: int = 256,
                   alpha: float = 0.9) -> List[Request]:

@@ -1,0 +1,65 @@
+"""Hypothesis property tests for the block manager (optional tier).
+
+Skipped wholesale when hypothesis is not installed; the seeded plain-pytest
+equivalents in tests/test_kv_cache.py keep the invariants covered in tier-1.
+Install via requirements-dev.txt to enable this module.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.kv_cache import BlockManager, OutOfBlocks  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 30)),
+                    min_size=1, max_size=60),
+       seed=st.integers(0, 100))
+def test_invariants_under_random_ops(ops, seed):
+    """I1/I2: refcounts and free list stay consistent under arbitrary op
+    sequences including expansion/contraction."""
+    rng = np.random.default_rng(seed)
+    bm = BlockManager(16, block_size=4)
+    live = {}
+    next_id = 0
+    expanded = False
+    for kind, arg in ops:
+        try:
+            if kind == 0:  # allocate
+                bm.allocate(next_id, arg)
+                live[next_id] = arg
+                next_id += 1
+            elif kind == 1 and live:  # append
+                sid = int(rng.choice(list(live)))
+                bm.append_tokens(sid, arg % 8 + 1)
+            elif kind == 2 and live:  # release
+                sid = int(rng.choice(list(live)))
+                bm.release(sid)
+                del live[sid]
+            elif kind == 3:
+                if not expanded:
+                    bm.expand(4)
+                    expanded = True
+                else:
+                    plan = bm.plan_contraction()
+                    if plan is not None:
+                        bm.commit_contraction(plan)
+                        expanded = False
+        except OutOfBlocks:
+            pass
+        bm.check_invariants()
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens=st.integers(1, 60), block_size=st.integers(1, 8))
+def test_alloc_free_roundtrip(tokens, block_size):
+    """Allocation uses ceil(tokens/block_size) blocks; release recovers all."""
+    bm = BlockManager(64, block_size=block_size)
+    got = bm.allocate(0, tokens)
+    assert len(got) == -(-tokens // block_size)
+    bm.check_invariants()
+    bm.release(0)
+    assert bm.num_free == 64
+    bm.check_invariants()

@@ -65,6 +65,79 @@ def test_switch_cost_discourages_reenable():
     assert ab._eq4(ab.bucket(8), 128, 8) == 2
 
 
+def test_gamma_locked_for_whole_bin():
+    """Within one bin (tau = 1 .. sqrt(H)), select() returns the same arm at
+    every round — direct unit check of the bin-locking mechanism."""
+    pl = NightjarPlanner(5, seed=7)
+    B = 8
+    bin_arms = []
+    current = []
+    for _ in range(1500):
+        st = pl.states.get(pl.bucket(B))
+        if st is not None and st.tau == 1 and current:
+            bin_arms.append(current)
+            current = []
+        current.append(pl.select(B))
+        pl.observe(B, current[-1], 0.02)
+    assert len(bin_arms) > 10
+    for arms in bin_arms:
+        assert len(set(arms)) == 1, arms
+
+
+def test_cswitch_charged_only_on_reenable():
+    """The C_switch penalty enters the loss ONLY on 0 -> gamma>0
+    transitions; staying on (prev_gamma > 0) or staying off is free."""
+    C = 2.0
+    table = CSwitchTable.constant(C)
+    lat = 0.010
+
+    # prev_gamma > 0: observing gamma=2 records the raw latency
+    pl = NightjarPlanner(3, table, seed=0)
+    pl.prev_gamma = 2
+    pl.observe(8, 2, lat)
+    assert pl.stats[(pl.bucket(8), 2)].mean == pytest.approx(lat)
+
+    # prev_gamma == 0 and gamma > 0: loss includes C/gamma
+    pl = NightjarPlanner(3, table, seed=0)
+    pl.prev_gamma = 0
+    pl.observe(8, 2, lat, delta_max=64)
+    assert pl.stats[(pl.bucket(8), 2)].mean == pytest.approx(lat + C / 2)
+
+    # prev_gamma == 0 and gamma == 0: staying off is free
+    pl = NightjarPlanner(3, table, seed=0)
+    pl.prev_gamma = 0
+    pl.observe(8, 0, lat)
+    assert pl.stats[(pl.bucket(8), 0)].mean == pytest.approx(lat)
+
+    # the same asymmetry in the exploitation rule (Eq. 4)
+    pl = NightjarPlanner(3, table, seed=0)
+    for g in range(4):
+        s = pl._arm_stats(pl.bucket(8), g)
+        s.count, s.total = 1, lat * (1 + 0.1 * g)  # gamma=0 slightly best
+    pl.prev_gamma = 3
+    assert pl._eq4(pl.bucket(8), 64, 8) == 0   # no penalty applied
+    pl.prev_gamma = 0
+    assert pl._eq4(pl.bucket(8), 64, 8) == 0   # penalty keeps it at 0
+
+
+def test_per_batch_size_state_isolation():
+    """Observations at one batch bucket never touch another bucket's arm
+    statistics or hierarchy state."""
+    pl = NightjarPlanner(3, seed=0)
+    g = pl.select(2)
+    pl.observe(2, g, 0.01)
+    assert all(b == pl.bucket(2) for (b, _) in pl.stats)
+    assert list(pl.states) == [pl.bucket(2)]
+    snap2 = vars(pl.states[pl.bucket(2)]).copy()
+    g64 = pl.select(64)
+    pl.observe(64, g64, 0.05)
+    # bucket-2 stats and hierarchy state unchanged by the bucket-64 step
+    assert sum(s.count for (b, _), s in pl.stats.items()
+               if b == pl.bucket(2)) == 1
+    assert vars(pl.states[pl.bucket(2)]) == snap2
+    assert pl.bucket(64) in pl.states
+
+
 def test_per_batch_size_contexts_independent():
     pl = NightjarPlanner(3, seed=0)
     # B=2: speculation great; B=64: speculation terrible

@@ -32,6 +32,66 @@ def test_admission_respects_blocks():
     assert len(s.schedule()) == 1
 
 
+def test_admission_blocked_below_watermark():
+    """Admission stops when it would push free blocks under the watermark,
+    even though the allocation itself would fit."""
+    bm = BlockManager(100, 4)
+    s = ContinuousBatchingScheduler(bm, max_batch=64, watermark_frac=0.1)
+    # each request needs 3 blocks (9 tokensized: 8+1 -> 3 blocks of 4)
+    for r in _reqs(40, prompt=8):
+        s.add_request(r)
+    admitted = s.schedule()
+    # watermark = 10 blocks: admissions stop once free - 3 < 10
+    assert 0 < len(admitted) < 40
+    assert bm.num_free >= 10
+    assert bm.num_free - 3 < 10   # the next one WOULD have crossed it
+    assert s.num_waiting == 40 - len(admitted)
+    # with the watermark off, the same state admits more
+    s.watermark_frac = 0.0
+    assert len(s.schedule()) > 0
+
+
+def test_preempt_evicts_youngest_on_out_of_blocks():
+    """When commit_tokens hits OutOfBlocks, the victim is the YOUNGEST
+    running sequence (latest arrival), not the committing one."""
+    bm = BlockManager(9, 4)
+    s = ContinuousBatchingScheduler(bm, max_batch=8, watermark_frac=0.0)
+    for r in _reqs(3, prompt=7):   # 2 blocks each -> 6 used, 3 free
+        s.add_request(r)
+    oldest, middle, youngest = s.schedule()
+    assert youngest.request.arrival > middle.request.arrival
+    # oldest grows by 12 tokens -> needs 3 new blocks, only 3 free: first
+    # append succeeds; keep growing until eviction triggers
+    for _ in range(4):
+        ok = s.commit_tokens(oldest, 4)
+        assert ok   # the committing sequence itself survives
+        if youngest not in s.running:
+            break
+    assert youngest not in s.running          # youngest evicted first
+    assert middle in s.running                # older survivor untouched
+    assert oldest in s.running
+    assert s.waiting[0] is youngest.request   # requeued at the FRONT
+    bm.check_invariants()
+
+
+def test_freed_blocks_reusable_same_step():
+    """Blocks released by finish() are allocatable in the same scheduling
+    step (no deferred reclamation)."""
+    bm = BlockManager(4, 4)
+    s = ContinuousBatchingScheduler(bm, max_batch=8, watermark_frac=0.0)
+    for r in _reqs(2, prompt=7):   # 2 blocks each
+        s.add_request(r)
+    (a, b) = s.schedule()
+    assert bm.num_free == 0
+    s.add_request(_reqs(3, prompt=7)[2])
+    assert s.schedule() == []      # pool exhausted, c cannot enter
+    s.finish(a)                    # frees 2 blocks...
+    admitted = s.schedule()        # ...immediately reusable
+    assert len(admitted) == 1
+    assert bm.num_free == 0
+    bm.check_invariants()
+
+
 def test_preemption_recompute():
     bm = BlockManager(6, 4)
     s = ContinuousBatchingScheduler(bm, max_batch=4, watermark_frac=0.0)

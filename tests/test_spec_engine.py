@@ -24,6 +24,8 @@ def _apis(arch):
     return registry.get_model(cfg), registry.get_model(dcfg)
 
 
+@pytest.mark.slow
+@pytest.mark.real_backend
 @pytest.mark.parametrize("arch", ["deepseek-7b", "mamba2-780m"])
 def test_spec_step_greedy_equals_ar(arch):
     """Greedy speculative decoding must emit exactly the AR greedy sequence,
@@ -71,6 +73,8 @@ def test_spec_step_greedy_equals_ar(arch):
         assert spec_stream[:n] == list(ar_seq[b, :n]), f"seq {b} diverged"
 
 
+@pytest.mark.slow
+@pytest.mark.real_backend
 def test_spec_caches_stay_synced():
     target, draft = _apis("deepseek-7b")
     tparams = target.init(jax.random.PRNGKey(0))
@@ -90,6 +94,8 @@ def test_spec_caches_stay_synced():
                                       np.asarray(dc["length"]))
 
 
+@pytest.mark.slow
+@pytest.mark.real_backend
 def test_engine_lossless_across_policies():
     """End-to-end: greedy token streams identical under AR / fixed-gamma /
     Nightjar scheduling."""

@@ -1,0 +1,69 @@
+"""Hypothesis property tests for rejection-sampling verification (optional).
+
+Skipped wholesale when hypothesis is not installed; the seeded parametrized
+equivalents in tests/test_verify.py keep the invariants covered in tier-1.
+Install via requirements-dev.txt to enable this module.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.verify import verify_rejection  # noqa: E402
+
+
+def _dist(rng, V, temp):
+    x = rng.normal(size=V) * temp
+    e = np.exp(x - x.max())
+    return e / e.sum()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), vocab=st.integers(2, 6),
+       temp=st.floats(0.3, 3.0))
+def test_first_position_distribution_preserved(seed, vocab, temp):
+    """Empirical distribution of the first committed token ~= target p."""
+    rng = np.random.default_rng(seed)
+    p = _dist(rng, vocab, temp)
+    q = _dist(rng, vocab, temp * 2)
+
+    N = 20_000
+    g = 1
+    key = jax.random.PRNGKey(seed)
+    kd, kv = jax.random.split(key)
+    draft_tokens = jax.random.categorical(
+        kd, jnp.log(jnp.asarray(q))[None, :].repeat(N, 0))[:, None]
+    draft_probs = jnp.broadcast_to(jnp.asarray(q), (N, g, vocab))
+    target_probs = jnp.broadcast_to(jnp.asarray(p), (N, g + 1, vocab))
+
+    res = verify_rejection(kv, draft_tokens, draft_probs, target_probs)
+    first = np.asarray(res["tokens"][:, 0])
+    emp = np.bincount(first, minlength=vocab) / N
+    assert np.max(np.abs(emp - p)) < 0.02, (emp, p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), vocab=st.integers(2, 8),
+       g=st.integers(1, 4))
+def test_committed_structure_invariants(seed, vocab, g):
+    """n_accepted in [0, g]; committed = accepted prefix + 1 sampled token;
+    padding is -1 beyond n_accepted+1."""
+    rng = np.random.default_rng(seed)
+    B = 16
+    key = jax.random.PRNGKey(seed)
+    draft_tokens = jnp.asarray(rng.integers(0, vocab, size=(B, g)))
+    dp = rng.dirichlet(np.ones(vocab), size=(B, g))
+    tp = rng.dirichlet(np.ones(vocab), size=(B, g + 1))
+    res = verify_rejection(key, draft_tokens, jnp.asarray(dp), jnp.asarray(tp))
+    n = np.asarray(res["n_accepted"])
+    toks = np.asarray(res["tokens"])
+    assert ((0 <= n) & (n <= g)).all()
+    for b in range(B):
+        assert (toks[b, :n[b]] == np.asarray(draft_tokens)[b, :n[b]]).all()
+        assert toks[b, n[b]] >= 0
+        assert (toks[b, n[b] + 1:] == -1).all()
+        assert toks[b, n[b]] == int(res["next_token"][b])
