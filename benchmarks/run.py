@@ -187,6 +187,37 @@ def fig15_fixed_vs_adaptive(csv: CSV, fast: bool):
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill hybrid batching: monolithic vs chunked tail latency
+# ---------------------------------------------------------------------------
+
+
+def prefill_hybrid(csv: CSV, fast: bool):
+    """Monolithic vs chunked prefill at {low,high} arrival rate.
+
+    The high-rate cell is the paper's dynamic-load, compute-bound regime:
+    monolithic admission prefills whole prompt batches in one call and every
+    running sequence stalls behind them (head-of-line blocking), which shows
+    up as p99 TTFT / SLO-goodput — exactly the tail the chunked token-budget
+    scheduler is built to fix.  Reports p50/p99 TTFT, SLO attainment and
+    goodput for each cell."""
+    chunk = 256
+    cells = (("low", 8), ("high", 80))
+    for label, rate in cells:
+        n = max(int(rate * (2 if fast else 5)), 30)
+        for mode, ct in (("monolithic", 0), (f"chunk{chunk}", chunk)):
+            t0 = time.perf_counter()
+            m, _ = run_serving("7b", "nightjar", rate=rate, n=n,
+                               dataset="alpaca", chunk_tokens=ct)
+            csv.add(f"prefill.{label}.{mode}",
+                    (time.perf_counter() - t0) * 1e6,
+                    f"p50_ttft={m.ttft_percentile(0.5)*1e3:.0f}ms;"
+                    f"p99_ttft={m.ttft_percentile(0.99)*1e3:.0f}ms;"
+                    f"slo_att={m.slo_attainment:.3f};"
+                    f"goodput={m.goodput:.1f}tok/s;"
+                    f"throughput={m.throughput:.1f}tok/s")
+
+
+# ---------------------------------------------------------------------------
 # Cluster tier: replica-count x arrival-rate grid (the fleet scenario)
 # ---------------------------------------------------------------------------
 
@@ -442,6 +473,7 @@ BENCHES = {
     "fig13": fig13_offload,
     "fig14": fig14_threshold,
     "fig15": fig15_fixed_vs_adaptive,
+    "prefill": prefill_hybrid,
     "cluster": cluster_sweep,
     "routers": cluster_routers,
     "table3": table3_cswitch,

@@ -11,6 +11,10 @@ Multi-replica cluster on the simulated tier (per-replica planners behind a
 router; --rate is the TOTAL arrival rate across the fleet):
   PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
       --replicas 4 --router jsq --rate 80 --requests 800
+
+Chunked-prefill hybrid batching with a 0.5s TTFT SLO (tail-latency regime):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --rate 30 --requests 600 --chunk-tokens 256 --slo 0.5
 """
 from __future__ import annotations
 
@@ -28,6 +32,12 @@ def main():
     ap.add_argument("--dataset", default="sharegpt")
     ap.add_argument("--gamma-max", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="sim tier: per-step prefill token budget for "
+                         "chunked-prefill hybrid batching (0 = monolithic)")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="TTFT deadline in seconds for SLO-attainment/"
+                         "goodput (default: per-dataset; <=0 disables)")
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1,
@@ -49,9 +59,11 @@ def main():
             target=configs.get_config(args.arch),
             draft=configs.get_draft_config(args.arch),
             hw=TPU_V5E, gamma_max=args.gamma_max, max_batch=args.max_batch,
+            chunk_tokens=args.chunk_tokens,
             enable_offload=not args.no_offload, seed=args.seed)
         reqs = poisson_requests(args.rate, args.requests,
-                                dataset=args.dataset, seed=args.seed + 1)
+                                dataset=args.dataset, seed=args.seed + 1,
+                                slo=args.slo)
         if args.replicas > 1:
             cluster = build_sim_cluster(cfg, args.replicas, args.policy,
                                         router=args.router)

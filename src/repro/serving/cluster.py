@@ -34,7 +34,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 from .engine import ServingEngine
-from .request import Metrics, Request
+from .request import (Metrics, Request, RequestStats, goodput_of, percentile,
+                      slo_attainment_of)
 from .router import Router
 
 
@@ -72,6 +73,30 @@ class ClusterMetrics:
         t = self.ttfts
         return sum(t) / len(t) if t else 0.0
 
+    @property
+    def requests(self) -> List[RequestStats]:
+        return [r for m in self.per_replica for r in m.requests]
+
+    def ttft_percentile(self, q: float) -> float:
+        reqs = self.requests
+        return percentile([r.ttft for r in reqs] or self.ttfts, q)
+
+    def tpot_percentile(self, q: float) -> float:
+        return percentile([r.tpot for r in self.requests], q)
+
+    @property
+    def p99_ttft(self) -> float:
+        return self.ttft_percentile(0.99)
+
+    @property
+    def slo_attainment(self) -> float:
+        return slo_attainment_of(self.requests)
+
+    @property
+    def goodput(self) -> float:
+        """Fleet tokens/s from requests that met their TTFT SLO."""
+        return goodput_of(self.requests, self.elapsed, self.throughput)
+
     def replica_counts(self) -> List[int]:
         """Requests routed to each replica."""
         n = len(self.per_replica)
@@ -86,6 +111,13 @@ class ClusterMetrics:
             "throughput_tok_s": round(self.throughput, 2),
             "mean_latency_s": round(self.mean_latency, 4),
             "mean_ttft_s": round(self.mean_ttft, 4),
+            "p50_ttft_s": round(self.ttft_percentile(0.50), 4),
+            "p95_ttft_s": round(self.ttft_percentile(0.95), 4),
+            "p99_ttft_s": round(self.ttft_percentile(0.99), 4),
+            "p50_tpot_s": round(self.tpot_percentile(0.50), 5),
+            "p99_tpot_s": round(self.tpot_percentile(0.99), 5),
+            "slo_attainment": round(self.slo_attainment, 4),
+            "goodput_tok_s": round(self.goodput, 2),
             "total_tokens": self.total_tokens,
             "elapsed_s": round(self.elapsed, 3),
             "per_replica_tok_s": [round(m.throughput, 2)

@@ -104,6 +104,35 @@ class RooflineCostModel:
         t_mem = mem / (self.hw.hbm_bw * self.bwu * chips)
         return max(t_compute, t_mem) + self.hw.step_overhead
 
+    def hybrid_step_latency(self, cfg: ModelConfig, prefill_tokens: int,
+                            batch: int, ctx: int, n_tokens: int = 1,
+                            prefill_ctx: int | None = None) -> float:
+        """One fused forward over a mixed batch: ``batch * n_tokens`` decode
+        positions plus ``prefill_tokens`` prompt-chunk positions whose
+        prefixes reach ``prefill_ctx`` tokens (defaults to ``ctx``).
+
+        The chunk shares the single weight-read pass with the decode batch —
+        this is the chunked-prefill payoff: in the memory-bound (small-batch)
+        regime the chunk's marginal cost is almost pure FLOPs, instead of a
+        whole extra weight pass per monolithic prefill call."""
+        total, active = self._params(cfg)
+        pctx = prefill_ctx if prefill_ctx is not None else ctx
+        toks = batch * n_tokens + prefill_tokens
+        flops = 2.0 * active * toks
+        if cfg.num_heads:
+            hd = cfg.num_heads * cfg.resolved_head_dim
+            # decode positions attend to the full KV cache
+            flops += 2.0 * 2.0 * batch * n_tokens * ctx * hd
+            # chunk positions attend causally to their own prefix
+            flops += 2.0 * 2.0 * prefill_tokens * pctx * hd / 2.0
+        mem = (self.weight_bytes(cfg)
+               + batch * ctx * kv_bytes_per_token(cfg, self.dtype_bytes)
+               + toks * cfg.d_model * self.dtype_bytes * 8)
+        chips = max(self.hw.chips, 1)
+        t_compute = flops / (self.hw.peak_flops * self.mfu * chips)
+        t_mem = mem / (self.hw.hbm_bw * self.bwu * chips)
+        return max(t_compute, t_mem) + self.hw.step_overhead
+
     # ------------------------------------------------------------------
     def ar_step_latency(self, target: ModelConfig, batch: int, ctx: int) -> float:
         return self.decode_latency(target, batch, ctx, 1)

@@ -52,6 +52,9 @@ class Backend(Protocol):
     def step(self, seqs: List[Sequence], gamma: int
              ) -> "StepOutcome": ...
 
+    def hybrid_step(self, chunks, decode: List[Sequence], gamma: int,
+                    *, with_draft: bool) -> "StepOutcome": ...
+
     def draft_catchup(self, seqs: List[Sequence]) -> float: ...
 
     def release(self, seq: Sequence) -> None: ...
@@ -76,6 +79,7 @@ class StepReport:
     tokens: int = 0          # committed tokens
     admitted: int = 0        # sequences admitted (prefilled) this step
     finished: int = 0        # sequences that completed this step
+    prefill_tokens: int = 0  # prompt tokens prefilled (chunked mode)
 
 
 class ServingEngine:
@@ -136,16 +140,61 @@ class ServingEngine:
         return None
 
     # ------------------------------------------------------------------
+    # pieces shared by the monolithic and hybrid step paths
+    # ------------------------------------------------------------------
+    def _drain_arrivals(self) -> None:
+        while self._pending and self._pending[0][0] <= self.clock:
+            self.scheduler.add_request(heapq.heappop(self._pending)[2])
+
+    def _commit_decode(self, seqs: Seq[Sequence], n_committed: Seq[int],
+                       gamma: int) -> int:
+        """Commit per-sequence decode tokens; returns sequences finished."""
+        m = self.metrics
+        finished = 0
+        for s, n in zip(seqs, n_committed):
+            if n <= 0 or s not in self.scheduler.running:
+                continue  # finished slot or preempted by an earlier commit
+            if s.first_token_at is None:
+                s.first_token_at = self.clock
+                m.ttfts.append(self.clock - s.request.arrival)
+            ok = self.scheduler.commit_tokens(s, int(n))
+            if not ok:
+                continue  # preempted; will re-run from the queue
+            if gamma == 0:
+                s.delta += int(n)  # draft cache falls behind
+            if s.done:
+                s.finished_at = self.clock
+                m.latencies.append(self.clock - s.request.arrival)
+                m.record_finish(s, self.clock)
+                self.scheduler.finish(s)
+                self.backend.release(s)
+                finished += 1
+        return finished
+
+    def _record_timeline(self, B: int, gamma: int, tokens: int,
+                         latency: float, draft_ok: bool,
+                         prefill_tokens: int = 0) -> None:
+        self.metrics.timeline.append({
+            "t": self.clock, "B": B, "gamma": gamma,
+            "tokens": tokens, "latency": latency,
+            "prefill_tokens": prefill_tokens,
+            "free_blocks": self.scheduler.bm.num_free,
+            "draft_resident": draft_ok,
+            "waiting": self.scheduler.num_waiting,
+        })
+
+    # ------------------------------------------------------------------
     def step(self, now: Optional[float] = None) -> Optional[StepReport]:
         """Advance the engine by one iteration of the Figure-4 loop."""
+        if self.scheduler.chunk_tokens is not None:
+            return self._step_hybrid(now)
         if now is not None and now > self.clock:
             self.clock = now
         m = self.metrics
         t_start = self.clock
 
         # 1. arrivals up to now
-        while self._pending and self._pending[0][0] <= self.clock:
-            self.scheduler.add_request(heapq.heappop(self._pending)[2])
+        self._drain_arrivals()
 
         draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
 
@@ -197,24 +246,7 @@ class ServingEngine:
         self.clock += out.latency
         total_committed = int(sum(out.n_committed))
 
-        finished = 0
-        for s, n in zip(running, out.n_committed):
-            if n <= 0 or s not in self.scheduler.running:
-                continue  # finished slot or preempted by an earlier commit
-            if s.first_token_at is None:
-                s.first_token_at = self.clock
-                m.ttfts.append(self.clock - s.request.arrival)
-            ok = self.scheduler.commit_tokens(s, int(n))
-            if not ok:
-                continue  # preempted; will re-run from the queue
-            if gamma == 0:
-                s.delta += int(n)  # draft cache falls behind
-            if s.done:
-                s.finished_at = self.clock
-                m.latencies.append(self.clock - s.request.arrival)
-                self.scheduler.finish(s)
-                self.backend.release(s)
-                finished += 1
+        finished = self._commit_decode(running, out.n_committed, gamma)
 
         m.total_tokens += total_committed
         if total_committed > 0 and draft_ok:
@@ -224,19 +256,103 @@ class ServingEngine:
                                 if gamma else None,
                                 delta_max=delta_max)
         if self.record_timeline:
-            m.timeline.append({
-                "t": self.clock, "B": B, "gamma": gamma,
-                "tokens": total_committed, "latency": out.latency,
-                "free_blocks": self.scheduler.bm.num_free,
-                "draft_resident": draft_ok,
-                "waiting": self.scheduler.num_waiting,
-            })
+            self._record_timeline(B, gamma, total_committed, out.latency,
+                                  draft_ok)
         if gamma != self.prev_gamma_effective:
             m.switch_count += 1
         self.prev_gamma_effective = gamma
         return StepReport("decode", t_start, self.clock, batch=B, gamma=gamma,
                           tokens=total_committed, admitted=len(admitted),
                           finished=finished)
+
+    # ------------------------------------------------------------------
+    def _step_hybrid(self, now: Optional[float] = None) -> Optional[StepReport]:
+        """One iteration in chunked-prefill hybrid mode: the scheduler emits
+        prefill chunks (token-budgeted) mixed with the decode batch, and one
+        fused backend call executes both.  Speculation is forced off (gamma=0)
+        whenever any chunk is in flight — the draft/verify machinery only runs
+        on pure-decode steps, applied to the decode portion."""
+        if now is not None and now > self.clock:
+            self.clock = now
+        m = self.metrics
+        t_start = self.clock
+
+        # 1. arrivals up to now
+        self._drain_arrivals()
+
+        draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
+
+        batch = self.scheduler.schedule_chunks()
+        if batch.empty:
+            if self._pending:
+                # idle: fast-forward to the next arrival
+                self.clock = max(self.clock, self._pending[0][0])
+                return StepReport("idle", t_start, self.clock)
+            return None
+
+        decode = [s for s in batch.decode]
+        B = len(decode)
+        delta_max = max((s.delta for s in decode), default=0)
+
+        # 2. elastic memory triggers
+        if self.memmgr is not None:
+            self.memmgr.step(
+                self.clock,
+                spec_disabled=(self.prev_gamma_effective == 0),
+                waiting=self.scheduler.num_waiting)
+            draft_ok = self.memmgr.can_speculate(self.clock)
+
+        # 3. arm selection — gamma only ever applies to the decode portion,
+        #    and is forced to 0 while any prefill chunk is in flight
+        if batch.prefill_chunks or not draft_ok or B == 0:
+            gamma = 0
+        else:
+            gamma = self.policy.select(B, delta_max=delta_max)
+
+        # 4. switching cost: draft catch-up prefill (pure-decode steps only)
+        switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
+        if switched_on and any(s.delta > 0 for s in decode):
+            t_catch = self.backend.draft_catchup(decode)
+            self.clock += t_catch
+            for s in decode:
+                s.delta = 0
+
+        # 5. execute the fused step
+        out = self.backend.hybrid_step(batch.prefill_chunks, decode, gamma,
+                                       with_draft=draft_ok)
+        self.clock += out.latency
+        total_committed = int(sum(out.n_committed))
+
+        # chunk progress: blocks were reserved at schedule time
+        for s, n in batch.prefill_chunks:
+            s.prefilled += n
+            if not draft_ok:
+                s.delta += n  # the draft never saw these prompt tokens
+            if s.prompt_remaining == 0:
+                s.prefill_done_at = self.clock
+
+        finished = self._commit_decode(decode, out.n_committed, gamma)
+
+        m.total_tokens += total_committed
+        # the planner only learns from pure-decode steps: mixed-step latency
+        # includes prefill work and would corrupt the latency-per-token signal
+        if (total_committed > 0 and draft_ok and not batch.prefill_chunks):
+            lpt = out.latency / total_committed
+            self.policy.observe(B, gamma, lpt,
+                                n_accepted=(total_committed - B) / max(B, 1)
+                                if gamma else None,
+                                delta_max=delta_max)
+        if self.record_timeline:
+            self._record_timeline(B, gamma, total_committed, out.latency,
+                                  draft_ok,
+                                  prefill_tokens=batch.prefill_tokens)
+        if gamma != self.prev_gamma_effective:
+            m.switch_count += 1
+        self.prev_gamma_effective = gamma
+        return StepReport("decode", t_start, self.clock, batch=B, gamma=gamma,
+                          tokens=total_committed, admitted=len(batch.admitted),
+                          finished=finished,
+                          prefill_tokens=batch.prefill_tokens)
 
     # ------------------------------------------------------------------
     def finalize_metrics(self, start_clock: float = 0.0) -> Metrics:

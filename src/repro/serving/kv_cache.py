@@ -95,6 +95,15 @@ class BlockManager:
         self.lengths[seq_id] = new
         return added
 
+    def grow_to(self, seq_id: int, tokens: int) -> List[int]:
+        """Ensure a sequence's table covers ``tokens`` positions, allocating
+        only the shortfall (chunked prefill reserves per chunk, not per
+        prompt).  No-op when the table already covers the target."""
+        have = self.lengths[seq_id]
+        if tokens <= have:
+            return []
+        return self.append_tokens(seq_id, tokens - have)
+
     def release(self, seq_id: int) -> None:
         for b in self.tables.pop(seq_id, []):
             self.refcount[b] -= 1

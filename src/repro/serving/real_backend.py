@@ -137,6 +137,17 @@ class RealBackend:
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
+    def hybrid_step(self, chunks, decode: List[Sequence], gamma: int,
+                    *, with_draft: bool) -> StepOutcome:
+        """Chunked prefill needs paged (not dense slot) caches on the real
+        tier; until that lands, hybrid mode is simulation-only (ROADMAP
+        open item)."""
+        if chunks:
+            raise NotImplementedError(
+                "chunked prefill is not supported on the real-execution "
+                "backend yet — run with chunk_tokens=0 or the sim tier")
+        return self.step(decode, gamma)
+
     def step(self, seqs: List[Sequence], gamma: int) -> StepOutcome:
         n = len(seqs)
         bucket = min(_bucket(n), self.max_batch)

@@ -13,6 +13,7 @@ class Request:
     output_len: int
     alpha: float = 0.8        # per-token draft-acceptance quality (sim tier)
     prompt_tokens: Optional[List[int]] = None  # real tier
+    slo: Optional[float] = None  # TTFT deadline (s) for goodput accounting
 
 
 @dataclass
@@ -22,6 +23,8 @@ class Sequence:
     request: Request
     slot: int = -1
     generated: int = 0
+    prefilled: int = 0        # prompt tokens whose KV is materialised; under
+                              # chunked prefill this grows chunk by chunk
     delta: int = 0            # draft-model skip length (tokens missing from
                               # the draft KV cache) — drives C_switch lookup
     prefill_done_at: float = 0.0
@@ -33,12 +36,64 @@ class Sequence:
         return self.request.req_id
 
     @property
+    def prompt_remaining(self) -> int:
+        """Prompt tokens still awaiting prefill (0 = decode-ready)."""
+        return self.request.prompt_len - self.prefilled
+
+    @property
     def context_len(self) -> int:
         return self.request.prompt_len + self.generated
 
     @property
     def done(self) -> bool:
         return self.generated >= self.request.output_len
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy-free, deterministic)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = (len(s) - 1) * q
+    lo = int(k)
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (k - lo)
+
+
+@dataclass
+class RequestStats:
+    """Per-request record for tail-latency / SLO accounting."""
+
+    req_id: int
+    arrival: float
+    ttft: float               # first-token latency (s)
+    tpot: float               # time per output token after the first (s)
+    tokens: int               # committed output tokens
+    slo: Optional[float]      # TTFT deadline, None = no deadline
+
+    @property
+    def slo_met(self) -> bool:
+        return self.slo is None or self.ttft <= self.slo
+
+
+def slo_attainment_of(requests: List["RequestStats"]) -> float:
+    """Fraction of deadline-carrying requests that met their TTFT SLO
+    (1.0 when no request carries a deadline)."""
+    with_slo = [r for r in requests if r.slo is not None]
+    if not with_slo:
+        return 1.0
+    return sum(r.slo_met for r in with_slo) / len(with_slo)
+
+
+def goodput_of(requests: List["RequestStats"], elapsed: float,
+               throughput: float) -> float:
+    """Tokens/s counting only requests that met their TTFT SLO (AdaSpec-style
+    goodput; falls back to raw throughput when no per-request stats exist)."""
+    if not elapsed:
+        return 0.0
+    if not requests:
+        return throughput
+    return sum(r.tokens for r in requests if r.slo_met) / elapsed
 
 
 @dataclass
@@ -50,9 +105,19 @@ class Metrics:
     latencies: List[float] = field(default_factory=list)   # per-request e2e
     ttfts: List[float] = field(default_factory=list)
     timeline: List[dict] = field(default_factory=list)     # per-step records
+    requests: List[RequestStats] = field(default_factory=list)
     switch_count: int = 0
     offload_events: int = 0
     reload_events: int = 0
+
+    def record_finish(self, seq: Sequence, now: float) -> None:
+        """Stamp a completed sequence into the per-request stats."""
+        first = seq.first_token_at if seq.first_token_at is not None else now
+        ttft = first - seq.request.arrival
+        tpot = (now - first) / max(seq.generated - 1, 1)
+        self.requests.append(RequestStats(
+            req_id=seq.req_id, arrival=seq.request.arrival, ttft=ttft,
+            tpot=tpot, tokens=seq.generated, slo=seq.request.slo))
 
     @property
     def throughput(self) -> float:
@@ -66,11 +131,40 @@ class Metrics:
     def mean_ttft(self) -> float:
         return sum(self.ttfts) / len(self.ttfts) if self.ttfts else 0.0
 
+    @property
+    def tpots(self) -> List[float]:
+        return [r.tpot for r in self.requests]
+
+    def ttft_percentile(self, q: float) -> float:
+        return percentile([r.ttft for r in self.requests] or self.ttfts, q)
+
+    def tpot_percentile(self, q: float) -> float:
+        return percentile(self.tpots, q)
+
+    @property
+    def p99_ttft(self) -> float:
+        return self.ttft_percentile(0.99)
+
+    @property
+    def slo_attainment(self) -> float:
+        return slo_attainment_of(self.requests)
+
+    @property
+    def goodput(self) -> float:
+        return goodput_of(self.requests, self.elapsed, self.throughput)
+
     def summary(self) -> dict:
         return {
             "throughput_tok_s": round(self.throughput, 2),
             "mean_latency_s": round(self.mean_latency, 4),
             "mean_ttft_s": round(self.mean_ttft, 4),
+            "p50_ttft_s": round(self.ttft_percentile(0.50), 4),
+            "p95_ttft_s": round(self.ttft_percentile(0.95), 4),
+            "p99_ttft_s": round(self.ttft_percentile(0.99), 4),
+            "p50_tpot_s": round(self.tpot_percentile(0.50), 5),
+            "p99_tpot_s": round(self.tpot_percentile(0.99), 5),
+            "slo_attainment": round(self.slo_attainment, 4),
+            "goodput_tok_s": round(self.goodput, 2),
             "total_tokens": self.total_tokens,
             "elapsed_s": round(self.elapsed, 3),
             "switches": self.switch_count,

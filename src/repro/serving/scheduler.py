@@ -4,22 +4,69 @@ Admission is gated on paged-KV block availability through the
 :class:`BlockManager`; finished sequences release their blocks at every
 step; over-commit is resolved by preempt-and-recompute of the youngest
 sequence (vLLM's recompute policy).
+
+Two execution regimes:
+
+  * **monolithic** (``chunk_tokens=None``) — ``schedule()`` admits waiting
+    requests whole; the engine prefills the full prompt in one call before
+    any decode work happens.  This is the seed behaviour and stays the
+    default.
+  * **chunked / hybrid** (``chunk_tokens=N``) — ``schedule_chunks()`` emits a
+    :class:`ScheduledBatch` mixing prefill *chunks* (at most ``chunk_tokens``
+    prompt tokens per step, the per-step token budget) with the decode-ready
+    sequences.  A long prompt no longer stalls every running sequence for a
+    whole monolithic prefill: its KV blocks are allocated chunk by chunk and
+    decode proceeds in the same iterations (Sarathi/vLLM-style chunked
+    prefill, the head-of-line fix for p99 TTFT under load).
+
+Scheduling order inside one chunked step is FIFO and progress-guaranteed:
+partially prefilled *running* sequences are continued first (so a sequence
+mid-prefill is never starved by decode-only steps or newer arrivals), then
+the remaining budget admits new requests from the waiting queue.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
 
 from .kv_cache import BlockManager, OutOfBlocks
 from .request import Request, Sequence
 
 
+@dataclass
+class ScheduledBatch:
+    """One hybrid iteration's worth of work.
+
+    ``prefill_chunks`` holds ``(seq, n_tokens)`` pairs — the prompt tokens
+    each sequence prefills this step (KV blocks already reserved).
+    ``decode`` holds the decode-ready sequences (prefill complete).
+    ``admitted`` is the subset of chunk sequences newly admitted this step.
+    """
+
+    prefill_chunks: List[Tuple[Sequence, int]] = field(default_factory=list)
+    decode: List[Sequence] = field(default_factory=list)
+    admitted: List[Sequence] = field(default_factory=list)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(n for _, n in self.prefill_chunks)
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill_chunks and not self.decode
+
+
 class ContinuousBatchingScheduler:
     def __init__(self, block_manager: BlockManager, *, max_batch: int = 64,
-                 watermark_frac: float = 0.02):
+                 watermark_frac: float = 0.02,
+                 chunk_tokens: Optional[int] = None):
+        if chunk_tokens is not None and chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1 (or None)")
         self.bm = block_manager
         self.max_batch = max_batch
         self.watermark_frac = watermark_frac
+        self.chunk_tokens = chunk_tokens
         self.waiting: Deque[Request] = deque()
         self.running: List[Sequence] = []
         self._next_seq = 0
@@ -38,7 +85,8 @@ class ContinuousBatchingScheduler:
 
     # ------------------------------------------------------------------
     def schedule(self) -> List[Sequence]:
-        """Admit waiting requests while blocks + batch slots allow."""
+        """Admit waiting requests while blocks + batch slots allow
+        (monolithic path: blocks for the WHOLE prompt up front)."""
         admitted: List[Sequence] = []
         watermark = int(self.bm.total_blocks * self.watermark_frac)
         while (self.waiting and len(self.running) < self.max_batch):
@@ -49,9 +97,86 @@ class ContinuousBatchingScheduler:
             self.waiting.popleft()
             seq = Sequence(request=req)
             self.bm.allocate(self._seq_key(seq), req.prompt_len + 1)
+            seq.prefilled = req.prompt_len  # engine prefills it whole
             self.running.append(seq)
             admitted.append(seq)
         return admitted
+
+    # ------------------------------------------------------------------
+    def schedule_chunks(self) -> ScheduledBatch:
+        """Build one hybrid step under the per-step token budget.
+
+        Invariants (regression-tested):
+          * sum of emitted chunk tokens never exceeds ``chunk_tokens``;
+          * running sequences mid-prefill are served before new admissions
+            (no starvation by decode-only steps);
+          * block reservation happens here, per chunk — a preempted
+            half-prefilled sequence releases exactly what it reserved.
+        """
+        assert self.chunk_tokens is not None, "scheduler is monolithic"
+        budget = self.chunk_tokens
+        batch = ScheduledBatch()
+        watermark = int(self.bm.total_blocks * self.watermark_frac)
+
+        # 1. continue partially prefilled running sequences, FIFO
+        for s in list(self.running):
+            if budget <= 0:
+                break
+            rem = s.prompt_remaining
+            if rem <= 0:
+                continue
+            n = min(rem, budget)
+            if not self._reserve_chunk(s, n):
+                continue  # s was preempted back to the waiting queue
+            batch.prefill_chunks.append((s, n))
+            budget -= n
+
+        # 2. admit new requests into the remaining budget
+        while (budget > 0 and self.waiting
+               and len(self.running) < self.max_batch):
+            req = self.waiting[0]
+            n = min(req.prompt_len, budget)
+            need = self.bm.blocks_needed(n)
+            if self.bm.num_free - need < watermark:
+                break
+            self.waiting.popleft()
+            seq = Sequence(request=req)
+            self.bm.allocate(self._seq_key(seq), n)
+            self.running.append(seq)
+            batch.admitted.append(seq)
+            batch.prefill_chunks.append((seq, n))
+            budget -= n
+
+        # chunks whose sequence was preempted later in this same pass are
+        # void — drop them by object identity (the same request may have
+        # been re-admitted above as a fresh Sequence under the same key)
+        alive = {id(s) for s in self.running}
+        batch.prefill_chunks = [(s, n) for s, n in batch.prefill_chunks
+                                if id(s) in alive]
+        batch.admitted = [s for s in batch.admitted if id(s) in alive]
+        batch.decode = [s for s in self.running
+                        if s.prompt_remaining == 0 and not s.done]
+        return batch
+
+    def _reserve_chunk(self, seq: Sequence, n: int) -> bool:
+        """Reserve KV blocks for the next ``n`` prompt tokens of ``seq``;
+        on exhaustion evict the youngest other sequence, then ``seq``
+        itself (recompute policy, same as the decode commit path)."""
+        key = self._seq_key(seq)
+        if key not in self.bm.tables:
+            return False
+        target = seq.prefilled + n
+        try:
+            self.bm.grow_to(key, target)
+            return True
+        except OutOfBlocks:
+            self._preempt_youngest(exclude=seq)
+            try:
+                self.bm.grow_to(key, target)
+                return True
+            except OutOfBlocks:
+                self._preempt(seq)
+                return False
 
     def _seq_key(self, seq: Sequence) -> int:
         return seq.req_id
@@ -84,7 +209,9 @@ class ContinuousBatchingScheduler:
         self._preempt(victim)
 
     def _preempt(self, seq: Sequence) -> None:
-        """Recompute policy: release blocks, requeue at the front."""
+        """Recompute policy: release blocks, requeue at the front.  A
+        half-prefilled sequence restarts from scratch — the fresh Sequence
+        built at re-admission has ``prefilled == generated == 0``."""
         self.bm.release(self._seq_key(seq))
         if seq in self.running:
             self.running.remove(seq)

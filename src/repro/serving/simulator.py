@@ -55,6 +55,28 @@ class SimulatedBackend:
             return 0.0
         return self.cm.prefill_latency(self.draft, len(seqs), delta_max)
 
+    def hybrid_step(self, chunks: List, decode: List[Sequence], gamma: int,
+                    *, with_draft: bool) -> StepOutcome:
+        """Mixed batch: prefill chunks fused with the decode batch.
+
+        ``n_committed`` is per DECODE sequence; chunk progress is recorded by
+        the engine.  With no chunks in flight this is exactly ``step`` (same
+        cost, same acceptance draws)."""
+        prefill_tokens = sum(n for _, n in chunks)
+        if prefill_tokens == 0:
+            return self.step(decode, gamma)
+        assert gamma == 0, "speculation is disabled while chunks are in flight"
+        B = len(decode)
+        ctx = self._ctx(decode) if decode else 1
+        prefill_ctx = max((s.prefilled + n for s, n in chunks), default=1)
+        lat = self.cm.hybrid_step_latency(self.target, prefill_tokens, B, ctx,
+                                          prefill_ctx=prefill_ctx)
+        if with_draft:
+            # the draft prefills the same chunk stream to keep its KV current
+            lat += self.cm.prefill_latency(self.draft, 1, prefill_tokens)
+        n = [min(1, s.request.output_len - s.generated) for s in decode]
+        return StepOutcome(n_committed=n, latency=lat)
+
     def step(self, seqs: List[Sequence], gamma: int) -> StepOutcome:
         B = len(seqs)
         ctx = self._ctx(seqs)
@@ -91,6 +113,7 @@ class SimConfig:
     gamma_max: int = 5
     block_size: int = 16
     max_batch: int = 64
+    chunk_tokens: int = 0     # >0: chunked-prefill hybrid batching budget
     tau_low_frac: float = 0.1
     t_persist: int = 3
     enable_offload: bool = True
@@ -108,7 +131,9 @@ def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
                                             reserve_frac=cfg.kv_reserve_frac)
     num_blocks = max(capacity_tokens // cfg.block_size, 64)
     bm = BlockManager(num_blocks, cfg.block_size)
-    sched = ContinuousBatchingScheduler(bm, max_batch=cfg.max_batch)
+    sched = ContinuousBatchingScheduler(
+        bm, max_batch=cfg.max_batch,
+        chunk_tokens=cfg.chunk_tokens if cfg.chunk_tokens > 0 else None)
 
     block_bytes = cfg.block_size * kv_bytes_per_token(cfg.target)
     draft_blocks = max(math.ceil(cm.weight_bytes(cfg.draft) / block_bytes), 1)

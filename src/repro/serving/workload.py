@@ -16,19 +16,30 @@ import numpy as np
 
 from .request import Request
 
-# (prompt mu, prompt sigma, output mu, output sigma, alpha_a, alpha_b)
-# lognormal parameters matched to Figure 8's reported input/output shapes
+# (prompt mu, prompt sigma, output mu, output sigma, alpha_a, alpha_b,
+#  slo_ttft) — lognormal parameters matched to Figure 8's reported
+# input/output shapes; slo_ttft is the per-dataset first-token deadline (s)
+# used for SLO-attainment / goodput accounting (AdaSpec-style serving SLOs:
+# interactive chat gets a tighter deadline than the mixed benchmark).
 DATASETS = {
     # chat: long-ish prompts, medium outputs, moderate acceptance
     "sharegpt": dict(p_mu=5.4, p_sigma=0.9, o_mu=5.2, o_sigma=0.8,
-                     a_a=6.0, a_b=3.0),
+                     a_a=6.0, a_b=3.0, slo_ttft=1.0),
     # instruction: short prompts, short outputs
     "alpaca": dict(p_mu=3.6, p_sigma=0.7, o_mu=4.2, o_sigma=0.8,
-                   a_a=5.0, a_b=3.0),
+                   a_a=5.0, a_b=3.0, slo_ttft=0.5),
     # mixed six-task benchmark: broad spread, hardest for the draft
     "specbench": dict(p_mu=5.0, p_sigma=1.2, o_mu=5.0, o_sigma=1.0,
-                      a_a=4.0, a_b=3.0),
+                      a_a=4.0, a_b=3.0, slo_ttft=1.5),
 }
+
+
+def dataset_slo(dataset: str, slo: "float | None" = None) -> "float | None":
+    """Resolve the TTFT deadline: explicit override (<=0 disables) or the
+    per-dataset default."""
+    if slo is not None:
+        return slo if slo > 0 else None
+    return DATASETS[dataset].get("slo_ttft")
 
 
 def _lengths(rng, mu, sigma, n, lo, hi):
@@ -38,17 +49,19 @@ def _lengths(rng, mu, sigma, n, lo, hi):
 
 def poisson_requests(rate_qps: float, n: int, *, dataset: str = "sharegpt",
                      seed: int = 0, max_prompt: int = 2048,
-                     max_output: int = 1024) -> List[Request]:
+                     max_output: int = 1024,
+                     slo: "float | None" = None) -> List[Request]:
     """Poisson arrivals at a static rate."""
     rng = np.random.default_rng(seed)
     d = DATASETS[dataset]
+    deadline = dataset_slo(dataset, slo)
     gaps = rng.exponential(1.0 / rate_qps, size=n)
     arrivals = np.cumsum(gaps)
     prompts = _lengths(rng, d["p_mu"], d["p_sigma"], n, 4, max_prompt)
     outputs = _lengths(rng, d["o_mu"], d["o_sigma"], n, 4, max_output)
     alphas = rng.beta(d["a_a"], d["a_b"], size=n)
     return [Request(i, float(arrivals[i]), int(prompts[i]), int(outputs[i]),
-                    float(alphas[i])) for i in range(n)]
+                    float(alphas[i]), slo=deadline) for i in range(n)]
 
 
 def dynamic_rate_trace(duration_s: float = 120.0, *, low: float = 2.0,
@@ -79,10 +92,12 @@ class RateTrace:
 
     def sample_requests(self, n: int, *, dataset: str = "sharegpt",
                         seed: int = 0, max_prompt: int = 2048,
-                        max_output: int = 1024) -> List[Request]:
+                        max_output: int = 1024,
+                        slo: "float | None" = None) -> List[Request]:
         """Non-homogeneous Poisson via thinning."""
         rng = np.random.default_rng(seed)
         d = DATASETS[dataset]
+        deadline = dataset_slo(dataset, slo)
         rmax = float(self.rates.max())
         arrivals: List[float] = []
         t = 0.0
@@ -94,7 +109,7 @@ class RateTrace:
         outputs = _lengths(rng, d["o_mu"], d["o_sigma"], n, 4, max_output)
         alphas = rng.beta(d["a_a"], d["a_b"], size=n)
         return [Request(i, arrivals[i], int(prompts[i]), int(outputs[i]),
-                        float(alphas[i])) for i in range(n)]
+                        float(alphas[i]), slo=deadline) for i in range(n)]
 
 
 def split_requests(requests: List[Request], n_replicas: int

@@ -1,0 +1,44 @@
+"""Benchmark-harness smoke: the prefill grid and the table renderer run
+end-to-end under tier-1, so the bench entrypoints can't silently rot."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", *args], cwd=ROOT, env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+def test_prefill_grid_end_to_end():
+    res = _run("benchmarks.run", "--only", "prefill", "--fast")
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = [l for l in res.stdout.splitlines() if l.startswith("prefill.")]
+    # {low,high} x {monolithic,chunked} grid, CSV contract respected
+    assert len(rows) == 4
+    names = {r.split(",")[0] for r in rows}
+    assert names == {"prefill.low.monolithic", "prefill.low.chunk256",
+                     "prefill.high.monolithic", "prefill.high.chunk256"}
+    for row in rows:
+        assert "p99_ttft=" in row and "goodput=" in row
+
+    def p99(name):
+        row = next(r for r in rows if r.startswith(name + ","))
+        field = next(f for f in row.split(";") if "p99_ttft=" in f)
+        return float(field.split("p99_ttft=")[1].rstrip("ms"))
+
+    # the headline result: chunked prefill cuts the tail at the high-rate
+    # (compute-bound, head-of-line-blocked) point
+    assert p99("prefill.high.chunk256") < p99("prefill.high.monolithic")
+
+
+def test_make_tables_end_to_end():
+    res = _run("benchmarks.make_tables")
+    assert res.returncode == 0, res.stderr[-2000:]
+    # with or without dry-run artifacts present it must report each file
+    assert "dryrun_single_pod.json" in res.stdout

@@ -1,0 +1,127 @@
+"""Workload generation: seed determinism, length-distribution sanity,
+dynamic-rate trace shape, per-dataset SLO attachment."""
+import numpy as np
+import pytest
+
+from repro.serving.workload import (DATASETS, dataset_slo,
+                                    dynamic_rate_trace, poisson_requests,
+                                    split_requests, tiny_requests)
+
+
+def _fields(reqs):
+    return [(r.req_id, r.arrival, r.prompt_len, r.output_len, r.alpha, r.slo)
+            for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# seed determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dataset", sorted(DATASETS))
+def test_poisson_requests_seed_deterministic(dataset):
+    a = poisson_requests(12.0, 80, dataset=dataset, seed=7)
+    b = poisson_requests(12.0, 80, dataset=dataset, seed=7)
+    assert _fields(a) == _fields(b)
+    c = poisson_requests(12.0, 80, dataset=dataset, seed=8)
+    assert _fields(a) != _fields(c)
+
+
+def test_split_requests_seed_deterministic():
+    reqs = poisson_requests(10, 50, dataset="sharegpt", seed=3)
+    a = split_requests(reqs, 4)
+    b = split_requests(poisson_requests(10, 50, dataset="sharegpt", seed=3), 4)
+    assert [[r.req_id for r in s] for s in a] == \
+           [[r.req_id for r in s] for s in b]
+    # every request lands in exactly one shard, shard sizes differ by <= 1
+    ids = sorted(r.req_id for s in a for r in s)
+    assert ids == sorted(r.req_id for r in reqs)
+    sizes = [len(s) for s in a]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_tiny_requests_deterministic():
+    a = tiny_requests(8, seed=5)
+    b = tiny_requests(8, seed=5)
+    assert _fields(a) == _fields(b)
+    assert [r.prompt_tokens for r in a] == [r.prompt_tokens for r in b]
+
+
+# ---------------------------------------------------------------------------
+# length-distribution sanity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dataset", sorted(DATASETS))
+def test_length_distribution_bounds(dataset):
+    reqs = poisson_requests(20.0, 300, dataset=dataset, seed=0,
+                            max_prompt=512, max_output=256)
+    for r in reqs:
+        assert 4 <= r.prompt_len <= 512      # clipping bounds respected
+        assert 4 <= r.output_len <= 256
+        assert 0.0 < r.alpha < 1.0           # Beta acceptance in (0,1)
+    # the clip must not collapse the distribution to a point
+    assert len({r.prompt_len for r in reqs}) > 10
+    assert len({r.output_len for r in reqs}) > 10
+
+
+def test_arrivals_sorted_and_rate_scaled():
+    reqs = poisson_requests(50.0, 400, dataset="alpaca", seed=2)
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    assert arr[0] > 0.0
+    # 400 arrivals at 50 qps span roughly 8s (Poisson, generous bounds)
+    assert 4.0 < arr[-1] < 16.0
+
+
+# ---------------------------------------------------------------------------
+# per-dataset SLO
+# ---------------------------------------------------------------------------
+
+
+def test_slo_attached_per_dataset():
+    for ds, d in DATASETS.items():
+        reqs = poisson_requests(10, 20, dataset=ds, seed=0)
+        assert all(r.slo == d["slo_ttft"] for r in reqs)
+
+
+def test_slo_override_and_disable():
+    assert dataset_slo("sharegpt") == DATASETS["sharegpt"]["slo_ttft"]
+    assert dataset_slo("sharegpt", 0.25) == 0.25
+    assert dataset_slo("sharegpt", 0.0) is None     # <=0 disables
+    reqs = poisson_requests(10, 10, dataset="alpaca", seed=0, slo=2.0)
+    assert all(r.slo == 2.0 for r in reqs)
+    reqs = poisson_requests(10, 10, dataset="alpaca", seed=0, slo=-1.0)
+    assert all(r.slo is None for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# dynamic-rate trace
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_rate_trace_shape():
+    trace = dynamic_rate_trace(duration_s=120.0, low=2.0, high=30.0,
+                               period_s=40.0, seed=0)
+    # sampled every period/8 seconds over the duration
+    assert len(trace.times) == len(trace.rates) == 24
+    assert list(trace.times) == sorted(trace.times)
+    # rates stay inside the jittered [0.8*low, 1.2*high] envelope
+    assert trace.rates.min() >= 0.8 * 2.0
+    assert trace.rates.max() <= 1.2 * 30.0
+    # both phases are represented
+    assert trace.rates.min() < 2.0 * 1.2 < trace.rates.max()
+    # rate_at is piecewise-constant lookup incl. before-first-knot clamping
+    assert trace.rate_at(-1.0) == trace.rates[0]
+    assert trace.rate_at(1e9) == trace.rates[-1]
+
+
+def test_dynamic_trace_sampling_deterministic():
+    trace = dynamic_rate_trace(duration_s=60.0, seed=4)
+    a = trace.sample_requests(50, dataset="specbench", seed=9)
+    b = trace.sample_requests(50, dataset="specbench", seed=9)
+    assert _fields(a) == _fields(b)
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr)
+    assert len(a) == 50
+    assert all(r.slo == DATASETS["specbench"]["slo_ttft"] for r in a)
