@@ -199,8 +199,10 @@ def prefill_hybrid(csv: CSV, fast: bool):
     running sequence stalls behind them (head-of-line blocking), which shows
     up as p99 TTFT / SLO-goodput — exactly the tail the chunked token-budget
     scheduler is built to fix.  Reports p50/p99 TTFT, SLO attainment and
-    goodput for each cell."""
-    chunk = 256
+    goodput for each cell.  The budget is TOTAL step tokens (Sarathi
+    decode-token accounting): 384 = ~128 decode slots at saturation plus a
+    256-token prefill share."""
+    chunk = 384
     cells = (("low", 8), ("high", 80))
     for label, rate in cells:
         n = max(int(rate * (2 if fast else 5)), 30)
@@ -289,6 +291,96 @@ def cluster_routers(csv: CSV, fast: bool):
                 f"throughput={m.throughput:.1f}tok/s;"
                 f"mean_latency={m.mean_latency:.2f}s;"
                 f"balance={'/'.join(map(str, m.replica_counts()))}")
+
+
+# ---------------------------------------------------------------------------
+# Backend grid: dense slot caches vs the paged-KV runtime (REAL execution)
+# ---------------------------------------------------------------------------
+
+
+def backend_grid(csv: CSV, fast: bool):
+    """Dense-slot vs paged-KV real backends on actual JAX execution:
+    prefill / decode / verify step latency (wall clock, post-compile) and
+    the max admissible batch at a fixed HBM KV budget (dense reserves
+    max_seq tokens per slot; paged admits by actual context through the
+    BlockManager).  Persists the grid to BENCH_backend.json."""
+    from repro.serving.kv_cache import BlockManager, OutOfBlocks
+    from repro.serving.real_backend import DenseSlotBackend, RealBackend
+    from repro.serving.request import Request, Sequence
+
+    cfg = configs.reduced(configs.get_config("deepseek-7b")).replace(
+        dtype="float32")
+    dcfg = configs.reduced(configs.get_draft_config("deepseek-7b")).replace(
+        dtype="float32")
+    target, draft = registry.get_model(cfg), registry.get_model(dcfg)
+
+    B = 2 if fast else 4
+    P = 16            # prompt tokens
+    max_seq = 128     # dense per-slot reservation
+    block_size = 8
+    rng = np.random.default_rng(0)
+    results = {"batch": B, "prompt": P, "max_seq": max_seq,
+               "block_size": block_size, "grid": {}}
+
+    def mkseqs(base):
+        return [Sequence(request=Request(
+            base + i, 0.0, P, 64,
+            prompt_tokens=[int(x) for x in rng.integers(0, cfg.vocab_size, P)]))
+            for i in range(B)]
+
+    for mode in ("dense", "paged"):
+        if mode == "dense":
+            be = DenseSlotBackend(target, draft, max_batch=B,
+                                  max_seq=max_seq, seed=0)
+        else:
+            bm = BlockManager(max(B * max_seq // block_size, 64), block_size)
+            be = RealBackend(target, draft, max_batch=B, max_seq=max_seq,
+                             seed=0, block_manager=bm)
+        warm = mkseqs(100)
+        be.prefill(warm, with_draft=True)      # compile
+        for s in warm:
+            be.release(s)
+        seqs = mkseqs(0)
+        t0 = time.perf_counter()
+        be.prefill(seqs, with_draft=True)
+        t_pref = time.perf_counter() - t0
+        be.step(seqs, 0)                        # compile AR
+        be.step(seqs, 2)                        # compile spec
+        _, t_dec = timed(lambda: be.step(seqs, 0), repeat=3 if fast else 5)
+        _, t_ver = timed(lambda: be.step(seqs, 2), repeat=3 if fast else 5)
+        row = {"prefill_s": t_pref, "decode_step_s": t_dec,
+               "verify_step_s": t_ver}
+        results["grid"][mode] = row
+        csv.add(f"backend.{mode}.prefill", t_pref * 1e6,
+                f"batch={B};prompt={P}")
+        csv.add(f"backend.{mode}.decode", t_dec * 1e6, f"batch={B}")
+        csv.add(f"backend.{mode}.verify", t_ver * 1e6, f"batch={B};gamma=2")
+
+    # max admissible batch at a fixed KV budget: the paged pool admits by
+    # ACTUAL context (prompt + a 32-token decode horizon) while dense must
+    # reserve max_seq tokens per slot up front
+    budget_tokens = 2048
+    n_dense = budget_tokens // max_seq
+    bm = BlockManager(budget_tokens // block_size, block_size)
+    n_paged = 0
+    try:
+        while True:
+            bm.allocate(n_paged, P + 1)
+            bm.append_tokens(n_paged, 32)
+            n_paged += 1
+    except OutOfBlocks:
+        pass
+    results["capacity"] = {"budget_tokens": budget_tokens,
+                           "dense_max_batch": n_dense,
+                           "paged_max_batch": n_paged}
+    csv.add("backend.capacity", 0.0,
+            f"budget_tokens={budget_tokens};dense={n_dense};paged={n_paged};"
+            f"gain={n_paged / max(n_dense, 1):.1f}x")
+
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_backend.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +524,13 @@ def kernel_microbench(csv: CSV, fast: bool):
     csv.add("kernel.paged_attention.b8h16", dt * 1e6,
             f"ctx={maxb*bs}")
 
+    # multi-query extension (speculative verify / chunked-prefill appends)
+    qm = jax.random.normal(key, (B, 4, H, D))
+    _, dt = timed(lambda: ops.paged_attention_op(
+        qm, kp, vp, tables, lengths).block_until_ready(), repeat=5)
+    csv.add("kernel.paged_attention.b8t4h16", dt * 1e6,
+            f"ctx={maxb*bs};T=4")
+
     S = 512 if fast else 1024
     q = jax.random.normal(key, (2, S, 8, 64), jnp.float32)
     k = jax.random.normal(key, (2, S, 8, 64), jnp.float32)
@@ -474,6 +573,7 @@ BENCHES = {
     "fig14": fig14_threshold,
     "fig15": fig15_fixed_vs_adaptive,
     "prefill": prefill_hybrid,
+    "backend": backend_grid,
     "cluster": cluster_sweep,
     "routers": cluster_routers,
     "table3": table3_cswitch,

@@ -25,7 +25,7 @@ def main():
     ap.add_argument("--rate", type=float, default=80.0)
     ap.add_argument("--requests", type=int, default=400)
     ap.add_argument("--dataset", default="alpaca")
-    ap.add_argument("--chunk-tokens", type=int, default=256)
+    ap.add_argument("--chunk-tokens", type=int, default=384)
     args = ap.parse_args()
 
     target = configs.get_config("paper-7b")

@@ -28,8 +28,11 @@ def serve(policy_name: str, reqs):
     dcfg = configs.reduced(configs.get_draft_config("deepseek-7b"))
     target, draft = registry.get_model(cfg), registry.get_model(dcfg)
 
-    backend = RealBackend(target, draft, max_batch=4, max_seq=128, seed=0)
+    # one BlockManager drives BOTH the scheduler's admission decisions and
+    # the backend's physical paged-KV pool (zero-copy block-table indexing)
     bm = BlockManager(num_blocks=256, block_size=8)
+    backend = RealBackend(target, draft, max_batch=4, max_seq=128, seed=0,
+                          block_manager=bm)
     sched = ContinuousBatchingScheduler(bm, max_batch=4)
     policy = make_policy(policy_name, gamma_max=3, seed=0)
     engine = ServingEngine(backend, sched, policy, None, gamma_max=3)

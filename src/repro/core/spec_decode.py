@@ -146,6 +146,93 @@ def make_spec_step(target: ModelAPI, draft: ModelAPI, *, sampling: str = "greedy
     return spec_step
 
 
+def make_paged_spec_step(target: ModelAPI, draft: ModelAPI, *,
+                         sampling: str = "greedy", temperature: float = 1.0):
+    """Speculative step over paged KV pools (zero-copy continuous batching).
+
+    Same chain-draft/verify semantics as :func:`make_spec_step`, but the
+    caches are shared paged pools indexed by per-sequence block tables:
+
+      spec_step(key, tparams, dparams, tpages, dpages, tables, lengths,
+                last_tokens, gamma) -> SpecResult (tcache/dcache = pages)
+
+    ``lengths`` is the per-sequence materialised token count N (the cache
+    holds x_0..x_{N-1}; ``last_tokens`` = x_N is in neither pool).  Both
+    models write the (gamma+1)-token chunk at positions N..N+gamma through
+    the SAME block tables, so rollback is free: the host advances each
+    sequence's length by n_accepted+1 and the stale slots beyond it are
+    never attended (the kernel masks pos <= query position) and are
+    overwritten by the next step's writes at the same positions.  The
+    caller must have grown the tables to cover N + gamma + 1 positions
+    (``BlockManager.ensure_capacity``)."""
+    if not (target.supports_paged and draft.supports_paged):
+        raise NotImplementedError(
+            "paged speculative decoding needs attention-family target and "
+            "draft models (SSM/hybrid state is O(1) — use make_spec_step)")
+
+    def spec_step(key, tparams, dparams, tpages, dpages, tables, lengths,
+                  last_tokens, gamma: int):
+        kd, kv = jax.random.split(key)
+
+        def body(carry, k):
+            dpg, tok, pos = carry
+            logits, dpg = draft.decode_step_paged(dparams, dpg, tok[:, None],
+                                                  tables, pos)
+            lg = logits[:, 0] / temperature
+            if sampling == "greedy":
+                nxt = jnp.argmax(lg, axis=-1)
+            else:
+                nxt = jax.random.categorical(k, lg)
+            return (dpg, nxt, pos + 1), (nxt, jax.nn.softmax(lg, axis=-1))
+
+        keys = jax.random.split(kd, gamma + 1)
+        (dpages, _, _), (toks, probs) = jax.lax.scan(
+            body, (dpages, last_tokens, lengths), keys)
+        draft_tokens = toks[:gamma].T                     # (B, g)
+        draft_probs = jnp.swapaxes(probs[:gamma], 0, 1)   # (B, g, V)
+
+        # target verifies [last, d_1..d_g] in one paged extension pass
+        chunk = jnp.concatenate([last_tokens[:, None], draft_tokens], axis=1)
+        t_logits, tpages = target.decode_step_paged(tparams, tpages, chunk,
+                                                    tables, lengths)
+        t_logits = t_logits / temperature
+
+        if sampling == "greedy":
+            res = verify_greedy(draft_tokens, t_logits)
+        else:
+            res = verify_rejection(kv, draft_tokens, draft_probs,
+                                   jax.nn.softmax(t_logits, -1))
+        n_acc = res["n_accepted"]
+        return SpecResult(
+            tokens=res["tokens"],
+            n_accepted=n_acc,
+            n_committed=n_acc + 1,
+            tcache=tpages,
+            dcache=dpages,
+            last_token=res["next_token"],
+        )
+
+    return spec_step
+
+
+def make_paged_ar_step(target: ModelAPI, *, sampling: str = "greedy",
+                       temperature: float = 1.0):
+    """Plain autoregressive decode step over the paged pool (gamma=0 arm)."""
+
+    def ar_step(key, tparams, tpages, tables, lengths, last_tokens):
+        logits, tpages = target.decode_step_paged(tparams, tpages,
+                                                  last_tokens[:, None],
+                                                  tables, lengths)
+        lg = logits[:, 0] / temperature
+        if sampling == "greedy":
+            nxt = jnp.argmax(lg, axis=-1)
+        else:
+            nxt = jax.random.categorical(key, lg)
+        return nxt, tpages
+
+    return ar_step
+
+
 def make_ar_step(target: ModelAPI, *, sampling: str = "greedy",
                  temperature: float = 1.0):
     """Plain autoregressive decode step (the gamma=0 arm)."""

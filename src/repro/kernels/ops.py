@@ -24,6 +24,8 @@ def migrate_blocks(pool, src, dst, *, use_kernel=False, interpret=True):
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
                        use_kernel=False, interpret=True):
+    """q may be (B, H, D) single-query decode or (B, T, H, D) multi-query
+    (speculative verify / chunked-prefill appends); see ref for masking."""
     if use_kernel:
         return paged_attention.paged_attention(
             q, k_pages, v_pages, block_tables, lengths, interpret=interpret)

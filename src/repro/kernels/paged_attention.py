@@ -1,14 +1,21 @@
-"""Paged decode attention — the TPU analogue of vLLM's PagedAttention kernel.
+"""Paged multi-query attention — the TPU analogue of vLLM's PagedAttention.
 
 One grid cell per (sequence, kv-head); the scalar-prefetched block table
 drives the BlockSpec index map so each sequence's non-contiguous KV blocks
 stream through VMEM.  A running (max, sum) softmax accumulates across the
 sequence's pages — the VMEM working set is one (block_size, head_dim) page
-pair plus the (G, head_dim) query/accumulator tile, independent of context
+pair plus the (T*G, head_dim) query/accumulator tile, independent of context
 length.
 
+The query carries T positions per sequence, so ONE kernel serves all three
+real-backend shapes: plain decode (T=1), speculative verification
+(T=gamma+1), and chunked-prefill appends (T=chunk tokens scattered into
+freshly grown blocks).  ``lengths`` counts the valid tokens INCLUDING the T
+new positions; query t attends to page positions <= lengths - T + t, i.e.
+causally within the extension.
+
 Validated in interpret mode against ref.paged_attention_ref over
-shape/dtype sweeps.
+shape/dtype/T/GQA sweeps with ragged lengths.
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ from .ref import NEG_INF, paged_attention_ref
 
 
 def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_ref, l_ref, acc_ref, *, block_size, pages_per_seq):
+                       m_ref, l_ref, acc_ref, *, block_size, pages_per_seq,
+                       n_queries, group):
     b = pl.program_id(0)
     page = pl.program_id(2)
 
@@ -33,16 +41,20 @@ def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+    q = q_ref[0, 0].astype(jnp.float32)           # (T*G, D)
     k = k_ref[0, 0].astype(jnp.float32)           # (block_size, D)
     v = v_ref[0, 0].astype(jnp.float32)
     D = q.shape[-1]
 
-    s = (q * (D ** -0.5)) @ k.T                   # (G, block_size)
+    s = (q * (D ** -0.5)) @ k.T                   # (T*G, block_size)
     length = lengths_ref[b]
     pos = page * block_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_size), 1)
-    s = jnp.where(pos < length, s, NEG_INF)
+    # row r of the query tile is query t = r // group: it may attend to
+    # every position at or before its own (length - n_queries + t)
+    t = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], 1), 0) // group
+    limit = length - n_queries + t                # (T*G, 1)
+    s = jnp.where(pos <= limit, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -60,44 +72,54 @@ def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     interpret: bool = True):
-    """q: (B, H, D); k/v_pages: (num_blocks, block_size, KH, D);
-    block_tables: (B, max_blocks); lengths: (B,) -> (B, H, D)."""
-    B, H, D = q.shape
+    """q: (B, H, D) or (B, T, H, D); k/v_pages: (num_blocks, block_size,
+    KH, D); block_tables: (B, max_blocks); lengths: (B,) valid tokens
+    including the T new positions -> output of the same rank as q."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, T, H, D = q.shape
     nb, bs, KH, _ = k_pages.shape
     G = H // KH
     pages_per_seq = block_tables.shape[1]
 
-    qg = q.reshape(B, KH, G, D)
+    # query tile rows ordered (t, g): row = t * G + g
+    qg = q.reshape(B, T, KH, G, D).transpose(0, 2, 1, 3, 4).reshape(
+        B, KH, T * G, D)
     # kv pages viewed per head: (num_blocks, KH, block_size, D)
     kp = jnp.swapaxes(k_pages, 1, 2)
     vp = jnp.swapaxes(v_pages, 1, 2)
 
     grid = (B, KH, pages_per_seq)
     kernel = functools.partial(_paged_attn_kernel, block_size=bs,
-                               pages_per_seq=pages_per_seq)
+                               pages_per_seq=pages_per_seq, n_queries=T,
+                               group=G)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # block_tables, lengths
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, p, t_ref, l_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T * G, D),
+                         lambda b, h, p, t_ref, l_ref: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, D),
                          lambda b, h, p, t_ref, l_ref: (t_ref[b, p], h, 0, 0)),
             pl.BlockSpec((1, 1, bs, D),
                          lambda b, h, p, t_ref, l_ref: (t_ref[b, p], h, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
+        out_specs=pl.BlockSpec((1, 1, T * G, D),
                                lambda b, h, p, t_ref, l_ref: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),   # running max
-            pltpu.VMEM((G, 1), jnp.float32),   # running denominator
-            pltpu.VMEM((G, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((T * G, 1), jnp.float32),   # running max
+            pltpu.VMEM((T * G, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((T * G, D), jnp.float32),   # output accumulator
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KH, T * G, D), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qg, kp, vp)
-    return out.reshape(B, H, D)
+    out = out.reshape(B, KH, T, G, D).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(B, T, H, D)
+    return out[:, 0] if squeeze else out

@@ -17,15 +17,24 @@ def migrate_blocks_ref(x, src, dst):
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
-    """Decode attention over paged KV.
+    """Attention of a T-token extension over paged KV.
 
-    q:            (B, H, D)
+    q:            (B, H, D) single-query decode, or (B, T, H, D) multi-query —
+                  one kernel shape serves plain decode (T=1), speculative
+                  verification (T=gamma+1) and chunked-prefill appends
+                  (T=chunk tokens just scattered into freshly grown blocks)
     k/v_pages:    (num_blocks, block_size, KH, D)
     block_tables: (B, max_blocks) int32 (padded with any valid id)
-    lengths:      (B,) valid token counts
-    returns       (B, H, D)
+    lengths:      (B,) valid token counts INCLUDING the T new positions
+                  (whose K/V are already written into the pages); query t
+                  attends to positions <= lengths - T + t, i.e. causally
+                  within the extension
+    returns       same rank as q
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, T, H, D = q.shape
     nb, bs, KH, _ = k_pages.shape
     G = H // KH
     max_blocks = block_tables.shape[1]
@@ -34,13 +43,15 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
     # gather each sequence's KV contiguously
     k = k_pages[block_tables].reshape(B, S, KH, D)
     v = v_pages[block_tables].reshape(B, S, KH, D)
-    qg = q.reshape(B, KH, G, D).astype(jnp.float32) * (D ** -0.5)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
-    mask = jnp.arange(S)[None] < lengths[:, None]
+    qg = q.reshape(B, T, KH, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32))
+    limit = lengths[:, None] - T + jnp.arange(T)[None, :]         # (B, T)
+    mask = jnp.arange(S)[None, None, :] <= limit[:, :, None]      # (B, T, S)
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
-    return out.reshape(B, H, D).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    out = out.reshape(B, T, H, D).astype(q.dtype)
+    return out[:, 0] if squeeze else out
 
 
 def flash_attention_ref(q, k, v, *, causal=True):

@@ -1,6 +1,8 @@
 """Serving entrypoint.
 
-Real execution tier (reduced configs, actual JAX compute):
+Real execution tier (reduced configs, actual JAX compute over the paged-KV
+runtime; --chunk-tokens also works here — chunked prefill runs on real
+execution through RealBackend.hybrid_step):
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --policy nightjar
 
 Analytical paper-scale tier (TPU v5e cost model):
@@ -32,9 +34,11 @@ def main():
     ap.add_argument("--dataset", default="sharegpt")
     ap.add_argument("--gamma-max", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=256)
-    ap.add_argument("--chunk-tokens", type=int, default=0,
-                    help="sim tier: per-step prefill token budget for "
-                         "chunked-prefill hybrid batching (0 = monolithic)")
+    ap.add_argument("--chunk-tokens", default="0",
+                    help="per-step prefill token budget for chunked-prefill "
+                         "hybrid batching (0 = monolithic; 'auto' derives "
+                         "the budget from the roofline compute-bound knee, "
+                         "falling back to 256 without a cost model)")
     ap.add_argument("--slo", type=float, default=None,
                     help="TTFT deadline in seconds for SLO-attainment/"
                          "goodput (default: per-dataset; <=0 disables)")
@@ -50,16 +54,19 @@ def main():
     from .. import configs
 
     if args.tier == "sim":
-        from ..serving.costmodel import TPU_V5E
+        from ..serving.costmodel import RooflineCostModel, TPU_V5E
         from ..serving.simulator import (SimConfig, build_sim_cluster,
                                          build_sim_engine)
         from ..serving.workload import poisson_requests
 
+        target = configs.get_config(args.arch)
+        chunk = RooflineCostModel(TPU_V5E).resolve_chunk_tokens(
+            args.chunk_tokens, target)
         cfg = SimConfig(
-            target=configs.get_config(args.arch),
+            target=target,
             draft=configs.get_draft_config(args.arch),
             hw=TPU_V5E, gamma_max=args.gamma_max, max_batch=args.max_batch,
-            chunk_tokens=args.chunk_tokens,
+            chunk_tokens=chunk,
             enable_offload=not args.no_offload, seed=args.seed)
         reqs = poisson_requests(args.rate, args.requests,
                                 dataset=args.dataset, seed=args.seed + 1,
@@ -74,17 +81,32 @@ def main():
     else:
         from ..core.bandits import make_policy
         from ..models import registry
+        from ..serving.costmodel import RooflineCostModel, TPU_V5E
         from ..serving.engine import ServingEngine
         from ..serving.kv_cache import BlockManager
-        from ..serving.real_backend import RealBackend
+        from ..serving.paged_runtime import num_blocks_for
+        from ..serving.real_backend import make_real_backend
         from ..serving.scheduler import ContinuousBatchingScheduler
         from ..serving.workload import tiny_requests
 
         cfg = configs.reduced(configs.get_config(args.arch))
         dcfg = configs.reduced(configs.get_draft_config(args.arch))
-        backend = RealBackend(registry.get_model(cfg), registry.get_model(dcfg),
-                              max_batch=4, max_seq=256, seed=args.seed)
-        sched = ContinuousBatchingScheduler(BlockManager(512, 8), max_batch=4)
+        target, draft = registry.get_model(cfg), registry.get_model(dcfg)
+        # the real tier has no wall-clock cost model: 'auto' falls back
+        chunk = None
+        if args.chunk_tokens != "0":
+            chunk = 256 if args.chunk_tokens == "auto" else int(args.chunk_tokens)
+        # ONE BlockManager drives both scheduler admission and the physical
+        # paged pool, sized from the roofline HBM budget
+        cm = RooflineCostModel(TPU_V5E)
+        block_size = 8
+        bm = BlockManager(num_blocks_for(cm, cfg, dcfg, block_size,
+                                         max_blocks=1024), block_size)
+        backend = make_real_backend(target, draft, max_batch=4, max_seq=256,
+                                    seed=args.seed, block_manager=bm,
+                                    cost_model=cm)
+        sched = ContinuousBatchingScheduler(bm, max_batch=4,
+                                            chunk_tokens=chunk)
         engine = ServingEngine(backend, sched,
                                make_policy(args.policy, 3, seed=args.seed),
                                None, gamma_max=3)

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,16 @@ class ModelAPI:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # paged-KV serving path (attention families only — SSM state is O(1)):
+    #   init_paged_cache(num_blocks, block_size) -> pages pytree
+    #   decode_step_paged(params, pages, tokens, tables, start[, valid])
+    #     -> (logits, pages)
+    init_paged_cache: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.decode_step_paged is not None
 
 
 def _unembed_table(cfg, params):
@@ -116,6 +126,14 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
             hidden = hidden[:, cfg.num_image_tokens:, :]
         return streamed_xent(cfg, params, hidden, labels), {}
 
+    paged = {}
+    if mod is transformer:
+        paged = {
+            "init_paged_cache": functools.partial(transformer.init_paged_cache,
+                                                  cfg),
+            "decode_step_paged": functools.partial(
+                transformer.decode_step_paged, cfg),
+        }
     return ModelAPI(
         cfg=cfg,
         init=functools.partial(_init, mod, cfg),
@@ -124,6 +142,7 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         init_cache=functools.partial(mod.init_cache, cfg),
         prefill=functools.partial(mod.prefill, cfg),
         decode_step=functools.partial(mod.decode_step, cfg),
+        **paged,
     )
 
 

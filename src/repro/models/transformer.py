@@ -253,6 +253,113 @@ def prefill(cfg, params, batch, max_len: int):
     return unembed(cfg, params, h[:, -1:, :]), cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (real serving backend)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int):
+    """Paged KV pool: (L, num_blocks + 1, block_size, KH, hd).
+
+    The LAST block (index ``num_blocks``) is the write-off ("trash") block:
+    padded batch rows and ragged-chunk tail slots scatter their K/V there so
+    no write can ever touch a live sequence's blocks.  Block tables are
+    padded with the trash id too, which doubles as the "any valid id"
+    padding the attention kernels require."""
+    dt = _dtype(cfg)
+    KH, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    shape = (L, num_blocks + 1, block_size, KH, hd)
+    return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+
+
+def _paged_write(pages, new, tables, positions, valid):
+    """Scatter ``new`` (B, T, KH, hd) into ``pages`` (NB+1, bs, KH, hd) at
+    per-token ``positions`` (B, T) through the block tables; slots where
+    ``valid`` is False are routed to the trash block."""
+    bs = pages.shape[1]
+    maxb = tables.shape[1]
+    idx = jnp.minimum(positions // bs, maxb - 1)
+    blk = jnp.take_along_axis(tables, idx, axis=1)      # (B, T)
+    blk = jnp.where(valid, blk, pages.shape[0] - 1)     # trash for pad slots
+    off = positions % bs
+    return pages.at[blk, off].set(new.astype(pages.dtype))
+
+
+def apply_layer_decode_paged(cfg, layer, h, k_pages, v_pages, tables,
+                             positions, valid, lengths, *, use_kernel=False):
+    """Paged analogue of :func:`apply_layer_decode`: h (B, T, d); pages
+    (NB+1, bs, KH, hd); new K/V are scattered through the block tables
+    first, then every query attends to all paged slots at or before its
+    position (the multi-query paged-attention kernel / its jnp oracle)."""
+    x = apply_norm(cfg, h, layer["ln1"])
+    q, k, v = qkv_project(cfg, layer["attn"], x, positions)
+    k_pages = _paged_write(k_pages, k, tables, positions, valid)
+    v_pages = _paged_write(v_pages, v, tables, positions, valid)
+    if use_kernel:
+        from ..kernels.paged_attention import paged_attention
+        o = paged_attention(q, k_pages, v_pages, tables, lengths,
+                            interpret=True)
+    else:
+        from ..kernels.ref import paged_attention_ref
+        o = paged_attention_ref(q, k_pages, v_pages, tables, lengths)
+    h = h + attn_output(layer["attn"], o.astype(h.dtype))
+    x = apply_norm(cfg, h, layer["ln2"])
+    if cfg.moe_num_experts:
+        y, _aux = apply_moe(cfg, layer["moe"], x,
+                            capacity_factor=max(cfg.moe_capacity_factor, 2.0))
+    else:
+        y = apply_mlp(cfg, layer["mlp"], x)
+    return h + y, k_pages, v_pages
+
+
+def decode_step_paged(cfg, params, pages, tokens, tables, start, valid=None,
+                      *, use_kernel: bool = False):
+    """Extend T tokens per sequence against the paged KV pool.
+
+    One function serves every real-backend shape: plain decode (T=1),
+    speculative verification (T=gamma+1), batched prefill (start=0) and
+    chunked-prefill appends (ragged ``valid``).
+
+    tokens: (B, T) int32; tables: (B, max_blocks) int32 block tables padded
+    with the trash id; start: (B,) tokens already materialised per sequence;
+    valid: (B,) count of real tokens per row (None = all T valid).  Invalid
+    tail slots write their K/V to the trash block and produce garbage logits
+    — callers read logits at index ``valid - 1``.  Returns
+    (logits (B, T, V), pages)."""
+    B, T = tokens.shape
+    positions = start[:, None] + jnp.arange(T)[None, :]            # (B, T)
+    if valid is None:
+        vmask = jnp.ones((B, T), bool)
+    else:
+        vmask = jnp.arange(T)[None, :] < valid[:, None]
+    lengths = start + T
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.pos_embedding == "learned":
+        h = h + params["pos_embed"][positions]
+
+    if cfg.scan_layers:
+        def body(hh, xs):
+            layer, kp, vp = xs
+            hh, kp, vp = apply_layer_decode_paged(
+                cfg, layer, hh, kp, vp, tables, positions, vmask, lengths,
+                use_kernel=use_kernel)
+            return hh, (kp, vp)
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["layers"], pages["k_pages"], pages["v_pages"]))
+        pages = {"k_pages": ks, "v_pages": vs}
+    else:
+        ks_l, vs_l = [], []
+        for i, layer in enumerate(params["layers"]):
+            h, kp, vp = apply_layer_decode_paged(
+                cfg, layer, h, pages["k_pages"][i], pages["v_pages"][i],
+                tables, positions, vmask, lengths, use_kernel=use_kernel)
+            ks_l.append(kp)
+            vs_l.append(vp)
+        pages = {"k_pages": jnp.stack(ks_l), "v_pages": jnp.stack(vs_l)}
+    h = apply_norm(cfg, h, params["final_norm"])
+    return unembed(cfg, params, h), pages
+
+
 def decode_step(cfg, params, cache, tokens, positions=None):
     """Extend by T tokens: tokens (B, T) int32; T=1 is plain decode and
     T=gamma+1 is the speculative-verify extension.  Positions default to a

@@ -104,17 +104,12 @@ class RooflineCostModel:
         t_mem = mem / (self.hw.hbm_bw * self.bwu * chips)
         return max(t_compute, t_mem) + self.hw.step_overhead
 
-    def hybrid_step_latency(self, cfg: ModelConfig, prefill_tokens: int,
-                            batch: int, ctx: int, n_tokens: int = 1,
-                            prefill_ctx: int | None = None) -> float:
-        """One fused forward over a mixed batch: ``batch * n_tokens`` decode
-        positions plus ``prefill_tokens`` prompt-chunk positions whose
-        prefixes reach ``prefill_ctx`` tokens (defaults to ``ctx``).
-
-        The chunk shares the single weight-read pass with the decode batch —
-        this is the chunked-prefill payoff: in the memory-bound (small-batch)
-        regime the chunk's marginal cost is almost pure FLOPs, instead of a
-        whole extra weight pass per monolithic prefill call."""
+    def _hybrid_terms(self, cfg: ModelConfig, prefill_tokens: int,
+                      batch: int, ctx: int, n_tokens: int = 1,
+                      prefill_ctx: int | None = None) -> tuple:
+        """(compute seconds, HBM seconds) of one fused mixed step — the two
+        roofline terms, exposed so the adaptive chunk budget can find their
+        crossover (the compute-bound knee)."""
         total, active = self._params(cfg)
         pctx = prefill_ctx if prefill_ctx is not None else ctx
         toks = batch * n_tokens + prefill_tokens
@@ -131,7 +126,45 @@ class RooflineCostModel:
         chips = max(self.hw.chips, 1)
         t_compute = flops / (self.hw.peak_flops * self.mfu * chips)
         t_mem = mem / (self.hw.hbm_bw * self.bwu * chips)
+        return t_compute, t_mem
+
+    def hybrid_step_latency(self, cfg: ModelConfig, prefill_tokens: int,
+                            batch: int, ctx: int, n_tokens: int = 1,
+                            prefill_ctx: int | None = None) -> float:
+        """One fused forward over a mixed batch: ``batch * n_tokens`` decode
+        positions plus ``prefill_tokens`` prompt-chunk positions whose
+        prefixes reach ``prefill_ctx`` tokens (defaults to ``ctx``).
+
+        The chunk shares the single weight-read pass with the decode batch —
+        this is the chunked-prefill payoff: in the memory-bound (small-batch)
+        regime the chunk's marginal cost is almost pure FLOPs, instead of a
+        whole extra weight pass per monolithic prefill call."""
+        t_compute, t_mem = self._hybrid_terms(cfg, prefill_tokens, batch, ctx,
+                                              n_tokens, prefill_ctx)
         return max(t_compute, t_mem) + self.hw.step_overhead
+
+    def knee_chunk_tokens(self, cfg: ModelConfig, *, batch: int = 0,
+                          ctx: int = 1024, lo: int = 16,
+                          hi: int = 8192) -> int:
+        """Adaptive per-step chunk budget: the largest prefill-token count
+        that keeps the fused mixed step on the memory-bound side of the
+        roofline (compute term <= HBM term).  Up to this knee the chunk
+        rides the weight-read pass almost for free; past it every extra
+        chunk token stretches the step and hurts running sequences' TPOT —
+        exactly the crossover the ROADMAP's adaptive-budget item asks for."""
+        def compute_bound(pt: int) -> bool:
+            t_c, t_m = self._hybrid_terms(cfg, pt, batch, ctx)
+            return t_c > t_m
+
+        if compute_bound(lo):
+            return lo
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if compute_bound(mid):
+                hi = mid - 1
+            else:
+                lo = mid
+        return lo
 
     # ------------------------------------------------------------------
     def ar_step_latency(self, target: ModelConfig, batch: int, ctx: int) -> float:
@@ -150,6 +183,17 @@ class RooflineCostModel:
 
     def reload_latency(self, cfg: ModelConfig) -> float:
         return self.weight_bytes(cfg) / self.hw.host_link_bw
+
+    def resolve_chunk_tokens(self, value, cfg: ModelConfig | None = None,
+                             *, fallback: int = 256) -> int:
+        """CLI helper: ``--chunk-tokens auto`` -> the roofline knee for this
+        hardware/model; a plain integer passes through; ``fallback`` covers
+        the auto case when no model config is available."""
+        if value == "auto":
+            if cfg is None:
+                return fallback
+            return self.knee_chunk_tokens(cfg)
+        return int(value)
 
     def kv_capacity_tokens(self, target: ModelConfig, draft: ModelConfig | None,
                            *, reserve_frac: float = 0.1) -> int:

@@ -7,8 +7,11 @@ The driver couples the four paper components exactly as Figure 4:
 Backends:
   * SimulatedBackend (simulator.py) — analytical roofline latencies; the
     paper-scale tier used by the benchmarks.
-  * RealBackend (real_backend.py)  — actual JAX execution of tiny models;
-    used by tests / examples / C_switch profiling.
+  * RealBackend (real_backend.py)  — actual JAX execution of tiny models
+    over a paged-KV runtime (zero-copy block-table indexing, chunked
+    prefill via hybrid_step); used by tests / examples / C_switch
+    profiling.  DenseSlotBackend is the legacy dense slot-cache tier for
+    O(1)-state families.
 
 Both tiers run the SAME scheduler / planner / memory-manager objects — only
 the latency source differs (DESIGN.md §7).
@@ -171,6 +174,26 @@ class ServingEngine:
                 finished += 1
         return finished
 
+    def _reserve_kv(self, seqs: List[Sequence], gamma: int) -> List[Sequence]:
+        """Physical KV reservation (paged real backend): grow block tables to
+        cover this step's gamma+1 writes BEFORE executing; sequences whose
+        reservation fails are preempted (recompute policy) so no paged write
+        can ever land in another sequence's blocks.  Backends without a
+        ``reserve`` hook (simulated / dense slots) skip this entirely."""
+        reserve = getattr(self.backend, "reserve", None)
+        if reserve is None or not seqs:
+            return seqs
+        while seqs:
+            failed = reserve(seqs, gamma)
+            if not failed:
+                break
+            # preempt ONE victim (youngest failed, matching the recompute
+            # policy) and retry: its released blocks often cover the rest
+            victim = max(failed, key=lambda s: s.request.arrival)
+            self.scheduler.preempt(victim)
+            seqs = [s for s in seqs if s in self.scheduler.running]
+        return seqs
+
     def _record_timeline(self, B: int, gamma: int, tokens: int,
                          latency: float, draft_ok: bool,
                          prefill_tokens: int = 0) -> None:
@@ -233,7 +256,13 @@ class ServingEngine:
         else:
             gamma = 0
 
-        # 4. switching cost: draft catch-up prefill
+        # 4. physical KV reservation, then switching cost (draft catch-up)
+        running = self._reserve_kv(running, gamma)
+        if not running:
+            return StepReport("idle", t_start, self.clock,
+                              admitted=len(admitted))
+        B = len(running)
+        delta_max = max((s.delta for s in running), default=0)
         switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
         if switched_on and any(s.delta > 0 for s in running):
             t_catch = self.backend.draft_catchup(running)
@@ -309,7 +338,11 @@ class ServingEngine:
         else:
             gamma = self.policy.select(B, delta_max=delta_max)
 
-        # 4. switching cost: draft catch-up prefill (pure-decode steps only)
+        # 4. physical KV reservation for the decode rows (chunk rows were
+        #    reserved block-by-block at schedule time), then switching cost
+        decode = self._reserve_kv(decode, gamma)
+        B = len(decode)
+        delta_max = max((s.delta for s in decode), default=0)
         switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
         if switched_on and any(s.delta > 0 for s in decode):
             t_catch = self.backend.draft_catchup(decode)

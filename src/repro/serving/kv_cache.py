@@ -66,34 +66,47 @@ class BlockManager:
         return self.num_free >= self.blocks_needed(tokens)
 
     # ------------------------------------------------------------------
-    def allocate(self, seq_id: int, tokens: int) -> List[int]:
-        need = self.blocks_needed(tokens)
+    def _grow_table(self, table: List[int], need: int, what: str) -> List[int]:
+        """Acquire ``need`` free blocks onto ``table`` (the single home of
+        the free-list pop / refcount / append bookkeeping)."""
         if len(self.free) < need:
-            raise OutOfBlocks(f"need {need}, free {len(self.free)}")
-        blocks = [self.free.pop() for _ in range(need)]
-        for b in blocks:
+            raise OutOfBlocks(f"{what} needs {need}, free {len(self.free)}")
+        added = []
+        for _ in range(need):
+            b = self.free.pop()
             self.refcount[b] = self.refcount.get(b, 0) + 1
-        self.tables[seq_id] = blocks
+            table.append(b)
+            added.append(b)
+        return added
+
+    def allocate(self, seq_id: int, tokens: int) -> List[int]:
+        table: List[int] = []
+        self._grow_table(table, self.blocks_needed(tokens), "allocate")
+        self.tables[seq_id] = table
         self.lengths[seq_id] = tokens
-        return blocks
+        return table
 
     def append_tokens(self, seq_id: int, n: int = 1) -> List[int]:
         """Extend a sequence by n tokens, allocating new blocks on demand."""
         table = self.tables[seq_id]
-        old = self.lengths[seq_id]
-        new = old + n
+        new = self.lengths[seq_id] + n
         need = self.blocks_needed(new) - len(table)
-        added = []
-        if need > 0:
-            if len(self.free) < need:
-                raise OutOfBlocks(f"append needs {need}, free {len(self.free)}")
-            for _ in range(need):
-                b = self.free.pop()
-                self.refcount[b] = self.refcount.get(b, 0) + 1
-                table.append(b)
-                added.append(b)
+        added = self._grow_table(table, need, "append") if need > 0 else []
         self.lengths[seq_id] = new
         return added
+
+    def ensure_capacity(self, seq_id: int, tokens: int) -> List[int]:
+        """Grow a sequence's block table to COVER ``tokens`` positions
+        without changing its logical length — the real backend reserves
+        room for this step's KV writes (decode token / speculative chunk /
+        prefill chunk) BEFORE executing, so a paged write can never land in
+        another sequence's blocks.  A later ``append_tokens`` for positions
+        already covered allocates nothing."""
+        table = self.tables[seq_id]
+        need = self.blocks_needed(tokens) - len(table)
+        if need <= 0:
+            return []
+        return self._grow_table(table, need, "reserve")
 
     def grow_to(self, seq_id: int, tokens: int) -> List[int]:
         """Ensure a sequence's table covers ``tokens`` positions, allocating

@@ -1,0 +1,88 @@
+"""Paged-KV runtime state for the real-execution backend.
+
+One :class:`PagedKVRuntime` per model (target / draft) owns the physical
+``(L, num_blocks + 1, block_size, KH, hd)`` key/value page arrays (the last
+block is the write-off "trash" block absorbing padded-slot writes) and the
+host-side per-sequence materialised lengths.  The logical layout — which
+sequence owns which blocks — lives in the existing :class:`BlockManager`;
+this class only turns those tables into padded int32 device operands.
+
+The zero-copy contract: admission, decode, speculative verification,
+chunked prefill, eviction and completion never touch the page tensors from
+the host.  Per step, the only host->device traffic is the (B, width) block
+tables, (B,) lengths and the token ids; the only device->host traffic is
+the sampled tokens (and acceptance counts).  The pages themselves are
+donated through the jitted step functions so XLA updates them in place.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence as Seq, Tuple
+
+import numpy as np
+
+from ..models.registry import ModelAPI
+from .kv_cache import BlockManager
+from .request import Sequence
+
+
+def bucket_size(n: int) -> int:
+    """Next power of two (jit-cache-friendly padding)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def num_blocks_for(cost_model, target_cfg, draft_cfg, block_size: int, *,
+                   min_blocks: int = 64, max_blocks: int = 4096,
+                   reserve_frac: float = 0.1) -> int:
+    """Size the physical pool from the roofline HBM budget: the tokens that
+    fit beside the weights (``RooflineCostModel.kv_capacity_tokens``) divided
+    into blocks, clamped to a sane range for the reduced-model real tier."""
+    toks = cost_model.kv_capacity_tokens(target_cfg, draft_cfg,
+                                         reserve_frac=reserve_frac)
+    return int(min(max(toks // block_size, min_blocks), max_blocks))
+
+
+class PagedKVRuntime:
+    """Physical paged KV pool + host length bookkeeping for one model."""
+
+    def __init__(self, api: ModelAPI, bm: BlockManager):
+        if not api.supports_paged:
+            raise NotImplementedError(
+                f"family {api.cfg.family!r} has no paged-KV path")
+        self.api = api
+        self.bm = bm
+        self.num_blocks = bm.total_blocks
+        self.block_size = bm.block_size
+        self.trash = self.num_blocks          # id of the write-off block
+        self.pages = api.init_paged_cache(self.num_blocks, self.block_size)
+        self.ctx: Dict[int, int] = {}         # req_id -> materialised tokens
+
+    @property
+    def bytes_per_block(self) -> int:
+        k = self.pages["k_pages"]
+        L, _, bs, kh, hd = k.shape
+        return 2 * L * bs * kh * hd * k.dtype.itemsize  # k + v
+
+    def batch_tables(self, seqs: Seq[Sequence], batch: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded (batch, width) int32 block tables + (batch,) materialised
+        lengths for one step.  Rows beyond ``len(seqs)`` and table entries
+        beyond a sequence's allocation are the trash id, which both satisfies
+        the kernel's "any valid id" padding contract and guarantees padded
+        slots can only ever write to the trash block."""
+        # the physical pool cannot follow BlockManager.expand(): a grown
+        # allocator would hand out ids colliding with the trash block /
+        # falling outside the pages (elastic expansion of the PHYSICAL pool
+        # is a ROADMAP open item) — fail loudly instead of corrupting KV
+        assert self.bm.total_blocks == self.num_blocks, (
+            "BlockManager was expanded past the physical paged pool "
+            f"({self.bm.total_blocks} > {self.num_blocks}); run real-tier "
+            "engines with memmgr=None")
+        rows: List[List[int]] = [list(self.bm.tables.get(s.req_id, ()))
+                                 for s in seqs]
+        width = bucket_size(max((len(r) for r in rows), default=1) or 1)
+        tables = np.full((batch, width), self.trash, np.int32)
+        lengths = np.zeros((batch,), np.int32)
+        for i, (s, row) in enumerate(zip(seqs, rows)):
+            tables[i, :len(row)] = row
+            lengths[i] = self.ctx.get(s.req_id, 0)
+        return tables, lengths

@@ -1,27 +1,410 @@
-"""Real-execution backend: actual JAX models behind the serving engine.
+"""Real-execution backends: actual JAX models behind the serving engine.
 
-Slot-based continuous batching over dense caches:
+Two implementations share the Backend protocol:
 
-  * caches are allocated once for ``max_batch`` slots x ``max_seq`` positions;
-  * each step gathers the active slots into a compact batch (padded to a
-    power-of-two bucket so the jit cache stays small), runs the jitted
-    AR / speculative step, and scatters the updated slot caches back;
-  * latencies are wall-clock (block_until_ready) — this is what the planner
-    learns from on this tier, and what the C_switch profiler measures.
+* :class:`RealBackend` — the paged-KV runtime (production path for
+  attention-family models).  ``(L, num_blocks, block_size, KH, hd)``
+  key/value pools per model are allocated ONCE and driven by the
+  :class:`BlockManager` block tables: admission, decode, speculative
+  verification, chunked prefill, eviction and completion touch only int32
+  tables and sampled tokens — the cache tensors never travel and are never
+  gathered, scattered or re-bucketed.  One multi-query paged-attention
+  kernel (Pallas on TPU, jnp oracle on this CPU container) serves plain
+  decode (T=1), speculative verify (T=gamma+1) and chunked-prefill appends
+  (T=chunk), so ``hybrid_step`` runs the chunked scheduler's mixed
+  chunk+decode batches on real execution end-to-end.
+
+* :class:`DenseSlotBackend` — the legacy dense slot-cache implementation
+  (whole-cache gather/scatter per step, per-sequence Python prefill loop),
+  kept for the SSM/hybrid/encdec families whose recurrent state is O(1)
+  and not paged, and as the baseline for the dense-vs-paged equivalence
+  tests and ``--only backend`` benchmarks.
+
+:func:`make_real_backend` picks the implementation per model family.
+
+Latencies are wall-clock (block_until_ready) — this is what the planner
+learns from on this tier, and what the C_switch profiler measures.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.spec_decode import make_ar_step, make_spec_step
+from ..core.spec_decode import (make_ar_step, make_paged_ar_step,
+                                make_paged_spec_step, make_spec_step)
 from ..models.registry import ModelAPI
 from .engine import StepOutcome
+from .kv_cache import BlockManager, OutOfBlocks
+from .paged_runtime import PagedKVRuntime, bucket_size, num_blocks_for
 from .request import Sequence
+
+
+def _bucket(n: int) -> int:
+    return bucket_size(n)
+
+
+def make_real_backend(target: ModelAPI, draft: ModelAPI, **kw):
+    """Paged runtime when both models have a paged-KV path (attention
+    families); dense slot caches otherwise (SSM/hybrid/encdec state is O(1)
+    per sequence and lives in fixed slots)."""
+    if target.supports_paged and draft.supports_paged:
+        return RealBackend(target, draft, **kw)
+    for k in ("block_manager", "num_blocks", "block_size", "cost_model",
+              "use_kernel"):
+        kw.pop(k, None)
+    return DenseSlotBackend(target, draft, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV backend
+# ---------------------------------------------------------------------------
+
+
+class RealBackend:
+    """Zero-copy continuous batching over paged KV pools.
+
+    When ``block_manager`` is the scheduler's own instance, the scheduler's
+    logical admission decisions and the physical pool are one and the same
+    object (the intended wiring — see ``launch/serve.py``).  Without one, a
+    private BlockManager sized for ``max_batch x max_seq`` (or from
+    ``cost_model.kv_capacity_tokens``) is created and mirrored internally.
+    """
+
+    def __init__(self, target: ModelAPI, draft: ModelAPI, *,
+                 max_batch: int = 8, max_seq: int = 256, seed: int = 0,
+                 sampling: str = "greedy", temperature: float = 1.0,
+                 block_manager: Optional[BlockManager] = None,
+                 block_size: int = 8, num_blocks: Optional[int] = None,
+                 cost_model=None, use_kernel: bool = False):
+        if not (target.supports_paged and draft.supports_paged):
+            raise NotImplementedError(
+                "RealBackend is the paged-KV runtime; use make_real_backend "
+                "(or DenseSlotBackend) for SSM/hybrid/encdec families")
+        self.target = target
+        self.draft = draft
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.sampling = sampling
+        self.key = jax.random.PRNGKey(seed)
+
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+        self.tparams = target.init(k1)
+        self.dparams = draft.init(k2)
+        self.dparams_host: Optional[dict] = None  # offloaded copy
+
+        if block_manager is None:
+            if num_blocks is None:
+                if cost_model is not None:
+                    num_blocks = num_blocks_for(cost_model, target.cfg,
+                                                draft.cfg, block_size)
+                else:
+                    num_blocks = (-(-max_batch * max_seq // block_size)
+                                  + 2 * max_batch)
+            block_manager = BlockManager(num_blocks, block_size)
+            self._owns_bm = True
+        else:
+            self._owns_bm = False
+        self.bm = block_manager
+        self.tkv = PagedKVRuntime(target, self.bm)
+        self.dkv = PagedKVRuntime(draft, self.bm)
+
+        self.last_token: Dict[int, int] = {}
+        self.tokens_out: Dict[int, List[int]] = {}
+
+        # page donation keeps the pools in place on accelerators; CPU jax
+        # cannot donate and would only warn
+        donate = jax.default_backend() != "cpu"
+        spec = make_paged_spec_step(target, draft, sampling=sampling,
+                                    temperature=temperature)
+        self._spec_jit = jax.jit(spec, static_argnames=("gamma",),
+                                 donate_argnums=(3, 4) if donate else ())
+        ar = make_paged_ar_step(target, sampling=sampling,
+                                temperature=temperature)
+        self._ar_jit = jax.jit(ar, donate_argnums=(2,) if donate else ())
+
+        def _extend_target(key, params, pages, tokens, tables, start, valid):
+            """Multi-token extension + next-token sample at each row's last
+            valid position (batched prefill / chunked-prefill appends fused
+            with T=1 decode rows)."""
+            logits, pages = target.decode_step_paged(
+                params, pages, tokens, tables, start, valid,
+                use_kernel=use_kernel)
+            idx = jnp.maximum(valid - 1, 0)[:, None, None]
+            lg = jnp.take_along_axis(logits, idx, axis=1)[:, 0] / temperature
+            if sampling == "greedy":
+                nxt = jnp.argmax(lg, axis=-1)
+            else:
+                nxt = jax.random.categorical(key, lg)
+            return nxt, pages
+
+        def _extend_draft(params, pages, tokens, tables, start, valid):
+            _, pages = draft.decode_step_paged(params, pages, tokens, tables,
+                                               start, valid,
+                                               use_kernel=use_kernel)
+            return pages
+
+        self._extend_t = jax.jit(_extend_target,
+                                 donate_argnums=(2,) if donate else ())
+        self._extend_d = jax.jit(_extend_draft,
+                                 donate_argnums=(1,) if donate else ())
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def offload_draft(self) -> None:
+        self.dparams_host = jax.tree.map(np.asarray, self.dparams)
+        self.dparams = None
+
+    def reload_draft(self) -> None:
+        assert self.dparams_host is not None
+        self.dparams = jax.tree.map(jnp.asarray, self.dparams_host)
+
+    @property
+    def draft_resident(self) -> bool:
+        return self.dparams is not None
+
+    # ------------------------------------------------------------------
+    # block-table bookkeeping (int32 only — the pages never move)
+    # ------------------------------------------------------------------
+    def _ensure_alloc(self, req_id: int, tokens: int) -> None:
+        if req_id in self.bm.tables:
+            self.bm.ensure_capacity(req_id, tokens)
+        else:
+            # private BlockManager: mirror the scheduler's admission
+            self.bm.allocate(req_id, tokens)
+
+    def reserve(self, seqs: List[Sequence], gamma: int) -> List[Sequence]:
+        """Grow block tables to cover this step's gamma+1 KV writes BEFORE
+        executing, so a paged write can never land in another sequence's
+        blocks.  Returns the sequences whose reservation failed — the engine
+        preempts those (recompute policy) instead of running them."""
+        failed = []
+        for s in seqs:
+            need = self.tkv.ctx.get(s.req_id, 0) + gamma + 1
+            try:
+                self._ensure_alloc(s.req_id, need)
+            except OutOfBlocks:
+                failed.append(s)
+        return failed
+
+    def _fill_rows(self, rows: List[Tuple[Sequence, List[int], int, int]]
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """rows of (seq, tokens, start, n_valid) -> padded step operands."""
+        Bb = _bucket(len(rows))
+        Tb = _bucket(max(len(r[1]) for r in rows))
+        tokens = np.zeros((Bb, Tb), np.int32)
+        start = np.zeros((Bb,), np.int32)
+        valid = np.zeros((Bb,), np.int32)
+        for i, (_, toks, c, nv) in enumerate(rows):
+            tokens[i, :len(toks)] = toks
+            start[i] = c
+            valid[i] = nv
+        return tokens, start, valid, Bb
+
+    # ------------------------------------------------------------------
+    def prefill(self, seqs: List[Sequence], *, with_draft: bool) -> float:
+        """Batched prefill: every admitted prompt in ONE padded extension
+        call (start=0), its KV scattered straight into the paged pool."""
+        t0 = time.perf_counter()
+        rows = []
+        for s in seqs:
+            if self._owns_bm and s.req_id in self.bm.tables:
+                self.bm.release(s.req_id)  # recompute after preemption
+            self._ensure_alloc(s.req_id, s.request.prompt_len + 1)
+            toks = list(s.request.prompt_tokens)
+            rows.append((s, toks, 0, len(toks)))
+        tokens, start, valid, Bb = self._fill_rows(rows)
+        tables, _ = self.tkv.batch_tables(seqs, Bb)
+        nxt, self.tkv.pages = self._extend_t(
+            self._next_key(), self.tparams, self.tkv.pages, tokens, tables,
+            start, valid)
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        do_draft = with_draft and self.draft_resident
+        if do_draft:
+            self.dkv.pages = self._extend_d(self.dparams, self.dkv.pages,
+                                            tokens, tables, start, valid)
+            jax.block_until_ready(self.dkv.pages)
+        for i, s in enumerate(seqs):
+            P = s.request.prompt_len
+            self.tkv.ctx[s.req_id] = P
+            self.tokens_out[s.req_id] = [int(nxt[i])]
+            self.last_token[s.req_id] = int(nxt[i])
+            s.generated = 0  # first token counted at the first decode commit
+            if do_draft:
+                self.dkv.ctx[s.req_id] = P
+                s.delta = 0
+            else:
+                self.dkv.ctx[s.req_id] = 0
+                s.delta = P
+        return time.perf_counter() - t0
+
+    def draft_catchup(self, seqs: List[Sequence]) -> float:
+        """Re-prefill the draft pool for sequences whose draft state lags
+        (the physical C_switch cost) — one batched paged extension."""
+        if not self.draft_resident:
+            return 0.0
+        rows = []
+        for s in seqs:
+            ctx = self.tkv.ctx.get(s.req_id)
+            if ctx is None:
+                continue
+            dctx = self.dkv.ctx.get(s.req_id, 0)
+            if dctx > ctx:
+                dctx = 0  # stale (preempt-and-recompute): full re-prefill
+            if dctx >= ctx:
+                continue
+            stream = (list(s.request.prompt_tokens)
+                      + self.tokens_out.get(s.req_id, []))
+            rows.append((s, stream[dctx:ctx], dctx, ctx - dctx))
+        if not rows:
+            return 0.0
+        t0 = time.perf_counter()
+        tokens, start, valid, Bb = self._fill_rows(rows)
+        tables, _ = self.dkv.batch_tables([r[0] for r in rows], Bb)
+        self.dkv.pages = self._extend_d(self.dparams, self.dkv.pages, tokens,
+                                        tables, start, valid)
+        jax.block_until_ready(self.dkv.pages)
+        for s, _, _, _ in rows:
+            self.dkv.ctx[s.req_id] = self.tkv.ctx[s.req_id]
+            s.delta = 0
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def hybrid_step(self, chunks, decode: List[Sequence], gamma: int,
+                    *, with_draft: bool) -> StepOutcome:
+        """One fused mixed step on real execution: prefill chunks (ragged
+        multi-token appends into freshly grown blocks) batched together with
+        the T=1 decode rows in a single padded extension call."""
+        if not chunks:
+            if not decode:
+                return StepOutcome(n_committed=[], latency=0.0)
+            return self.step(decode, gamma)
+        assert gamma == 0, "speculation is disabled while chunks are in flight"
+        if self.reserve(decode, 0):
+            raise OutOfBlocks("decode rows not reserved — engine must "
+                              "preempt before hybrid_step")
+        rows = []
+        for s, n in chunks:
+            c = s.prefilled  # authoritative (survives preempt-and-recompute)
+            self.tkv.ctx[s.req_id] = c
+            if c == 0:
+                self.dkv.ctx[s.req_id] = 0  # fresh / restarted sequence
+            self._ensure_alloc(s.req_id, c + n)
+            toks = list(s.request.prompt_tokens[c:c + n])
+            rows.append((s, toks, c, n))
+        n_chunks = len(rows)
+        for s in decode:
+            rows.append((s, [self.last_token[s.req_id]],
+                         self.tkv.ctx[s.req_id], 1))
+
+        t0 = time.perf_counter()
+        tokens, start, valid, Bb = self._fill_rows(rows)
+        tables, _ = self.tkv.batch_tables([r[0] for r in rows], Bb)
+        nxt, self.tkv.pages = self._extend_t(
+            self._next_key(), self.tparams, self.tkv.pages, tokens, tables,
+            start, valid)
+        nxt = np.asarray(jax.block_until_ready(nxt))
+
+        do_draft = with_draft and self.draft_resident
+        if do_draft:
+            # the draft consumes the same chunk stream to keep its KV current
+            # (decode rows stay out: gamma=0 commits are charged to delta)
+            drows = [r for r in rows[:n_chunks]
+                     if self.dkv.ctx.get(r[0].req_id, 0) == r[2]]
+            if drows:
+                dtokens, dstart, dvalid, Db = self._fill_rows(drows)
+                dtables, _ = self.dkv.batch_tables([r[0] for r in drows], Db)
+                self.dkv.pages = self._extend_d(
+                    self.dparams, self.dkv.pages, dtokens, dtables, dstart,
+                    dvalid)
+                jax.block_until_ready(self.dkv.pages)
+                for s, _, c, n in drows:
+                    self.dkv.ctx[s.req_id] = c + n
+        latency = time.perf_counter() - t0
+
+        for i, (s, _, c, n) in enumerate(rows):
+            if i < n_chunks:
+                self.tkv.ctx[s.req_id] = c + n
+                if c + n == s.request.prompt_len:
+                    # final chunk: the sampled token is the first output x_N
+                    self.tokens_out[s.req_id] = [int(nxt[i])]
+                    self.last_token[s.req_id] = int(nxt[i])
+            else:
+                self.tokens_out[s.req_id].append(int(nxt[i]))
+                self.last_token[s.req_id] = int(nxt[i])
+                self.tkv.ctx[s.req_id] = c + 1
+        return StepOutcome(n_committed=[1] * len(decode), latency=latency)
+
+    # ------------------------------------------------------------------
+    def step(self, seqs: List[Sequence], gamma: int) -> StepOutcome:
+        if self.reserve(seqs, gamma):
+            raise OutOfBlocks("decode batch not reserved — engine must "
+                              "preempt before step")
+        n = len(seqs)
+        Bb = _bucket(n)
+        tables, lengths = self.tkv.batch_tables(seqs, Bb)
+        last = np.zeros((Bb,), np.int32)
+        for i, s in enumerate(seqs):
+            last[i] = self.last_token[s.req_id]
+
+        t0 = time.perf_counter()
+        if gamma == 0:
+            nxt, self.tkv.pages = self._ar_jit(
+                self._next_key(), self.tparams, self.tkv.pages, tables,
+                lengths, last)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            latency = time.perf_counter() - t0
+            n_committed = []
+            for i, s in enumerate(seqs):
+                self.tokens_out[s.req_id].append(int(nxt[i]))
+                self.last_token[s.req_id] = int(nxt[i])
+                self.tkv.ctx[s.req_id] += 1
+                n_committed.append(1)
+            return StepOutcome(n_committed=n_committed, latency=latency)
+
+        res = self._spec_jit(self._next_key(), self.tparams, self.dparams,
+                             self.tkv.pages, self.dkv.pages, tables, lengths,
+                             last, gamma=gamma)
+        jax.block_until_ready(res.n_accepted)
+        latency = time.perf_counter() - t0
+        self.tkv.pages, self.dkv.pages = res.tcache, res.dcache
+        toks = np.asarray(res.tokens)
+        n_acc = np.asarray(res.n_accepted)
+        last_np = np.asarray(res.last_token)
+        n_committed = []
+        for i, s in enumerate(seqs):
+            committed = [int(t) for t in toks[i] if t >= 0]
+            self.tokens_out[s.req_id].extend(committed)
+            self.last_token[s.req_id] = int(last_np[i])
+            n_keep = int(n_acc[i]) + 1
+            self.tkv.ctx[s.req_id] += n_keep
+            self.dkv.ctx[s.req_id] = self.tkv.ctx[s.req_id]
+            n_committed.append(n_keep)
+        return StepOutcome(n_committed=n_committed, latency=latency)
+
+    # ------------------------------------------------------------------
+    def release(self, seq: Sequence) -> None:
+        self.tkv.ctx.pop(seq.req_id, None)
+        self.dkv.ctx.pop(seq.req_id, None)
+        self.last_token.pop(seq.req_id, None)
+        # engine flow releases through scheduler.finish first, leaving this a
+        # no-op there; direct backend users (benchmarks) free their blocks
+        if seq.req_id in self.bm.tables:
+            self.bm.release(seq.req_id)
+
+    def output_tokens(self, req_id: int) -> List[int]:
+        return self.tokens_out.get(req_id, [])
+
+
+# ---------------------------------------------------------------------------
+# Legacy dense slot-cache backend (SSM/hybrid/encdec families + baselines)
+# ---------------------------------------------------------------------------
 
 
 def _gather(cache, idx):
@@ -40,11 +423,21 @@ def _scatter(cache, compact, idx, n_real):
     return jax.tree.map(s, cache, compact)
 
 
-def _bucket(n: int) -> int:
-    return 1 << max(n - 1, 0).bit_length()
+class DenseSlotBackend:
+    """Slot-based continuous batching over dense caches:
 
+      * caches are allocated once for ``max_batch`` slots x ``max_seq``
+        positions;
+      * each step gathers the active slots into a compact batch (padded to a
+        power-of-two bucket), runs the jitted AR / speculative step, and
+        scatters the updated slot caches back;
+      * prefill is a one-sequence-at-a-time Python loop.
 
-class RealBackend:
+    This is the seed implementation, superseded by :class:`RealBackend` for
+    attention families and retained for O(1)-state families and as the
+    dense baseline in tests/benchmarks.
+    """
+
     def __init__(self, target: ModelAPI, draft: ModelAPI, *, max_batch: int = 8,
                  max_seq: int = 256, seed: int = 0, sampling: str = "greedy",
                  temperature: float = 1.0):
@@ -139,13 +532,12 @@ class RealBackend:
     # ------------------------------------------------------------------
     def hybrid_step(self, chunks, decode: List[Sequence], gamma: int,
                     *, with_draft: bool) -> StepOutcome:
-        """Chunked prefill needs paged (not dense slot) caches on the real
-        tier; until that lands, hybrid mode is simulation-only (ROADMAP
-        open item)."""
+        """Chunked prefill needs paged caches (RealBackend); the dense slot
+        tier still runs monolithic prefill only."""
         if chunks:
             raise NotImplementedError(
-                "chunked prefill is not supported on the real-execution "
-                "backend yet — run with chunk_tokens=0 or the sim tier")
+                "chunked prefill needs the paged-KV RealBackend — the dense "
+                "slot backend prefills monolithically (chunk_tokens=0)")
         return self.step(decode, gamma)
 
     def step(self, seqs: List[Sequence], gamma: int) -> StepOutcome:

@@ -60,13 +60,24 @@ class ScheduledBatch:
 class ContinuousBatchingScheduler:
     def __init__(self, block_manager: BlockManager, *, max_batch: int = 64,
                  watermark_frac: float = 0.02,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 min_chunk_tokens: Optional[int] = None):
         if chunk_tokens is not None and chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1 (or None)")
         self.bm = block_manager
         self.max_batch = max_batch
         self.watermark_frac = watermark_frac
         self.chunk_tokens = chunk_tokens
+        # Sarathi-style total-token budget: each decode-ready sequence
+        # consumes one of the step's chunk_tokens slots (the decode tokens
+        # ride the same fused forward, so this is what actually bounds the
+        # step's token count / TPOT spike).  At least min_chunk_tokens —
+        # half the budget by default — stay reserved for prefill progress,
+        # so a decode batch larger than the budget can never starve
+        # admission/chunk progress outright.
+        if min_chunk_tokens is None:
+            min_chunk_tokens = max(1, (chunk_tokens or 0) // 2)
+        self.min_chunk_tokens = min_chunk_tokens
         self.waiting: Deque[Request] = deque()
         self.running: List[Sequence] = []
         self._next_seq = 0
@@ -107,14 +118,21 @@ class ContinuousBatchingScheduler:
         """Build one hybrid step under the per-step token budget.
 
         Invariants (regression-tested):
-          * sum of emitted chunk tokens never exceeds ``chunk_tokens``;
+          * total tokens per step are budgeted Sarathi-style: emitted chunk
+            tokens never exceed ``chunk_tokens`` minus one slot per
+            decode-ready sequence (the decode tokens ride the same fused
+            forward), floored at ``min_chunk_tokens`` so decode-heavy
+            batches cannot crowd out chunk progress entirely;
           * running sequences mid-prefill are served before new admissions
             (no starvation by decode-only steps);
           * block reservation happens here, per chunk — a preempted
             half-prefilled sequence releases exactly what it reserved.
         """
         assert self.chunk_tokens is not None, "scheduler is monolithic"
-        budget = self.chunk_tokens
+        n_decode = sum(1 for s in self.running
+                       if s.prompt_remaining == 0 and not s.done)
+        budget = max(self.chunk_tokens - n_decode,
+                     min(self.min_chunk_tokens, self.chunk_tokens))
         batch = ScheduledBatch()
         watermark = int(self.bm.total_blocks * self.watermark_frac)
 
@@ -207,6 +225,12 @@ class ContinuousBatchingScheduler:
             return
         victim = max(candidates, key=lambda s: s.request.arrival)
         self._preempt(victim)
+
+    def preempt(self, seq: Sequence) -> None:
+        """Public preempt-and-recompute: the engine preempts sequences whose
+        physical KV reservation failed (paged real backend) before the step
+        executes, so no write can touch another sequence's blocks."""
+        self._preempt(seq)
 
     def _preempt(self, seq: Sequence) -> None:
         """Recompute policy: release blocks, requeue at the front.  A

@@ -1,5 +1,7 @@
-"""Benchmark-harness smoke: the prefill grid and the table renderer run
-end-to-end under tier-1, so the bench entrypoints can't silently rot."""
+"""Benchmark-harness smoke: the prefill grid, the dense-vs-paged backend
+grid and the table renderer run end-to-end under tier-1, so the bench
+entrypoints can't silently rot."""
+import json
 import os
 import subprocess
 import sys
@@ -22,8 +24,8 @@ def test_prefill_grid_end_to_end():
     # {low,high} x {monolithic,chunked} grid, CSV contract respected
     assert len(rows) == 4
     names = {r.split(",")[0] for r in rows}
-    assert names == {"prefill.low.monolithic", "prefill.low.chunk256",
-                     "prefill.high.monolithic", "prefill.high.chunk256"}
+    assert names == {"prefill.low.monolithic", "prefill.low.chunk384",
+                     "prefill.high.monolithic", "prefill.high.chunk384"}
     for row in rows:
         assert "p99_ttft=" in row and "goodput=" in row
 
@@ -34,7 +36,26 @@ def test_prefill_grid_end_to_end():
 
     # the headline result: chunked prefill cuts the tail at the high-rate
     # (compute-bound, head-of-line-blocked) point
-    assert p99("prefill.high.chunk256") < p99("prefill.high.monolithic")
+    assert p99("prefill.high.chunk384") < p99("prefill.high.monolithic")
+
+
+def test_backend_grid_end_to_end():
+    """`--only backend` runs REAL dense and paged backends, prints the CSV
+    grid and persists BENCH_backend.json with the capacity comparison."""
+    res = _run("benchmarks.run", "--only", "backend", "--fast")
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = [l for l in res.stdout.splitlines() if l.startswith("backend.")]
+    names = {r.split(",")[0] for r in rows}
+    assert names == {f"backend.{m}.{op}" for m in ("dense", "paged")
+                     for op in ("prefill", "decode", "verify")} | \
+        {"backend.capacity"}
+    data = json.load(open(os.path.join(ROOT, "BENCH_backend.json")))
+    assert set(data["grid"]) == {"dense", "paged"}
+    for row in data["grid"].values():
+        assert all(v > 0 for v in row.values())
+    # the paged pool admits by actual context, not per-slot max_seq
+    cap = data["capacity"]
+    assert cap["paged_max_batch"] > cap["dense_max_batch"]
 
 
 def test_make_tables_end_to_end():

@@ -51,6 +51,52 @@ def test_paged_attention_sweep(B, H, KH, D, bs, maxb, dtype):
                                np.asarray(want, np.float32), atol=atol)
 
 
+@pytest.mark.parametrize("T", [1, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,D,bs,maxb", [
+    (2, 4, 4, 64, 16, 3),    # MHA
+    (3, 8, 2, 64, 16, 4),    # GQA
+    (2, 8, 1, 128, 8, 5),    # MQA
+])
+def test_paged_attention_multiquery_sweep(B, H, KH, D, bs, maxb, dtype, T):
+    """Multi-query extension (T=1 decode / T=gamma+1 verify / T=chunk
+    append) vs the jnp oracle, over GQA ratios and ragged lengths."""
+    key = jax.random.PRNGKey(7)
+    nblocks = maxb * B + 2
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, T, H, D)).astype(dtype)
+    kp = jax.random.normal(ks[1], (nblocks, bs, KH, D)).astype(dtype)
+    vp = jax.random.normal(ks[2], (nblocks, bs, KH, D)).astype(dtype)
+    tables = jax.random.randint(ks[3], (B, maxb), 0, nblocks)
+    # ragged: every sequence's total length (incl. the T new tokens) differs
+    lengths = jnp.asarray([T + (7 * i) % (maxb * bs - T + 1)
+                           for i in range(B)])
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    got = paged_attention(q, kp, vp, tables, lengths, interpret=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_paged_attention_multiquery_is_causal_within_extension():
+    """Query t must not see the K/V of queries t' > t: the T-token oracle
+    output at row t equals a fresh single-query call at length - T + t + 1."""
+    B, T, H, KH, D, bs, maxb = 2, 4, 4, 2, 32, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    nblocks = maxb * B + 1
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    kp = jax.random.normal(ks[1], (nblocks, bs, KH, D))
+    vp = jax.random.normal(ks[2], (nblocks, bs, KH, D))
+    tables = jax.random.randint(ks[3], (B, maxb), 0, nblocks)
+    lengths = jnp.asarray([maxb * bs, maxb * bs - 5])
+    multi = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    for t in range(T):
+        single = ref.paged_attention_ref(q[:, t], kp, vp, tables,
+                                         lengths - T + t + 1)
+        np.testing.assert_allclose(np.asarray(multi[:, t]),
+                                   np.asarray(single), atol=2e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("B,S,H,KH,D", [(2, 256, 4, 4, 64),
