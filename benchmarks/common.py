@@ -42,15 +42,19 @@ def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
                 dataset: str = "sharegpt", trace=None, max_batch: int = 256,
                 seed: int = 0, enable_offload: bool = True,
                 tau_low_frac: float = 0.1, kv_reserve_frac: float = 0.1,
-                chunk_tokens: int = 0, slo: float = None):
+                chunk_tokens: int = 0, slo: float = None,
+                prefix_caching: bool = False, requests=None):
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
                     seed=seed, enable_offload=enable_offload,
                     tau_low_frac=tau_low_frac,
                     kv_reserve_frac=kv_reserve_frac,
-                    chunk_tokens=chunk_tokens)
+                    chunk_tokens=chunk_tokens,
+                    prefix_caching=prefix_caching)
     eng = build_sim_engine(cfg, policy)
-    if trace is not None:
+    if requests is not None:
+        reqs = requests
+    elif trace is not None:
         reqs = trace.sample_requests(n, dataset=dataset, seed=seed + 1,
                                      slo=slo)
     else:

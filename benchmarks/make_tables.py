@@ -46,6 +46,29 @@ def table(cells, title):
     return "\n".join(out)
 
 
+def prefix_table():
+    """Render the prefix-sharing grid persisted by `run.py --only prefix`."""
+    path = os.path.join(ROOT, "BENCH_prefix.json")
+    if not os.path.exists(path):
+        print("BENCH_prefix.json: missing (run benchmarks.run --only prefix)")
+        return
+    data = json.load(open(path))
+    out = [f"\n### Prefix-sharing CoW KV cache "
+           f"(chunk={data.get('chunk_tokens')}, "
+           f"template={data.get('template_len')} tokens)\n"]
+    out.append("| cell | p50 TTFT | p99 TTFT | goodput tok/s | blocks "
+               "| hit rate | saved prefill tok | tokens sha |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for name, r in sorted(data.get("grid", {}).items()):
+        out.append(
+            f"| {name} | {r['p50_ttft_s']*1e3:.0f}ms "
+            f"| {r['p99_ttft_s']*1e3:.0f}ms "
+            f"| {r['goodput_tok_s']:.1f} | {r['blocks_allocated']} "
+            f"| {r['prefix_hit_rate']:.3f} | {r['saved_prefill_tokens']} "
+            f"| {r['tokens_sha']} |")
+    print("\n".join(out))
+
+
 def main():
     for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
         cells = [fix_artifact(c) for c in load(fname)]
@@ -55,6 +78,7 @@ def main():
         json.dump(cells, open(os.path.join(ROOT, fname), "w"), indent=1)
         fits = sum(1 for c in cells if c["fits_hbm"])
         print(table(cells, f"{fname} ({fits}/{len(cells)} fit 16 GB)"))
+    prefix_table()
 
 
 if __name__ == "__main__":

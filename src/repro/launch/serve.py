@@ -17,6 +17,11 @@ router; --rate is the TOTAL arrival rate across the fleet):
 Chunked-prefill hybrid batching with a 0.5s TTFT SLO (tail-latency regime):
   PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
       --rate 30 --requests 600 --chunk-tokens 256 --slo 0.5
+
+Prefix-sharing copy-on-write KV caching on the templated workload (shared
+system prompt; cached prefixes cost no prefill compute and no new blocks):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --dataset templated --rate 60 --chunk-tokens 384 --prefix-caching on
 """
 from __future__ import annotations
 
@@ -42,6 +47,14 @@ def main():
     ap.add_argument("--slo", type=float, default=None,
                     help="TTFT deadline in seconds for SLO-attainment/"
                          "goodput (default: per-dataset; <=0 disables)")
+    ap.add_argument("--prefix-caching", choices=["on", "off"], default="off",
+                    help="vLLM-style copy-on-write prefix sharing: cached "
+                         "prompt prefixes are admitted at refcount+1 and "
+                         "skip prefill compute (chunked scheduler path)")
+    ap.add_argument("--prefill-order", choices=["fifo", "slo"],
+                    default="fifo",
+                    help="waiting-queue admission order for chunked "
+                         "prefill: FIFO or earliest-TTFT-deadline first")
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1,
@@ -57,7 +70,7 @@ def main():
         from ..serving.costmodel import RooflineCostModel, TPU_V5E
         from ..serving.simulator import (SimConfig, build_sim_cluster,
                                          build_sim_engine)
-        from ..serving.workload import poisson_requests
+        from ..serving.workload import poisson_requests, templated_requests
 
         target = configs.get_config(args.arch)
         chunk = RooflineCostModel(TPU_V5E).resolve_chunk_tokens(
@@ -67,10 +80,18 @@ def main():
             draft=configs.get_draft_config(args.arch),
             hw=TPU_V5E, gamma_max=args.gamma_max, max_batch=args.max_batch,
             chunk_tokens=chunk,
+            prefix_caching=args.prefix_caching == "on",
+            prefill_order=args.prefill_order,
             enable_offload=not args.no_offload, seed=args.seed)
-        reqs = poisson_requests(args.rate, args.requests,
-                                dataset=args.dataset, seed=args.seed + 1,
-                                slo=args.slo)
+        if args.dataset == "templated":
+            # prompts carry real token ids (shared template + suffix) so
+            # the prefix cache has content to hash
+            reqs = templated_requests(args.rate, args.requests,
+                                      seed=args.seed + 1, slo=args.slo)
+        else:
+            reqs = poisson_requests(args.rate, args.requests,
+                                    dataset=args.dataset, seed=args.seed + 1,
+                                    slo=args.slo)
         if args.replicas > 1:
             cluster = build_sim_cluster(cfg, args.replicas, args.policy,
                                         router=args.router)
@@ -84,8 +105,9 @@ def main():
         from ..serving.costmodel import RooflineCostModel, TPU_V5E
         from ..serving.engine import ServingEngine
         from ..serving.kv_cache import BlockManager
+        from ..serving.memory_manager import ElasticMemoryManager
         from ..serving.paged_runtime import num_blocks_for
-        from ..serving.real_backend import make_real_backend
+        from ..serving.real_backend import RealBackend, make_real_backend
         from ..serving.scheduler import ContinuousBatchingScheduler
         from ..serving.workload import tiny_requests
 
@@ -101,18 +123,37 @@ def main():
         cm = RooflineCostModel(TPU_V5E)
         block_size = 8
         bm = BlockManager(num_blocks_for(cm, cfg, dcfg, block_size,
-                                         max_blocks=1024), block_size)
+                                         max_blocks=1024), block_size,
+                          prefix_caching=args.prefix_caching == "on")
         backend = make_real_backend(target, draft, max_batch=4, max_seq=256,
                                     seed=args.seed, block_manager=bm,
                                     cost_model=cm)
         sched = ContinuousBatchingScheduler(bm, max_batch=4,
-                                            chunk_tokens=chunk)
+                                            chunk_tokens=chunk,
+                                            prefill_order=args.prefill_order)
+        memmgr = None
+        if not args.no_offload and isinstance(backend, RealBackend):
+            # offload-driven elastic expansion of the PHYSICAL paged pool:
+            # the draft's weight bytes converted to KV blocks, clamped so a
+            # tiny reduced model still exercises the grow/migrate path
+            draft_blocks = max(min(
+                -(-cm.weight_bytes(dcfg) // backend.tkv.bytes_per_block),
+                bm.total_blocks // 4), 1)
+            memmgr = ElasticMemoryManager(
+                bm, draft_blocks=int(draft_blocks),
+                offload_fn=backend.offload_draft,
+                reload_fn=backend.reload_draft,
+                migrate_fn=backend.migrate_pools,
+                grow_fn=backend.grow_pools,
+                shrink_fn=backend.shrink_pools)
         engine = ServingEngine(backend, sched,
                                make_policy(args.policy, 3, seed=args.seed),
-                               None, gamma_max=3)
+                               memmgr, gamma_max=3)
         reqs = tiny_requests(min(args.requests, 16), rate_qps=args.rate,
                              prompt_len=16, output_len=16,
-                             vocab=cfg.vocab_size, seed=args.seed)
+                             vocab=cfg.vocab_size, seed=args.seed,
+                             template_len=(8 if args.dataset == "templated"
+                                           else 0))
         metrics = engine.run(reqs, max_steps=5000)
 
     print(json.dumps(metrics.summary(), indent=1))

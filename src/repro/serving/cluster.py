@@ -106,7 +106,7 @@ class ClusterMetrics:
         return counts
 
     def summary(self) -> dict:
-        return {
+        out = {
             "replicas": len(self.per_replica),
             "throughput_tok_s": round(self.throughput, 2),
             "mean_latency_s": round(self.mean_latency, 4),
@@ -126,7 +126,15 @@ class ClusterMetrics:
             "switches": sum(m.switch_count for m in self.per_replica),
             "offloads": sum(m.offload_events for m in self.per_replica),
             "reloads": sum(m.reload_events for m in self.per_replica),
+            "blocks_allocated": sum(m.blocks_allocated
+                                    for m in self.per_replica),
         }
+        if any(m.prefix for m in self.per_replica):
+            out["prefix_saved_tokens"] = sum(
+                m.prefix.get("saved_tokens", 0) for m in self.per_replica)
+            out["prefix_hits"] = sum(
+                m.prefix.get("hits", 0) for m in self.per_replica)
+        return out
 
 
 class ServingCluster:

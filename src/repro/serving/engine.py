@@ -202,6 +202,7 @@ class ServingEngine:
             "tokens": tokens, "latency": latency,
             "prefill_tokens": prefill_tokens,
             "free_blocks": self.scheduler.bm.num_free,
+            "cached_blocks": len(self.scheduler.bm.cached),
             "draft_resident": draft_ok,
             "waiting": self.scheduler.num_waiting,
         })
@@ -290,6 +291,8 @@ class ServingEngine:
         if gamma != self.prev_gamma_effective:
             m.switch_count += 1
         self.prev_gamma_effective = gamma
+        # CoW copies not consumed by a physical backend (simulated tier)
+        self.scheduler.bm.drain_pending_copies()
         return StepReport("decode", t_start, self.clock, batch=B, gamma=gamma,
                           tokens=total_committed, admitted=len(admitted),
                           finished=finished)
@@ -318,6 +321,15 @@ class ServingEngine:
                 self.clock = max(self.clock, self._pending[0][0])
                 return StepReport("idle", t_start, self.clock)
             return None
+
+        # newly admitted sequences may carry a cached prefix: let the
+        # backend seed its materialised-length bookkeeping (paged real
+        # backend: tkv/dkv ctx = cached boundary; cached blocks are valid in
+        # both pools by the registration rule)
+        on_admit = getattr(self.backend, "on_admit", None)
+        if on_admit is not None:
+            for s in batch.admitted:
+                on_admit(s)
 
         decode = [s for s in batch.decode]
         B = len(decode)
@@ -356,11 +368,13 @@ class ServingEngine:
         self.clock += out.latency
         total_committed = int(sum(out.n_committed))
 
-        # chunk progress: blocks were reserved at schedule time
+        # chunk progress: blocks were reserved at schedule time; freshly
+        # completed full prompt blocks are published to the prefix cache
         for s, n in batch.prefill_chunks:
             s.prefilled += n
             if not draft_ok:
                 s.delta += n  # the draft never saw these prompt tokens
+            self.scheduler.note_prefill_progress(s, draft_ok=draft_ok)
             if s.prompt_remaining == 0:
                 s.prefill_done_at = self.clock
 
@@ -382,6 +396,8 @@ class ServingEngine:
         if gamma != self.prev_gamma_effective:
             m.switch_count += 1
         self.prev_gamma_effective = gamma
+        # CoW copies not consumed by a physical backend (simulated tier)
+        self.scheduler.bm.drain_pending_copies()
         return StepReport("decode", t_start, self.clock, batch=B, gamma=gamma,
                           tokens=total_committed, admitted=len(batch.admitted),
                           finished=finished,
@@ -389,7 +405,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def finalize_metrics(self, start_clock: float = 0.0) -> Metrics:
-        """Stamp elapsed time + memory-manager counters onto the metrics."""
+        """Stamp elapsed time + memory-manager / prefix-cache counters onto
+        the metrics."""
         m = self.metrics
         m.elapsed = self.clock - start_clock
         if self.memmgr is not None:
@@ -397,6 +414,12 @@ class ServingEngine:
                                    if e.kind == "offload")
             m.reload_events = sum(1 for e in self.memmgr.events
                                   if e.kind == "reload")
+        bm = self.scheduler.bm
+        m.blocks_allocated = bm.stats["allocated_blocks"]
+        if bm.prefix_caching:
+            m.prefix = {k: bm.stats[k] for k in
+                        ("queries", "hits", "saved_tokens", "shared_blocks",
+                         "forks", "evictions")}
         return m
 
     # ------------------------------------------------------------------

@@ -1,4 +1,5 @@
-"""Paged KV-cache block management with elastic expansion/contraction.
+"""Paged KV-cache block management with elastic expansion/contraction and
+vLLM-style copy-on-write prefix sharing.
 
 Implements the paper's §6.3 (expansion) and §6.4 (contraction with logical
 remapping) faithfully:
@@ -9,14 +10,36 @@ remapping) faithfully:
     arrays; ``migrate()`` executes the §6.4 step-3 vectorised data movement
     through the block-migration kernel (pure-jnp oracle on CPU, Pallas on TPU).
 
+Prefix sharing (``prefix_caching=True``) adds a content-hash index over
+*full* prefix blocks, hash-chained over token ids:
+
+  * ``match_prefix`` finds the longest cached prefix of a prompt;
+  * ``share`` maps those blocks into a new sequence's table at refcount+1;
+  * ``register_prefix`` publishes a sequence's freshly materialised full
+    prompt blocks for reuse;
+  * ``fork_for_write`` privatises any refcount>1 block a write range covers
+    (copy-on-write) and records the (src, dst) copy for the physical tier
+    to execute (``drain_pending_copies``);
+  * a block whose refcount drops to 0 while registered is *cached-reusable*:
+    it parks in an LRU tier instead of the free list and is only recycled
+    when the free list runs dry (eviction unregisters it).
+
+A block is therefore in exactly one of three states: **free** (allocatable,
+content dead), **cached-reusable** (refcount 0, content live in the hash
+index, reclaimable on demand) or **pinned** (refcount >= 1).
+
 Invariants (property-tested):
-  I1  a block id is either in the free list or referenced by >=1 sequence
+  I1  a block id is in the free list, the cached-LRU tier, or referenced
+      by >=1 sequence — exactly one of the three
   I2  refcounts equal the number of tables referencing the block
   I3  after contraction no table references id >= K_boundary
   I4  migration preserves every sequence's logical KV contents bit-exactly
+  I5  every cached hash maps to a live (non-free) block whose stored token
+      chain reproduces the hash
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -27,6 +50,17 @@ import numpy as np
 
 class OutOfBlocks(Exception):
     pass
+
+
+class SharedBlockWrite(Exception):
+    """A write would land in a block with refcount > 1.  Shared (prefix)
+    blocks are immutable; the write must be routed through
+    ``BlockManager.fork_for_write`` first (copy-on-write)."""
+
+
+# chain-hash seed for the first block of a prompt (any fixed sentinel works;
+# tuples of ints hash deterministically across processes)
+_CHAIN_ROOT = -0x517CC1B727220A95
 
 
 @dataclass
@@ -43,7 +77,8 @@ class MigrationPlan:
 class BlockManager:
     """vLLM-style block allocator + Nightjar's elastic boundary."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 prefix_caching: bool = False):
         self.block_size = block_size
         self.base_blocks = num_blocks      # N_orig
         self.total_blocks = num_blocks     # N_orig or N_scale
@@ -53,30 +88,62 @@ class BlockManager:
         self.tables: Dict[int, List[int]] = {}   # seq_id -> block ids
         self.lengths: Dict[int, int] = {}        # seq_id -> token count
         self.reserved: set = set()                # blocks mid-migration
+        # --- prefix-sharing state (all empty with caching off) ---
+        self.prefix_caching = prefix_caching
+        self.hash_index: Dict[int, int] = {}      # chain hash -> block id
+        self.block_hash: Dict[int, int] = {}      # block id -> chain hash
+        # block id -> (parent chain hash, token tuple): collision guard +
+        # the material for the I5 invariant check
+        self.block_chain: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        self.cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
+        self.pending_copies: List[Tuple[int, int]] = []  # CoW (src, dst)
+        self.stats: Dict[str, int] = dict(
+            queries=0, hits=0, saved_tokens=0, shared_blocks=0, forks=0,
+            evictions=0, allocated_blocks=0)
 
     # ------------------------------------------------------------------
     @property
     def num_free(self) -> int:
         return len(self.free)
 
+    @property
+    def num_allocatable(self) -> int:
+        """Blocks an allocation may consume: truly free plus cached-reusable
+        (refcount-0 prefix blocks, evicted LRU-first on demand)."""
+        return len(self.free) + len(self.cached)
+
     def blocks_needed(self, tokens: int) -> int:
         return max((tokens + self.block_size - 1) // self.block_size, 1)
 
     def can_allocate(self, tokens: int) -> bool:
-        return self.num_free >= self.blocks_needed(tokens)
+        return self.num_allocatable >= self.blocks_needed(tokens)
 
     # ------------------------------------------------------------------
+    def _pop_block(self, what: str) -> int:
+        """One allocatable block id: the free list first, then LRU eviction
+        of a cached-reusable prefix block (which unregisters it)."""
+        if self.free:
+            return self.free.pop()
+        if self.cached:
+            b, _ = self.cached.popitem(last=False)   # least recently used
+            self._unregister(b)
+            self.stats["evictions"] += 1
+            return b
+        raise OutOfBlocks(f"{what}: pool exhausted")
+
     def _grow_table(self, table: List[int], need: int, what: str) -> List[int]:
         """Acquire ``need`` free blocks onto ``table`` (the single home of
         the free-list pop / refcount / append bookkeeping)."""
-        if len(self.free) < need:
-            raise OutOfBlocks(f"{what} needs {need}, free {len(self.free)}")
+        if self.num_allocatable < need:
+            raise OutOfBlocks(
+                f"{what} needs {need}, allocatable {self.num_allocatable}")
         added = []
         for _ in range(need):
-            b = self.free.pop()
+            b = self._pop_block(what)
             self.refcount[b] = self.refcount.get(b, 0) + 1
             table.append(b)
             added.append(b)
+        self.stats["allocated_blocks"] += need
         return added
 
     def allocate(self, seq_id: int, tokens: int) -> List[int]:
@@ -86,10 +153,28 @@ class BlockManager:
         self.lengths[seq_id] = tokens
         return table
 
+    def _assert_writable(self, table: List[int], start: int, end: int,
+                         what: str) -> None:
+        """Hard error if the content-write range [start, end) covers any
+        block shared with another sequence — the silent-aliasing hazard a
+        missing ``fork_for_write`` would otherwise introduce."""
+        bs = self.block_size
+        for idx in range(start // bs, min(-(-end // bs), len(table))):
+            b = table[idx]
+            if self.refcount.get(b, 0) > 1:
+                raise SharedBlockWrite(
+                    f"{what}: positions [{start},{end}) cover block {b} "
+                    f"(refcount {self.refcount[b]}); route the write through "
+                    "fork_for_write first")
+
     def append_tokens(self, seq_id: int, n: int = 1) -> List[int]:
-        """Extend a sequence by n tokens, allocating new blocks on demand."""
+        """Extend a sequence by n tokens, allocating new blocks on demand.
+        The appended token content lands in [old_len, old_len+n): that range
+        must be private (see :meth:`fork_for_write`)."""
         table = self.tables[seq_id]
-        new = self.lengths[seq_id] + n
+        old = self.lengths[seq_id]
+        new = old + n
+        self._assert_writable(table, old, new, "append")
         need = self.blocks_needed(new) - len(table)
         added = self._grow_table(table, need, "append") if need > 0 else []
         self.lengths[seq_id] = new
@@ -118,13 +203,154 @@ class BlockManager:
         return self.append_tokens(seq_id, tokens - have)
 
     def release(self, seq_id: int) -> None:
+        dropped: List[int] = []
         for b in self.tables.pop(seq_id, []):
             self.refcount[b] -= 1
             if self.refcount[b] == 0:
                 del self.refcount[b]
-                if b < self.total_blocks and b not in self.reserved:
+                if b >= self.total_blocks or b in self.reserved:
+                    self._unregister(b)
+                    continue
+                if b in self.block_hash:
+                    # registered prefix content stays reusable: park in the
+                    # LRU tier (most-recently-used end) instead of freeing
+                    self.cached[b] = None
+                    self.cached.move_to_end(b)
+                else:
                     self.free.append(b)
+                    dropped.append(b)
+        if dropped and self.pending_copies:
+            # a pending CoW copy targeting a block that just went back to
+            # the free list is moot (its forking sequence is gone) — and
+            # executing it after reallocation would clobber the new owner
+            ds = set(dropped)
+            self.pending_copies = [p for p in self.pending_copies
+                                   if p[1] not in ds]
         self.lengths.pop(seq_id, None)
+
+    # ------------------------------------------------------------------
+    # prefix sharing: content-hash index + copy-on-write forking
+    # ------------------------------------------------------------------
+    def _unregister(self, b: int) -> None:
+        h = self.block_hash.pop(b, None)
+        if h is not None and self.hash_index.get(h) == b:
+            del self.hash_index[h]
+        self.block_chain.pop(b, None)
+        self.cached.pop(b, None)
+
+    def match_prefix(self, tokens: Optional[Sequence[int]]
+                     ) -> Tuple[List[int], int]:
+        """Longest cached prefix of ``tokens``: walk the hash chain over
+        full blocks, verifying stored token content (collision guard).
+        Returns (block ids, matched token count) — both empty/0 when
+        caching is off or nothing matches."""
+        if not self.prefix_caching or not tokens:
+            return [], 0
+        self.stats["queries"] += 1
+        bs = self.block_size
+        blocks: List[int] = []
+        h = _CHAIN_ROOT
+        for i in range(len(tokens) // bs):
+            blk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            h = hash((h, blk))
+            b = self.hash_index.get(h)
+            if b is None or self.block_chain[b][1] != blk:
+                break
+            blocks.append(b)
+        return blocks, len(blocks) * bs
+
+    def share(self, seq_id: int, blocks: List[int], tokens: int) -> List[int]:
+        """Admission side of prefix sharing: map cached prefix ``blocks``
+        into a new sequence's table at refcount+1, crediting ``tokens``
+        materialised positions (the cached prefix needs no prefill compute
+        and no new blocks).  Cached-reusable blocks become pinned again."""
+        assert seq_id not in self.tables, seq_id
+        table: List[int] = []
+        for b in blocks:
+            self.cached.pop(b, None)          # pinned while refcount >= 1
+            self.refcount[b] = self.refcount.get(b, 0) + 1
+            table.append(b)
+        self.tables[seq_id] = table
+        self.lengths[seq_id] = tokens
+        self.stats["hits"] += 1
+        self.stats["saved_tokens"] += tokens
+        self.stats["shared_blocks"] += len(blocks)
+        return table
+
+    def register_prefix(self, seq_id: int, tokens: Optional[Sequence[int]],
+                        upto: int) -> int:
+        """Publish a sequence's materialised *full* prompt blocks (the first
+        ``upto`` tokens of ``tokens``) in the hash index so future
+        admissions can share them.  Idempotent; already-cached hashes keep
+        their first publisher.  Returns the number of newly indexed blocks."""
+        if not self.prefix_caching or tokens is None:
+            return 0
+        table = self.tables.get(seq_id)
+        if table is None:
+            return 0
+        bs = self.block_size
+        n = min(upto, len(tokens)) // bs
+        h = _CHAIN_ROOT
+        added = 0
+        for i in range(min(n, len(table))):
+            blk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+            parent = h
+            h = hash((parent, blk))
+            b = table[i]
+            if self.block_hash.get(b) == h:
+                continue                      # already registered
+            if h in self.hash_index or b in self.block_hash:
+                continue                      # hash or block taken elsewhere
+            self.hash_index[h] = b
+            self.block_hash[b] = h
+            self.block_chain[b] = (parent, blk)
+            added += 1
+        return added
+
+    def shared_blocks_in_range(self, blocks: List[int], start: int,
+                               end: int) -> int:
+        """How many of ``blocks`` (a table prefix) a write to positions
+        [start, end) would touch — the worst-case fork count an admission
+        must budget for."""
+        bs = self.block_size
+        lo = start // bs
+        hi = min(-(-end // bs), len(blocks))
+        return max(hi - lo, 0)
+
+    def fork_for_write(self, seq_id: int, start: int, end: int
+                       ) -> List[Tuple[int, int]]:
+        """Copy-on-write: privatise every refcount>1 block the write range
+        [start, end) covers.  Allocates a private replacement (may evict
+        cached-reusable blocks), swaps it into the table, and records the
+        (src, dst) pair in ``pending_copies`` for the physical tier to
+        execute before the step's writes.  Returns the new pairs."""
+        table = self.tables.get(seq_id)
+        if table is None:
+            return []
+        bs = self.block_size
+        copies: List[Tuple[int, int]] = []
+        for idx in range(start // bs, min(-(-end // bs), len(table))):
+            b = table[idx]
+            if self.refcount.get(b, 0) > 1:
+                nb = self._pop_block("fork")   # may raise OutOfBlocks
+                self.refcount[b] -= 1
+                self.refcount[nb] = 1
+                table[idx] = nb
+                # queue IMMEDIATELY: if a later block's fork raises, the
+                # already-swapped private copies must still receive their
+                # shared content (the caller preempts a victim and retries,
+                # and the retry skips blocks that are now private)
+                self.pending_copies.append((b, nb))
+                copies.append((b, nb))
+                self.stats["forks"] += 1
+                self.stats["allocated_blocks"] += 1
+        return copies
+
+    def drain_pending_copies(self) -> List[Tuple[int, int]]:
+        """Hand the accumulated CoW (src, dst) copies to the caller (the
+        physical runtime batches them into one block-migration launch)."""
+        out, self.pending_copies = self.pending_copies, []
+        return out
 
     # ------------------------------------------------------------------
     # §6.3 expansion: attach [boundary, boundary + extra) to the pool
@@ -140,6 +366,16 @@ class BlockManager:
     def plan_contraction(self) -> Optional[MigrationPlan]:
         if self.total_blocks == self.base_blocks:
             return None
+        # cached-reusable (refcount-0) prefix blocks are reclaimable by
+        # definition: evict them all so the preserved-region accounting sees
+        # every reusable slot and no unreferenced high block survives the
+        # boundary trim (prefix reuse restarts warm after contraction)
+        while self.cached:
+            b, _ = self.cached.popitem(last=False)
+            self._unregister(b)
+            self.stats["evictions"] += 1
+            if b < self.total_blocks and b not in self.reserved:
+                self.free.append(b)
         evict = sorted(
             b for t in self.tables.values() for b in t if b >= self.boundary)
         # preserved-region free slots
@@ -158,9 +394,24 @@ class BlockManager:
         mapping = dict(zip(plan.src, plan.dst))
         for seq_id, table in self.tables.items():
             self.tables[seq_id] = [mapping.get(b, b) for b in table]
+        # queued CoW copies follow the same remapping: the §6.4 step-3 data
+        # movement already relocated a migrated block's content, so a pending
+        # (src, dst) pair must point at the blocks' post-migration homes
+        # (stale high ids would index past the shrunk physical pools)
+        self.pending_copies = [(mapping.get(s, s), mapping.get(d, d))
+                               for s, d in self.pending_copies]
         for old, new in mapping.items():
             self.refcount[new] = self.refcount.pop(old)
             self.reserved.discard(new)
+            # registered (pinned) prefix blocks carry their hash to the new
+            # home; cached refcount-0 blocks were already evicted at plan
+            # time, so only table-referenced registrations can appear here
+            h = self.block_hash.pop(old, None)
+            if h is not None:
+                self.block_hash[new] = h
+                self.block_chain[new] = self.block_chain.pop(old)
+                if self.hash_index.get(h) == old:
+                    self.hash_index[h] = new
         # §6.4 step 5: trim the allocator index set
         self.free = [b for b in self.free if b < self.boundary]
         self.total_blocks = self.base_blocks
@@ -180,6 +431,25 @@ class BlockManager:
             assert 0 <= b < self.total_blocks
         for b in free_set:
             assert 0 <= b < self.total_blocks
+        # I5: the prefix-cache index is consistent — every cached hash maps
+        # to a live block whose stored token chain reproduces the hash, and
+        # the cached-LRU tier is disjoint from both the free list and tables
+        for b in self.cached:
+            assert b in self.block_hash, f"cached block {b} unregistered"
+            assert b not in refs, f"cached block {b} still referenced"
+            assert b not in free_set, f"cached block {b} also free"
+        for h, b in self.hash_index.items():
+            assert self.block_hash.get(b) == h, (h, b)
+            parent, toks = self.block_chain[b]
+            assert hash((parent, toks)) == h, f"stale chain for block {b}"
+            assert len(toks) == self.block_size, "partial block registered"
+            assert b not in free_set, f"registered block {b} in free list"
+            assert b in refs or b in self.cached, f"registered block {b} dead"
+            assert 0 <= b < self.total_blocks
+        for b, h in self.block_hash.items():
+            assert self.hash_index.get(h) == b, (b, h)
+        for src, dst in self.pending_copies:
+            assert refs.get(dst) == 1, f"CoW target {dst} not private"
 
 
 class PhysicalKVPool:

@@ -37,7 +37,9 @@ class ElasticMemoryManager:
                  offload_latency: float = 0.0, reload_latency: float = 0.0,
                  migrate_fn: Optional[Callable[[MigrationPlan], float]] = None,
                  offload_fn: Optional[Callable[[], None]] = None,
-                 reload_fn: Optional[Callable[[], None]] = None):
+                 reload_fn: Optional[Callable[[], None]] = None,
+                 grow_fn: Optional[Callable[[int], None]] = None,
+                 shrink_fn: Optional[Callable[[int], None]] = None):
         self.bm = bm
         self.draft_blocks = draft_blocks          # N_draft
         self.tau_low_frac = tau_low_frac
@@ -47,6 +49,12 @@ class ElasticMemoryManager:
         self.migrate_fn = migrate_fn
         self.offload_fn = offload_fn
         self.reload_fn = reload_fn
+        # physical-pool hooks (real tier): grow_fn extends the paged page
+        # arrays in lockstep with bm.expand; shrink_fn trims them after the
+        # logical contraction commits (PagedKVRuntime.grow/shrink via
+        # RealBackend.grow_pools/shrink_pools).  None on the simulated tier.
+        self.grow_fn = grow_fn
+        self.shrink_fn = shrink_fn
 
         self.draft_resident = True
         self.expanded = False
@@ -71,7 +79,9 @@ class ElasticMemoryManager:
 
         if self.draft_resident:
             # track the low-memory streak only while speculation is disabled
-            if spec_disabled and self.bm.num_free < self.tau_low:
+            # (cached-reusable prefix blocks count as reclaimable capacity:
+            # evicting the cache is always cheaper than offloading the draft)
+            if spec_disabled and self.bm.num_allocatable < self.tau_low:
                 self._low_mem_streak += 1
             else:
                 self._low_mem_streak = 0
@@ -82,7 +92,7 @@ class ElasticMemoryManager:
         # draft offloaded: contraction when the queue is drained and there is
         # room for the draft plus the safety buffer (hysteresis, §6.1)
         if (self.expanded and waiting == 0
-                and self.bm.num_free > self.draft_blocks + self.tau_low):
+                and self.bm.num_allocatable > self.draft_blocks + self.tau_low):
             self._contract_and_reload(now)
 
     # ------------------------------------------------------------------
@@ -93,6 +103,8 @@ class ElasticMemoryManager:
         self._busy_until = now + self.offload_latency
         self.events.append(MemoryEvent("offload", now, self.offload_latency))
         start, end = self.bm.expand(self.draft_blocks)
+        if self.grow_fn is not None:
+            self.grow_fn(self.draft_blocks)   # physical pages follow §6.3
         self.expanded = True
         self._low_mem_streak = 0
         self.events.append(MemoryEvent(
@@ -115,6 +127,8 @@ class ElasticMemoryManager:
             self.bm.free = [b for b in self.bm.free if b < self.bm.boundary]
             self.events.append(MemoryEvent("contract", now, 0.0,
                                            {"migrated_blocks": 0}))
+        if self.shrink_fn is not None:
+            self.shrink_fn(self.bm.base_blocks)  # physical pages follow §6.4
         self.expanded = False
         if self.reload_fn is not None:
             self.reload_fn()

@@ -18,10 +18,11 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence as Seq, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from ..models.registry import ModelAPI
-from .kv_cache import BlockManager
+from .kv_cache import BlockManager, MigrationPlan
 from .request import Sequence
 
 
@@ -62,6 +63,53 @@ class PagedKVRuntime:
         L, _, bs, kh, hd = k.shape
         return 2 * L * bs * kh * hd * k.dtype.itemsize  # k + v
 
+    # ------------------------------------------------------------------
+    # copy-on-write + elastic physical pool (§6.3/6.4 on the real tier)
+    # ------------------------------------------------------------------
+    def apply_copies(self, src: Seq[int], dst: Seq[int], *,
+                     use_kernel: bool = False) -> None:
+        """Execute block copies src[i] -> dst[i] on-device in ONE batched
+        block-migration launch (the CoW fork path and the §6.4 step-3 data
+        movement share the same kernel).  No host round-trip: the pages stay
+        on-device, only the int32 index vectors travel."""
+        if not len(src):
+            return
+        from ..kernels import block_migration
+        s = jnp.asarray(list(src), jnp.int32)
+        d = jnp.asarray(list(dst), jnp.int32)
+        for key in ("k_pages", "v_pages"):
+            self.pages[key] = block_migration.migrate_blocks(
+                self.pages[key], s, d, use_kernel=use_kernel)
+
+    def apply_plan(self, plan: MigrationPlan, *, use_kernel: bool = False
+                   ) -> None:
+        """§6.4 step 3 on the physical paged pools."""
+        self.apply_copies(plan.src, plan.dst, use_kernel=use_kernel)
+
+    def grow(self, extra_blocks: int) -> None:
+        """§6.3 expansion of the physical pool: extend both page arrays by
+        ``extra_blocks``, keeping the trash block LAST.  The old trash slot
+        is recycled as ordinary storage — its garbage content is never read
+        because per-sequence lengths gate every attention read, and every
+        block is written before its positions become readable."""
+        def pad(x):
+            L, nb1, bs, kh, hd = x.shape
+            z = jnp.zeros((L, extra_blocks, bs, kh, hd), x.dtype)
+            return jnp.concatenate([x, z], axis=1)
+        self.pages = {k: pad(v) for k, v in self.pages.items()}
+        self.num_blocks += extra_blocks
+        self.trash = self.num_blocks
+
+    def shrink(self, to_blocks: int) -> None:
+        """§6.4 step 5 on the physical pool: trim to ``to_blocks`` + trash.
+        Must run after the BlockManager committed its contraction (no table
+        references an id >= to_blocks).  The surviving slot at index
+        ``to_blocks`` becomes the new trash block."""
+        assert to_blocks <= self.num_blocks, (to_blocks, self.num_blocks)
+        self.pages = {k: v[:, :to_blocks + 1] for k, v in self.pages.items()}
+        self.num_blocks = to_blocks
+        self.trash = to_blocks
+
     def batch_tables(self, seqs: Seq[Sequence], batch: int
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Padded (batch, width) int32 block tables + (batch,) materialised
@@ -69,14 +117,16 @@ class PagedKVRuntime:
         beyond a sequence's allocation are the trash id, which both satisfies
         the kernel's "any valid id" padding contract and guarantees padded
         slots can only ever write to the trash block."""
-        # the physical pool cannot follow BlockManager.expand(): a grown
-        # allocator would hand out ids colliding with the trash block /
-        # falling outside the pages (elastic expansion of the PHYSICAL pool
-        # is a ROADMAP open item) — fail loudly instead of corrupting KV
+        # the physical pool must follow BlockManager.expand()/contraction in
+        # lockstep (``grow``/``shrink``, wired through the memory manager's
+        # grow_fn/shrink_fn hooks) — a drifted allocator would hand out ids
+        # colliding with the trash block / falling outside the pages, so
+        # fail loudly instead of corrupting KV
         assert self.bm.total_blocks == self.num_blocks, (
-            "BlockManager was expanded past the physical paged pool "
-            f"({self.bm.total_blocks} > {self.num_blocks}); run real-tier "
-            "engines with memmgr=None")
+            "BlockManager pool size drifted from the physical paged pool "
+            f"({self.bm.total_blocks} != {self.num_blocks}); wire "
+            "PagedKVRuntime.grow/shrink into the ElasticMemoryManager "
+            "(see RealBackend.grow_pools/shrink_pools)")
         rows: List[List[int]] = [list(self.bm.tables.get(s.req_id, ()))
                                  for s in seqs]
         width = bucket_size(max((len(r) for r in rows), default=1) or 1)

@@ -109,6 +109,7 @@ class RealBackend:
         else:
             self._owns_bm = False
         self.bm = block_manager
+        self.use_kernel = use_kernel
         self.tkv = PagedKVRuntime(target, self.bm)
         self.dkv = PagedKVRuntime(draft, self.bm)
 
@@ -170,7 +171,8 @@ class RealBackend:
         return self.dparams is not None
 
     # ------------------------------------------------------------------
-    # block-table bookkeeping (int32 only — the pages never move)
+    # block-table bookkeeping (int32 only — the pages only move for CoW
+    # forks and elastic migration, both batched block-migration launches)
     # ------------------------------------------------------------------
     def _ensure_alloc(self, req_id: int, tokens: int) -> None:
         if req_id in self.bm.tables:
@@ -179,19 +181,69 @@ class RealBackend:
             # private BlockManager: mirror the scheduler's admission
             self.bm.allocate(req_id, tokens)
 
+    def on_admit(self, seq: Sequence) -> None:
+        """A sequence admitted with a cached prefix starts with that many
+        tokens already materialised — in BOTH pools (only draft-covered
+        prefixes are ever registered, see scheduler.note_prefill_progress)."""
+        self.tkv.ctx[seq.req_id] = seq.prefilled
+        self.dkv.ctx[seq.req_id] = seq.prefilled
+
+    def _apply_pending_copies(self) -> None:
+        """Execute the BlockManager's queued CoW forks on-device (one
+        batched block-migration launch per pool) BEFORE this step's writes,
+        so a privatised block carries its shared content when written."""
+        copies = self.bm.drain_pending_copies()
+        if not copies:
+            return
+        src = [c[0] for c in copies]
+        dst = [c[1] for c in copies]
+        self.tkv.apply_copies(src, dst, use_kernel=self.use_kernel)
+        self.dkv.apply_copies(src, dst, use_kernel=self.use_kernel)
+
     def reserve(self, seqs: List[Sequence], gamma: int) -> List[Sequence]:
         """Grow block tables to cover this step's gamma+1 KV writes BEFORE
         executing, so a paged write can never land in another sequence's
-        blocks.  Returns the sequences whose reservation failed — the engine
-        preempts those (recompute policy) instead of running them."""
+        blocks; any shared block the write range covers is privatised first
+        (copy-on-write).  Returns the sequences whose reservation failed —
+        the engine preempts those (recompute policy) instead of running
+        them."""
         failed = []
         for s in seqs:
-            need = self.tkv.ctx.get(s.req_id, 0) + gamma + 1
+            ctx = self.tkv.ctx.get(s.req_id, 0)
+            need = ctx + gamma + 1
             try:
+                if self.bm.prefix_caching and s.req_id in self.bm.tables:
+                    self.bm.fork_for_write(s.req_id, ctx, need)
                 self._ensure_alloc(s.req_id, need)
             except OutOfBlocks:
                 failed.append(s)
         return failed
+
+    # ------------------------------------------------------------------
+    # elastic physical pool (memory-manager hooks, §6.3/6.4 on real tier)
+    # ------------------------------------------------------------------
+    def grow_pools(self, extra_blocks: int) -> None:
+        """§6.3: extend both physical paged pools in lockstep with
+        ``BlockManager.expand`` (ElasticMemoryManager ``grow_fn``)."""
+        self.tkv.grow(extra_blocks)
+        self.dkv.grow(extra_blocks)
+
+    def shrink_pools(self, to_blocks: Optional[int] = None) -> None:
+        """§6.4 step 5: trim both pools after the logical contraction
+        committed (ElasticMemoryManager ``shrink_fn``)."""
+        nb = self.bm.base_blocks if to_blocks is None else to_blocks
+        self.tkv.shrink(nb)
+        self.dkv.shrink(nb)
+
+    def migrate_pools(self, plan) -> float:
+        """§6.4 step 3: execute the contraction's block moves on both pools
+        (ElasticMemoryManager ``migrate_fn``); returns wall-clock seconds."""
+        t0 = time.perf_counter()
+        self.tkv.apply_plan(plan, use_kernel=self.use_kernel)
+        self.dkv.apply_plan(plan, use_kernel=self.use_kernel)
+        jax.block_until_ready(self.tkv.pages["k_pages"])
+        jax.block_until_ready(self.dkv.pages["k_pages"])
+        return time.perf_counter() - t0
 
     def _fill_rows(self, rows: List[Tuple[Sequence, List[int], int, int]]
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -219,6 +271,7 @@ class RealBackend:
             self._ensure_alloc(s.req_id, s.request.prompt_len + 1)
             toks = list(s.request.prompt_tokens)
             rows.append((s, toks, 0, len(toks)))
+        self._apply_pending_copies()
         tokens, start, valid, Bb = self._fill_rows(rows)
         tables, _ = self.tkv.batch_tables(seqs, Bb)
         nxt, self.tkv.pages = self._extend_t(
@@ -304,6 +357,9 @@ class RealBackend:
                          self.tkv.ctx[s.req_id], 1))
 
         t0 = time.perf_counter()
+        # CoW forks queued at schedule/reserve time execute BEFORE the
+        # step's writes (their cost is real step latency)
+        self._apply_pending_copies()
         tokens, start, valid, Bb = self._fill_rows(rows)
         tables, _ = self.tkv.batch_tables([r[0] for r in rows], Bb)
         nxt, self.tkv.pages = self._extend_t(
@@ -346,6 +402,7 @@ class RealBackend:
         if self.reserve(seqs, gamma):
             raise OutOfBlocks("decode batch not reserved — engine must "
                               "preempt before step")
+        self._apply_pending_copies()
         n = len(seqs)
         Bb = _bucket(n)
         tables, lengths = self.tkv.batch_tables(seqs, Bb)

@@ -25,6 +25,8 @@ class Sequence:
     generated: int = 0
     prefilled: int = 0        # prompt tokens whose KV is materialised; under
                               # chunked prefill this grows chunk by chunk
+    cached_tokens: int = 0    # prompt tokens admitted from the prefix cache
+                              # (shared blocks — no prefill compute needed)
     delta: int = 0            # draft-model skip length (tokens missing from
                               # the draft KV cache) — drives C_switch lookup
     prefill_done_at: float = 0.0
@@ -109,6 +111,8 @@ class Metrics:
     switch_count: int = 0
     offload_events: int = 0
     reload_events: int = 0
+    blocks_allocated: int = 0              # cumulative free-list acquisitions
+    prefix: dict = field(default_factory=dict)  # prefix-cache counters
 
     def record_finish(self, seq: Sequence, now: float) -> None:
         """Stamp a completed sequence into the per-request stats."""
@@ -153,7 +157,26 @@ class Metrics:
     def goodput(self) -> float:
         return goodput_of(self.requests, self.elapsed, self.throughput)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-cache lookups that admitted shared blocks."""
+        if not self.prefix or not self.prefix.get("queries"):
+            return 0.0
+        return self.prefix["hits"] / self.prefix["queries"]
+
     def summary(self) -> dict:
+        out = self._base_summary()
+        if self.prefix:
+            out.update({
+                "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+                "prefix_saved_tokens": self.prefix.get("saved_tokens", 0),
+                "prefix_shared_blocks": self.prefix.get("shared_blocks", 0),
+                "prefix_forks": self.prefix.get("forks", 0),
+                "prefix_evictions": self.prefix.get("evictions", 0),
+            })
+        return out
+
+    def _base_summary(self) -> dict:
         return {
             "throughput_tok_s": round(self.throughput, 2),
             "mean_latency_s": round(self.mean_latency, 4),
@@ -170,4 +193,5 @@ class Metrics:
             "switches": self.switch_count,
             "offloads": self.offload_events,
             "reloads": self.reload_events,
+            "blocks_allocated": self.blocks_allocated,
         }

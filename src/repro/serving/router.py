@@ -65,8 +65,9 @@ class KVHeadroomRouter(Router):
     def route(self, req: Request, replicas: Sequence[ServingEngine]) -> int:
         def key(i: int):
             bm = replicas[i].scheduler.bm
-            # most free blocks first, then shortest queue, then index
-            return (-bm.num_free, replicas[i].load, i)
+            # most allocatable blocks first (free + cached-reusable prefix
+            # blocks, which evict on demand), then shortest queue, then index
+            return (-bm.num_allocatable, replicas[i].load, i)
         return min(range(len(replicas)), key=key)
 
 

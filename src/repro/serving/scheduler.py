@@ -22,7 +22,17 @@ Two execution regimes:
 Scheduling order inside one chunked step is FIFO and progress-guaranteed:
 partially prefilled *running* sequences are continued first (so a sequence
 mid-prefill is never starved by decode-only steps or newer arrivals), then
-the remaining budget admits new requests from the waiting queue.
+the remaining budget admits new requests from the waiting queue.  With
+``prefill_order="slo"`` the admission pass picks the waiting request with
+the earliest TTFT deadline instead of strict FIFO (FIFO among equal /
+absent deadlines); the continue-first progress guarantee is unchanged.
+
+Prefix sharing (``BlockManager(prefix_caching=True)``): admission looks up
+the longest cached prefix of the prompt, maps those blocks into the new
+sequence's table at refcount+1 and starts the first prefill chunk at the
+match boundary — a cached prefix costs no prefill compute and no new
+blocks.  Any write range covering a shared block is privatised first via
+``fork_for_write`` (copy-on-write).
 """
 from __future__ import annotations
 
@@ -61,13 +71,17 @@ class ContinuousBatchingScheduler:
     def __init__(self, block_manager: BlockManager, *, max_batch: int = 64,
                  watermark_frac: float = 0.02,
                  chunk_tokens: Optional[int] = None,
-                 min_chunk_tokens: Optional[int] = None):
+                 min_chunk_tokens: Optional[int] = None,
+                 prefill_order: str = "fifo"):
         if chunk_tokens is not None and chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1 (or None)")
+        if prefill_order not in ("fifo", "slo"):
+            raise ValueError(f"unknown prefill_order {prefill_order!r}")
         self.bm = block_manager
         self.max_batch = max_batch
         self.watermark_frac = watermark_frac
         self.chunk_tokens = chunk_tokens
+        self.prefill_order = prefill_order
         # Sarathi-style total-token budget: each decode-ready sequence
         # consumes one of the step's chunk_tokens slots (the decode tokens
         # ride the same fused forward, so this is what actually bounds the
@@ -97,13 +111,15 @@ class ContinuousBatchingScheduler:
     # ------------------------------------------------------------------
     def schedule(self) -> List[Sequence]:
         """Admit waiting requests while blocks + batch slots allow
-        (monolithic path: blocks for the WHOLE prompt up front)."""
+        (monolithic path: blocks for the WHOLE prompt up front; prefix
+        caching is a chunked-path feature — monolithic prefill always
+        recomputes)."""
         admitted: List[Sequence] = []
         watermark = int(self.bm.total_blocks * self.watermark_frac)
         while (self.waiting and len(self.running) < self.max_batch):
             req = self.waiting[0]
             need = self.bm.blocks_needed(req.prompt_len + 1)
-            if self.bm.num_free - need < watermark:
+            if self.bm.num_allocatable - need < watermark:
                 break
             self.waiting.popleft()
             seq = Sequence(request=req)
@@ -149,17 +165,46 @@ class ContinuousBatchingScheduler:
             batch.prefill_chunks.append((s, n))
             budget -= n
 
-        # 2. admit new requests into the remaining budget
+        # 2. admit new requests into the remaining budget (earliest-SLO
+        #    first under prefill_order="slo", FIFO otherwise; admission
+        #    stops at the first request that cannot be served so a blocked
+        #    head is never overtaken into starvation)
         while (budget > 0 and self.waiting
                and len(self.running) < self.max_batch):
-            req = self.waiting[0]
-            n = min(req.prompt_len, budget)
-            need = self.bm.blocks_needed(n)
-            if self.bm.num_free - need < watermark:
+            req = self._peek_waiting()
+            shared: List[int] = []
+            cached = 0
+            if self.bm.prefix_caching and req.prompt_tokens is not None:
+                shared, matched = self.bm.match_prefix(req.prompt_tokens)
+                # at least one prompt position must be recomputed so the
+                # step produces logits for the first output token
+                cached = min(matched, max(req.prompt_len - 1, 0))
+            n = min(req.prompt_len - cached, budget)
+            # blocks this admission may consume: table growth past the
+            # shared prefix plus worst-case CoW forks of shared blocks the
+            # first chunk writes into (the fully-cached-prompt recompute)
+            need = max(self.bm.blocks_needed(cached + n) - len(shared), 0) \
+                + self.bm.shared_blocks_in_range(shared, cached, cached + n)
+            if self.bm.num_allocatable - need < watermark:
                 break
-            self.waiting.popleft()
+            self.waiting.remove(req)
             seq = Sequence(request=req)
-            self.bm.allocate(self._seq_key(seq), n)
+            key = self._seq_key(seq)
+            try:
+                if shared:
+                    self.bm.share(key, shared, cached)
+                    seq.cached_tokens = cached
+                    seq.prefilled = cached
+                    self.bm.fork_for_write(key, cached, cached + n)
+                    self.bm.grow_to(key, cached + n)
+                else:
+                    self.bm.allocate(key, n)
+            except OutOfBlocks:
+                # the conservative `need` estimate can still lose a race
+                # against same-step growth: roll back and retry next step
+                self.bm.release(key)
+                self.waiting.appendleft(req)
+                break
             self.running.append(seq)
             batch.admitted.append(seq)
             batch.prefill_chunks.append((seq, n))
@@ -176,20 +221,34 @@ class ContinuousBatchingScheduler:
                         if s.prompt_remaining == 0 and not s.done]
         return batch
 
+    def _peek_waiting(self) -> Request:
+        """Next admission candidate: FIFO head, or — under
+        ``prefill_order="slo"`` — the earliest TTFT deadline
+        (arrival + slo; deadline-free requests sort last, FIFO among
+        equals)."""
+        if self.prefill_order == "fifo" or len(self.waiting) <= 1:
+            return self.waiting[0]
+        return min(self.waiting,
+                   key=lambda r: (r.arrival + r.slo if r.slo is not None
+                                  else float("inf"), r.arrival, r.req_id))
+
     def _reserve_chunk(self, seq: Sequence, n: int) -> bool:
         """Reserve KV blocks for the next ``n`` prompt tokens of ``seq``;
         on exhaustion evict the youngest other sequence, then ``seq``
-        itself (recompute policy, same as the decode commit path)."""
+        itself (recompute policy, same as the decode commit path).  Any
+        shared block the chunk writes into is privatised first (CoW)."""
         key = self._seq_key(seq)
         if key not in self.bm.tables:
             return False
         target = seq.prefilled + n
         try:
+            self.bm.fork_for_write(key, seq.prefilled, target)
             self.bm.grow_to(key, target)
             return True
         except OutOfBlocks:
             self._preempt_youngest(exclude=seq)
             try:
+                self.bm.fork_for_write(key, seq.prefilled, target)
                 self.bm.grow_to(key, target)
                 return True
             except OutOfBlocks:
@@ -199,20 +258,33 @@ class ContinuousBatchingScheduler:
     def _seq_key(self, seq: Sequence) -> int:
         return seq.req_id
 
+    def note_prefill_progress(self, seq: Sequence, *, draft_ok: bool) -> None:
+        """Publish freshly materialised full prompt blocks in the prefix
+        cache.  Only draft-covered prefixes register: a cached block must be
+        valid in BOTH paged pools so a sharing sequence can speculate
+        without a draft catch-up write into shared blocks."""
+        if draft_ok and self.bm.prefix_caching:
+            self.bm.register_prefix(self._seq_key(seq),
+                                    seq.request.prompt_tokens, seq.prefilled)
+
     # ------------------------------------------------------------------
     def commit_tokens(self, seq: Sequence, n: int) -> bool:
         """Record n committed tokens; returns False if the sequence had to be
         preempted (blocks exhausted)."""
-        if self._seq_key(seq) not in self.bm.tables:
+        key = self._seq_key(seq)
+        if key not in self.bm.tables:
             return False  # already preempted this step
+        end = self.bm.lengths[key] + n
         try:
-            self.bm.append_tokens(self._seq_key(seq), n)
+            self.bm.fork_for_write(key, self.bm.lengths[key], end)
+            self.bm.append_tokens(key, n)
             seq.generated += n
             return True
         except OutOfBlocks:
             self._preempt_youngest(exclude=seq)
             try:
-                self.bm.append_tokens(self._seq_key(seq), n)
+                self.bm.fork_for_write(key, self.bm.lengths[key], end)
+                self.bm.append_tokens(key, n)
                 seq.generated += n
                 return True
             except OutOfBlocks:

@@ -114,6 +114,8 @@ class SimConfig:
     block_size: int = 16
     max_batch: int = 64
     chunk_tokens: int = 0     # >0: chunked-prefill hybrid batching budget
+    prefix_caching: bool = False   # CoW prefix sharing (chunked path)
+    prefill_order: str = "fifo"    # waiting-queue admission: fifo | slo
     tau_low_frac: float = 0.1
     t_persist: int = 3
     enable_offload: bool = True
@@ -130,10 +132,12 @@ def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
     capacity_tokens = cm.kv_capacity_tokens(cfg.target, cfg.draft,
                                             reserve_frac=cfg.kv_reserve_frac)
     num_blocks = max(capacity_tokens // cfg.block_size, 64)
-    bm = BlockManager(num_blocks, cfg.block_size)
+    bm = BlockManager(num_blocks, cfg.block_size,
+                      prefix_caching=cfg.prefix_caching)
     sched = ContinuousBatchingScheduler(
         bm, max_batch=cfg.max_batch,
-        chunk_tokens=cfg.chunk_tokens if cfg.chunk_tokens > 0 else None)
+        chunk_tokens=cfg.chunk_tokens if cfg.chunk_tokens > 0 else None,
+        prefill_order=cfg.prefill_order)
 
     block_bytes = cfg.block_size * kv_bytes_per_token(cfg.target)
     draft_blocks = max(math.ceil(cm.weight_bytes(cfg.draft) / block_bytes), 1)

@@ -31,6 +31,13 @@ DATASETS = {
     # mixed six-task benchmark: broad spread, hardest for the draft
     "specbench": dict(p_mu=5.0, p_sigma=1.2, o_mu=5.0, o_sigma=1.0,
                       a_a=4.0, a_b=3.0, slo_ttft=1.5),
+    # templated serving (shared system prompt / few-shot header): the
+    # length parameters describe the per-request SUFFIX; every prompt is
+    # template_len shared tokens + a drawn suffix.  The prefix-sharing
+    # workload: identical prefix blocks per request are exactly what
+    # copy-on-write prefix caching reclaims.
+    "templated": dict(p_mu=3.6, p_sigma=0.7, o_mu=4.2, o_sigma=0.8,
+                      a_a=5.0, a_b=3.0, slo_ttft=0.5, template_len=512),
 }
 
 
@@ -112,6 +119,42 @@ class RateTrace:
                         float(alphas[i]), slo=deadline) for i in range(n)]
 
 
+def templated_requests(rate_qps: float, n: int, *, dataset: str = "templated",
+                       template_len: "int | None" = None, seed: int = 0,
+                       max_prompt: int = 2048, max_output: int = 1024,
+                       vocab: int = 32000,
+                       slo: "float | None" = None) -> List[Request]:
+    """Poisson arrivals whose prompts share a common template prefix.
+
+    Every request's ``prompt_tokens`` is the SAME ``template_len``-token
+    system prompt (drawn once from ``seed``) followed by a per-request
+    suffix whose length follows the dataset's prompt distribution — the
+    canonical prefix-caching workload.  ``template_len=0`` produces fully
+    disjoint prompts of the same shape (the caching-off control arm).
+    Token ids are synthesised (the simulated tier only hashes them; the
+    real tier can cap ``vocab`` to the model's)."""
+    rng = np.random.default_rng(seed)
+    d = DATASETS[dataset]
+    if template_len is None:
+        template_len = d.get("template_len", 0)
+    deadline = dataset_slo(dataset, slo)
+    template = rng.integers(0, vocab, size=template_len).tolist()
+    gaps = rng.exponential(1.0 / rate_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    suffixes = _lengths(rng, d["p_mu"], d["p_sigma"], n, 4,
+                        max(max_prompt - template_len, 4))
+    outputs = _lengths(rng, d["o_mu"], d["o_sigma"], n, 4, max_output)
+    alphas = rng.beta(d["a_a"], d["a_b"], size=n)
+    out = []
+    for i in range(n):
+        sfx = rng.integers(0, vocab, size=int(suffixes[i])).tolist()
+        toks = template + sfx
+        out.append(Request(i, float(arrivals[i]), len(toks),
+                           int(outputs[i]), float(alphas[i]),
+                           prompt_tokens=toks, slo=deadline))
+    return out
+
+
 def split_requests(requests: List[Request], n_replicas: int
                    ) -> List[List[Request]]:
     """Deterministically split ONE arrival stream across N replicas.
@@ -131,14 +174,21 @@ def split_requests(requests: List[Request], n_replicas: int
 
 def tiny_requests(n: int, *, rate_qps: float = 100.0, prompt_len: int = 16,
                   output_len: int = 8, seed: int = 0, vocab: int = 256,
-                  alpha: float = 0.9) -> List[Request]:
-    """Small deterministic workload for the real-execution tier / tests."""
+                  alpha: float = 0.9, template_len: int = 0) -> List[Request]:
+    """Small deterministic workload for the real-execution tier / tests.
+
+    ``template_len > 0`` makes the first that many prompt tokens identical
+    across all requests (shared system prompt), the tiny analogue of
+    :func:`templated_requests` for prefix-caching tests."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_qps, size=n)
     arrivals = np.cumsum(gaps)
+    template = rng.integers(0, vocab,
+                            size=min(template_len, prompt_len)).tolist()
     out = []
     for i in range(n):
-        toks = rng.integers(0, vocab, size=prompt_len).tolist()
+        sfx = rng.integers(0, vocab,
+                           size=prompt_len - len(template)).tolist()
         out.append(Request(i, float(arrivals[i]), prompt_len, output_len,
-                           alpha, prompt_tokens=toks))
+                           alpha, prompt_tokens=template + sfx))
     return out

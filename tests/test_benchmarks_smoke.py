@@ -39,6 +39,40 @@ def test_prefill_grid_end_to_end():
     assert p99("prefill.high.chunk384") < p99("prefill.high.monolithic")
 
 
+def test_prefix_grid_end_to_end():
+    """`--only prefix` runs the {templated,disjoint} x {cache,nocache} grid,
+    persists BENCH_prefix.json, and the headline templated.high cell shows
+    prefix caching strictly reducing p99 TTFT and allocated blocks with
+    byte-identical committed token streams — the acceptance criterion."""
+    res = _run("benchmarks.run", "--only", "prefix", "--fast")
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = [l for l in res.stdout.splitlines() if l.startswith("prefix.")]
+    names = {r.split(",")[0] for r in rows}
+    assert names == {f"prefix.{wl}.{rate}.{mode}"
+                     for wl in ("templated", "disjoint")
+                     for rate in ("low", "high")
+                     for mode in ("cache", "nocache")}
+
+    data = json.load(open(os.path.join(ROOT, "BENCH_prefix.json")))
+    grid = data["grid"]
+    for rate in ("low", "high"):
+        on = grid[f"templated.{rate}.cache"]
+        off = grid[f"templated.{rate}.nocache"]
+        # identical committed token streams, every request finished
+        assert on["tokens_sha"] == off["tokens_sha"]
+        assert on["finished"] == off["finished"] > 0
+        # the headline: strictly lower tail latency AND block consumption
+        assert on["p99_ttft_s"] < off["p99_ttft_s"]
+        assert on["blocks_allocated"] < off["blocks_allocated"]
+        assert on["prefix_hit_rate"] > 0.5
+    # the disjoint control: caching buys nothing and costs nothing
+    for rate in ("low", "high"):
+        on = grid[f"disjoint.{rate}.cache"]
+        off = grid[f"disjoint.{rate}.nocache"]
+        assert on["tokens_sha"] == off["tokens_sha"]
+        assert on["prefix_hit_rate"] == 0.0
+
+
 def test_backend_grid_end_to_end():
     """`--only backend` runs REAL dense and paged backends, prints the CSV
     grid and persists BENCH_backend.json with the capacity comparison."""
@@ -63,3 +97,6 @@ def test_make_tables_end_to_end():
     assert res.returncode == 0, res.stderr[-2000:]
     # with or without dry-run artifacts present it must report each file
     assert "dryrun_single_pod.json" in res.stdout
+    # and the prefix grid section renders (table when the JSON exists,
+    # a pointer when it doesn't)
+    assert "BENCH_prefix" in res.stdout or "Prefix-sharing" in res.stdout

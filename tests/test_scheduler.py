@@ -1,4 +1,5 @@
-"""Continuous batching scheduler: admission, block gating, preemption."""
+"""Continuous batching scheduler: admission, block gating, preemption,
+deadline-aware prefill ordering."""
 import pytest
 
 from repro.serving.kv_cache import BlockManager
@@ -90,6 +91,73 @@ def test_freed_blocks_reusable_same_step():
     assert len(admitted) == 1
     assert bm.num_free == 0
     bm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware prefill admission (prefill_order="slo")
+# ---------------------------------------------------------------------------
+
+
+def _slo_sched(chunk=32, order="slo"):
+    bm = BlockManager(1000, 4)
+    return ContinuousBatchingScheduler(bm, max_batch=8, watermark_frac=0.0,
+                                       chunk_tokens=chunk,
+                                       prefill_order=order)
+
+
+def test_slo_order_admits_earliest_deadline_first():
+    """Under budget contention the tightest TTFT deadline wins admission,
+    regardless of arrival order; deadline-free requests sort last."""
+    s = _slo_sched(chunk=40)
+    s.add_request(Request(0, 0.0, 40, 2, slo=None))      # no deadline
+    s.add_request(Request(1, 0.1, 40, 2, slo=5.0))       # deadline 5.1
+    s.add_request(Request(2, 0.2, 40, 2, slo=1.0))       # deadline 1.2 (!)
+    batch = s.schedule_chunks()
+    assert [c[0].req_id for c in batch.prefill_chunks] == [2]
+    batch2 = s.schedule_chunks()
+    assert [c[0].req_id for c in batch2.prefill_chunks][0] == 2  # continues
+    # FIFO among the rest once 2 finishes its prompt
+    ids = [c[0].req_id for c in batch2.prefill_chunks]
+    assert ids in ([2], [2, 1])
+
+
+def test_slo_order_fifo_among_equal_deadlines():
+    s = _slo_sched(chunk=16)
+    s.add_request(Request(0, 0.0, 16, 2, slo=1.0))
+    s.add_request(Request(1, 0.0, 16, 2, slo=1.0))       # same deadline
+    batch = s.schedule_chunks()
+    assert [c[0].req_id for c in batch.prefill_chunks] == [0]
+
+
+def test_fifo_order_is_default_and_unchanged():
+    s = _slo_sched(chunk=40, order="fifo")
+    s.add_request(Request(0, 0.0, 40, 2, slo=None))
+    s.add_request(Request(1, 0.1, 40, 2, slo=0.1))
+    batch = s.schedule_chunks()
+    assert [c[0].req_id for c in batch.prefill_chunks] == [0]
+
+
+def test_slo_order_keeps_midprefill_progress_guarantee():
+    """A running mid-prefill sequence is still served before ANY admission,
+    even when a newer arrival has a tighter deadline (no starvation)."""
+    s = _slo_sched(chunk=16)
+    s.add_request(Request(0, 0.0, 64, 2, slo=10.0))
+    b = s.schedule_chunks()
+    assert [c[0].req_id for c in b.prefill_chunks] == [0]
+    for seq, n in b.prefill_chunks:
+        seq.prefilled += n
+    s.add_request(Request(1, 0.5, 8, 2, slo=0.1))        # urgent newcomer
+    b2 = s.schedule_chunks()
+    ids = [c[0].req_id for c in b2.prefill_chunks]
+    assert ids[0] == 0                                   # continue first
+    assert b2.prefill_chunks[0][1] == 16
+
+
+def test_invalid_prefill_order_rejected():
+    bm = BlockManager(8, 4)
+    with pytest.raises(ValueError):
+        ContinuousBatchingScheduler(bm, chunk_tokens=8,
+                                    prefill_order="deadline")
 
 
 def test_preemption_recompute():

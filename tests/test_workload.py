@@ -1,11 +1,12 @@
 """Workload generation: seed determinism, length-distribution sanity,
-dynamic-rate trace shape, per-dataset SLO attachment."""
+dynamic-rate trace shape, per-dataset SLO attachment, templated prompts."""
 import numpy as np
 import pytest
 
 from repro.serving.workload import (DATASETS, dataset_slo,
                                     dynamic_rate_trace, poisson_requests,
-                                    split_requests, tiny_requests)
+                                    split_requests, templated_requests,
+                                    tiny_requests)
 
 
 def _fields(reqs):
@@ -93,6 +94,43 @@ def test_slo_override_and_disable():
     assert all(r.slo == 2.0 for r in reqs)
     reqs = poisson_requests(10, 10, dataset="alpaca", seed=0, slo=-1.0)
     assert all(r.slo is None for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# templated workload (prefix-sharing)
+# ---------------------------------------------------------------------------
+
+
+def test_templated_requests_share_exact_prefix():
+    reqs = templated_requests(20, 40, template_len=128, seed=3)
+    template = reqs[0].prompt_tokens[:128]
+    for r in reqs:
+        assert r.prompt_tokens[:128] == template       # byte-identical
+        assert r.prompt_len == len(r.prompt_tokens) >= 128 + 4
+        assert r.slo == DATASETS["templated"]["slo_ttft"]
+    # suffixes genuinely vary (lognormal draw per request)
+    assert len({len(r.prompt_tokens) for r in reqs}) > 5
+
+
+def test_templated_requests_deterministic_and_disjoint_mode():
+    a = templated_requests(15, 30, seed=7)
+    b = templated_requests(15, 30, seed=7)
+    assert [(r.arrival, r.prompt_tokens, r.output_len) for r in a] == \
+        [(r.arrival, r.prompt_tokens, r.output_len) for r in b]
+    # default template length comes from the dataset entry
+    assert a[0].prompt_tokens[:512] == a[1].prompt_tokens[:512]
+    # template_len=0: fully disjoint prompts of the same shape
+    d = templated_requests(15, 30, template_len=0, seed=7)
+    assert d[0].prompt_tokens[:4] != d[1].prompt_tokens[:4]
+
+
+def test_tiny_requests_template_prefix():
+    reqs = tiny_requests(6, prompt_len=16, template_len=8, seed=2)
+    t = reqs[0].prompt_tokens[:8]
+    assert all(r.prompt_tokens[:8] == t for r in reqs)
+    assert all(len(r.prompt_tokens) == 16 for r in reqs)
+    suffixes = {tuple(r.prompt_tokens[8:]) for r in reqs}
+    assert len(suffixes) > 1
 
 
 # ---------------------------------------------------------------------------
