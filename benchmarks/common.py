@@ -66,14 +66,27 @@ def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
 
 def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
                 router: str = "jsq", rate: float = 10.0, n: int = 100,
-                dataset: str = "alpaca", max_batch: int = 256, seed: int = 0):
+                dataset: str = "alpaca", max_batch: int = 256, seed: int = 0,
+                chunk_tokens: int = 0, prefix_caching: bool = False,
+                requests=None, trace=None, router_kwargs=None,
+                shed_factor=None, autoscale=None):
     """Run one cluster cell on the simulated tier; rate is the TOTAL fleet
-    arrival rate.  Returns (ClusterMetrics, ServingCluster)."""
+    arrival rate.  ``requests``/``trace`` override the Poisson stream;
+    ``shed_factor``/``autoscale`` enable the control-plane admission and
+    elastic-scaling controllers.  Returns (ClusterMetrics, ServingCluster)."""
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
-                    seed=seed)
-    cl = build_sim_cluster(cfg, n_replicas, policy, router=router)
-    reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1)
+                    seed=seed, chunk_tokens=chunk_tokens,
+                    prefix_caching=prefix_caching)
+    cl = build_sim_cluster(cfg, n_replicas, policy, router=router,
+                           router_kwargs=router_kwargs,
+                           shed_factor=shed_factor, autoscale=autoscale)
+    if requests is not None:
+        reqs = requests
+    elif trace is not None:
+        reqs = trace.sample_requests(n, dataset=dataset, seed=seed + 1)
+    else:
+        reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1)
     m = cl.run(reqs)
     return m, cl
 

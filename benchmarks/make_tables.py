@@ -69,6 +69,40 @@ def prefix_table():
     print("\n".join(out))
 
 
+def control_table():
+    """Render the control-plane grid persisted by `run.py --only control`."""
+    path = os.path.join(ROOT, "BENCH_control.json")
+    if not os.path.exists(path):
+        print("BENCH_control.json: missing (run benchmarks.run "
+              "--only control)")
+        return
+    data = json.load(open(path))
+    tmeta = data.get("templated", {})
+    bmeta = data.get("bursty", {})
+    out = [f"\n### Cluster control plane (templated arm: "
+           f"{tmeta.get('num_templates')} templates x "
+           f"{tmeta.get('template_len')} tokens, "
+           f"chunk={tmeta.get('chunk_tokens')}, caching on; bursty arm: "
+           f"{bmeta.get('trace', 'baseline->spike->drain')}, monolithic, "
+           f"caching off)\n"]
+    out.append("| cell | p50 TTFT | p99 TTFT | SLO att | offered | shed "
+               "| hit rate | per-replica reqs | peak reps | replica s |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for name, r in sorted(data.get("grid", {}).items()):
+        reqs = "/".join(str(c) for c in r.get("replica_requests", [])) or "-"
+        out.append(
+            f"| {name} | {r['p50_ttft_s']*1e3:.0f}ms "
+            f"| {r['p99_ttft_s']*1e3:.0f}ms "
+            f"| {r['slo_attainment']:.3f} "
+            f"| {r.get('slo_attainment_offered', r['slo_attainment']):.3f} "
+            f"| {r.get('shed', 0)} "
+            f"| {r.get('prefix_hit_rate', 0.0):.3f} "
+            f"| {reqs} "
+            f"| {r.get('peak_replicas', 2)} "
+            f"| {r.get('replica_seconds', 0.0):.0f} |")
+    print("\n".join(out))
+
+
 def main():
     for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
         cells = [fix_artifact(c) for c in load(fname)]
@@ -79,6 +113,7 @@ def main():
         fits = sum(1 for c in cells if c["fits_hbm"])
         print(table(cells, f"{fname} ({fits}/{len(cells)} fit 16 GB)"))
     prefix_table()
+    control_table()
 
 
 if __name__ == "__main__":

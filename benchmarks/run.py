@@ -343,6 +343,123 @@ def cluster_sweep(csv: CSV, fast: bool):
             f"{agg[(hi, 'low')] / agg[(1, 'low')]:.2f}x")
 
 
+def control_grid(csv: CSV, fast: bool):
+    """Cluster control plane: {static, autoscale} fleets x
+    {rr, kv, slo, affinity} routers x {templated, bursty} traces.
+
+    Templated arm (static 2-replica fleet, prefix caching on, chunked):
+    a multi-template workload where sticky affinity routing partitions the
+    template population across replicas — each replica's prefix cache
+    specialises, which shows up as strictly higher aggregate hit rate and
+    strictly lower p99 TTFT than KV-headroom routing, with identical
+    per-request committed token counts (the acceptance criterion; the sim
+    tier commits counts, not token contents).
+
+    Bursty arm (baseline -> spike -> drain): the elastic fleet (autoscale
+    1 -> 2 replicas + admission control) against the static 2-replica
+    fleet at EQUAL peak replica count.  During the spike the offered load
+    exceeds even the full fleet; the static fleet admits everything and
+    lets the queue collapse its tail, while the control plane sheds the
+    hopeless arrivals at the door and keeps admitted traffic inside the
+    deadline — strictly higher SLO attainment of admitted traffic (shed
+    requests reported separately), at fewer replica-seconds.
+
+    Persists the grid to BENCH_control.json."""
+    import hashlib
+
+    from repro.serving.workload import bursty_trace, templated_requests
+
+    # per-arm scheduler configs differ (the templated arm exercises the
+    # prefix cache through the chunked path; the bursty arm is the plain
+    # monolithic fleet) — record each arm's config so rows are only ever
+    # compared within their arm
+    results = {
+        "templated": {"chunk_tokens": 384, "template_len": 512,
+                      "num_templates": 8, "prefix_caching": True,
+                      "replicas": 2},
+        "bursty": {"chunk_tokens": 0, "prefix_caching": False,
+                   "dataset": "alpaca", "peak_replicas": 2,
+                   "trace": "baseline 4qps -> spike 240qps -> drain 2qps"},
+        "grid": {},
+    }
+    routers = ("rr", "kv", "slo", "affinity")
+
+    # -- templated arm: static 2-replica fleet, caching on ---------------
+    n_t = 140 if fast else 360
+    treqs = templated_requests(60, n_t, num_templates=8, seed=1)
+    for router in routers:
+        t0 = time.perf_counter()
+        m, cl = run_cluster("7b", 2, "nightjar", router=router,
+                            requests=treqs, chunk_tokens=384,
+                            prefix_caching=True)
+        wall = (time.perf_counter() - t0) * 1e6
+        stream = sorted((r.req_id, r.tokens) for r in m.requests)
+        sha = hashlib.sha256(repr(stream).encode()).hexdigest()[:16]
+        row = {
+            "p50_ttft_s": m.ttft_percentile(0.5),
+            "p99_ttft_s": m.ttft_percentile(0.99),
+            "slo_attainment": m.slo_attainment,
+            "goodput_tok_s": m.goodput,
+            "prefix_hit_rate": m.prefix_hit_rate,
+            "blocks_allocated": sum(r.blocks_allocated
+                                    for r in m.per_replica),
+            "finished": len(m.requests),
+            "replica_requests": m.replica_counts(),
+            "spills": getattr(cl.router, "spills", 0),
+            "tokens_sha": sha,
+        }
+        results["grid"][f"templated.static.{router}"] = row
+        csv.add(f"control.templated.static.{router}", wall,
+                f"p99_ttft={row['p99_ttft_s']*1e3:.0f}ms;"
+                f"hit_rate={row['prefix_hit_rate']:.3f};"
+                f"slo_att={row['slo_attainment']:.3f};"
+                f"tokens_sha={sha}")
+
+    # -- bursty arm: static vs elastic at equal peak replica count -------
+    trace = bursty_trace(base=4, spike=240, base_s=12 if fast else 20,
+                         spike_s=6 if fast else 12,
+                         drain_s=20 if fast else 30, drain=2, seed=2)
+    n_b = 1560 if fast else 3040
+    breqs = trace.sample_requests(n_b, dataset="alpaca", seed=3)
+    bursty_routers = ("kv", "slo") if fast else routers
+    for fleet in ("static", "autoscale"):
+        kw = dict(requests=breqs)
+        if fleet == "autoscale":
+            kw.update(shed_factor=1.5,
+                      autoscale=dict(min_replicas=1, max_replicas=2,
+                                     window_s=8.0))
+        for router in bursty_routers:
+            t0 = time.perf_counter()
+            m, cl = run_cluster("7b", 2, "nightjar", router=router, **kw)
+            wall = (time.perf_counter() - t0) * 1e6
+            s = m.summary()
+            row = {
+                "p50_ttft_s": m.ttft_percentile(0.5),
+                "p99_ttft_s": m.ttft_percentile(0.99),
+                "slo_attainment": m.slo_attainment,
+                "slo_attainment_offered": m.slo_attainment_offered,
+                "goodput_tok_s": m.goodput,
+                "shed": m.shed_count,
+                "finished": len(m.requests),
+                "peak_replicas": m.peak_replicas,
+                "replica_seconds": m.replica_seconds,
+                "autoscale_adds": s.get("autoscale", {}).get("adds", 0),
+                "autoscale_drains": s.get("autoscale", {}).get("drains", 0),
+            }
+            results["grid"][f"bursty.{fleet}.{router}"] = row
+            csv.add(f"control.bursty.{fleet}.{router}", wall,
+                    f"slo_att={row['slo_attainment']:.3f};"
+                    f"offered={row['slo_attainment_offered']:.3f};"
+                    f"shed={row['shed']};"
+                    f"peak_replicas={row['peak_replicas']};"
+                    f"replica_s={row['replica_seconds']:.0f}")
+
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_control.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+
+
 def cluster_routers(csv: CSV, fast: bool):
     """Router-policy comparison at moderate load on 2 replicas."""
     for router in ("rr", "jsq", "kv"):
@@ -640,6 +757,7 @@ BENCHES = {
     "backend": backend_grid,
     "cluster": cluster_sweep,
     "routers": cluster_routers,
+    "control": control_grid,
     "table3": table3_cswitch,
     "table7": table7_memops,
     "regret": appendix_regret,

@@ -22,6 +22,19 @@ Prefix-sharing copy-on-write KV caching on the templated workload (shared
 system prompt; cached prefixes cost no prefill compute and no new blocks):
   PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
       --dataset templated --rate 60 --chunk-tokens 384 --prefix-caching on
+
+Cluster control plane: sticky prefix-affinity routing over a multi-template
+workload (each replica's cache specialises on its own templates):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --replicas 2 --router affinity --dataset templated --num-templates 8 \
+      --chunk-tokens 384 --prefix-caching on --rate 60
+
+Elastic autoscaling + admission control on a bursty trace (the fleet starts
+at 1 replica, grows to --replicas under the spike, sheds hopeless arrivals
+at the door, drains back down after):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --replicas 2 --router slo --autoscale --shed-factor 1.5 \
+      --dataset alpaca --bursty --requests 400
 """
 from __future__ import annotations
 
@@ -58,10 +71,29 @@ def main():
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1,
-                    help="sim tier only: number of engine replicas")
+                    help="sim tier only: number of engine replicas (with "
+                         "--autoscale this is the fleet's max size)")
     ap.add_argument("--router", default="jsq",
-                    choices=["rr", "jsq", "kv"],
-                    help="dispatch policy for --replicas > 1")
+                    choices=["rr", "jsq", "kv", "slo", "affinity"],
+                    help="dispatch policy for --replicas > 1: rr/jsq/kv "
+                         "(load / headroom), slo (predicted-TTFT deadline "
+                         "headroom), affinity (sticky template-hash routing "
+                         "with load-aware spillover)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic fleet: start at 1 replica, scale up to "
+                         "--replicas on a windowed SLO-attainment signal, "
+                         "drain back down when load clears")
+    ap.add_argument("--shed-factor", type=float, default=0.0,
+                    help="admission control: shed an arrival when every "
+                         "replica's predicted TTFT exceeds slo * factor "
+                         "(0 disables)")
+    ap.add_argument("--num-templates", type=int, default=1,
+                    help="templated dataset: number of distinct system-"
+                         "prompt templates (affinity-routing workload)")
+    ap.add_argument("--bursty", action="store_true",
+                    help="sim tier: draw arrivals from the bursty "
+                         "baseline->spike->drain trace instead of a "
+                         "constant-rate Poisson process")
     args = ap.parse_args()
 
     from .. import configs
@@ -70,7 +102,8 @@ def main():
         from ..serving.costmodel import RooflineCostModel, TPU_V5E
         from ..serving.simulator import (SimConfig, build_sim_cluster,
                                          build_sim_engine)
-        from ..serving.workload import poisson_requests, templated_requests
+        from ..serving.workload import (bursty_trace, poisson_requests,
+                                        templated_requests)
 
         target = configs.get_config(args.arch)
         chunk = RooflineCostModel(TPU_V5E).resolve_chunk_tokens(
@@ -83,18 +116,31 @@ def main():
             prefix_caching=args.prefix_caching == "on",
             prefill_order=args.prefill_order,
             enable_offload=not args.no_offload, seed=args.seed)
+        if args.dataset == "templated" and args.bursty:
+            ap.error("--bursty is not supported with --dataset templated "
+                     "(the templated workload is a constant-rate Poisson "
+                     "stream); pick one")
         if args.dataset == "templated":
             # prompts carry real token ids (shared template + suffix) so
-            # the prefix cache has content to hash
+            # the prefix cache has content to hash and the affinity router
+            # has an identity to be sticky about
             reqs = templated_requests(args.rate, args.requests,
+                                      num_templates=args.num_templates,
                                       seed=args.seed + 1, slo=args.slo)
+        elif args.bursty:
+            trace = bursty_trace(seed=args.seed)
+            reqs = trace.sample_requests(args.requests, dataset=args.dataset,
+                                         seed=args.seed + 1, slo=args.slo)
         else:
             reqs = poisson_requests(args.rate, args.requests,
                                     dataset=args.dataset, seed=args.seed + 1,
                                     slo=args.slo)
-        if args.replicas > 1:
-            cluster = build_sim_cluster(cfg, args.replicas, args.policy,
-                                        router=args.router)
+        if args.replicas > 1 or args.autoscale or args.shed_factor > 0:
+            autoscale = (dict(min_replicas=1, max_replicas=args.replicas)
+                         if args.autoscale else None)
+            cluster = build_sim_cluster(
+                cfg, args.replicas, args.policy, router=args.router,
+                shed_factor=args.shed_factor or None, autoscale=autoscale)
             metrics = cluster.run(reqs)
         else:
             engine = build_sim_engine(cfg, args.policy)

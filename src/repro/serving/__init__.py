@@ -7,8 +7,14 @@ scheduler, the MAB planner and the elastic memory manager.
 
 Fleet: ``cluster.ServingCluster`` — N replicas advanced by a shared virtual
 event clock behind a ``router.Router`` dispatch policy (round-robin /
-join-shortest-queue / KV-headroom-aware).  ``simulator.build_sim_cluster``
-builds the whole thing on the analytical tier.
+join-shortest-queue / KV-headroom / predicted-TTFT SLO headroom / sticky
+prefix affinity), governed by the ``controlplane.ControlPlane`` — per-replica
+EWMA telemetry + queue-delay forecasts feeding admission control (load
+shedding with hysteresis) and elastic replica autoscaling
+(``add_replica`` / ``drain_replica`` on the shared clock).
+``simulator.build_sim_cluster`` builds the whole thing on the analytical
+tier.
 """
-from . import (cluster, costmodel, engine, kv_cache, memory_manager,  # noqa: F401
-               request, router, scheduler, simulator, workload)
+from . import (cluster, controlplane, costmodel, engine, kv_cache,  # noqa: F401
+               memory_manager, request, router, scheduler, simulator,
+               workload)

@@ -15,28 +15,49 @@ cluster interleaves them with a classic discrete-event loop:
 
   1. the next *engine* event is ``min over replicas of peek_next_event()``;
   2. the next *arrival* event is the head of the global request stream;
-  3. whichever is earlier happens: an arrival is routed (based on replica
-     state observed *now*) and submitted, or the earliest-clock replica
-     executes one ``step()``.
+  3. whichever is earlier happens: an arrival is admitted (or shed), routed
+     (based on replica state observed *now*) and submitted, or the
+     earliest-clock replica executes one ``step()``.
 
 Because a replica is only stepped when it holds the minimum clock, replica
 timelines interleave correctly in virtual time, and routing decisions see
 queue/KV state no newer than the arrival instant — the same information a
 real front-end would have.
 
-Determinism: engines, router tie-breaks and workload generation are all
-seeded/deterministic, so a cluster run is exactly reproducible (golden-value
-tested in tests/test_cluster.py).
+Control plane (serving/controlplane.py)
+---------------------------------------
+Every cluster owns a :class:`ControlPlane` (telemetry-only by default).
+After each replica step the plane consumes the replica's freshly finished
+request stats (the EWMA TTFT/TPOT predictors and the forecast-residual
+bias); at each arrival the cluster consults, in order:
+
+  * the **autoscaler** — may ``add_replica`` (a fresh engine joins at the
+    current virtual time) or ``drain_replica`` (the least-loaded replica
+    stops receiving traffic, finishes its running work, then retires);
+  * the **admission controller** — may *shed* the arrival at the door when
+    even the best replica's predicted TTFT is hopeless (recorded in
+    ``ClusterMetrics.shed``, never as an SLO miss of admitted traffic);
+  * the **router** — dispatches over the routable (non-draining) replicas.
+
+Determinism: engines, router tie-breaks, telemetry, controllers and
+workload generation are all seeded/deterministic, so a cluster run is
+exactly reproducible — two runs of the same config produce byte-identical
+routing decisions (golden-value tested in tests/test_cluster.py and
+tests/test_controlplane.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
+from .controlplane import ControlPlane
 from .engine import ServingEngine
 from .request import (Metrics, Request, RequestStats, goodput_of, percentile,
                       slo_attainment_of)
 from .router import Router
+
+# replica lifecycle states
+ACTIVE, DRAINING, RETIRED = "active", "draining", "retired"
 
 
 @dataclass
@@ -46,6 +67,10 @@ class ClusterMetrics:
     per_replica: List[Metrics]
     elapsed: float = 0.0              # virtual makespan across replicas
     assignments: Dict[int, int] = field(default_factory=dict)  # req -> replica
+    shed: List[dict] = field(default_factory=list)   # rejected at the door
+    autoscale_events: List[dict] = field(default_factory=list)
+    replica_states: List[str] = field(default_factory=list)
+    replica_spans: List[tuple] = field(default_factory=list)  # (start, end)
 
     @property
     def total_tokens(self) -> int:
@@ -90,12 +115,58 @@ class ClusterMetrics:
 
     @property
     def slo_attainment(self) -> float:
+        """Attainment of ADMITTED deadline-carrying traffic (shed requests
+        are accounted separately — see ``slo_attainment_offered``)."""
         return slo_attainment_of(self.requests)
+
+    @property
+    def slo_attainment_offered(self) -> float:
+        """Attainment over the OFFERED load: shed deadline-carrying
+        requests count as misses (the honest fleet-level number)."""
+        with_slo = [r for r in self.requests if r.slo is not None]
+        shed_slo = sum(1 for s in self.shed if s.get("slo") is not None)
+        total = len(with_slo) + shed_slo
+        if total == 0:
+            return 1.0
+        return sum(r.slo_met for r in with_slo) / total
+
+    @property
+    def shed_count(self) -> int:
+        return len(self.shed)
 
     @property
     def goodput(self) -> float:
         """Fleet tokens/s from requests that met their TTFT SLO."""
         return goodput_of(self.requests, self.elapsed, self.throughput)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Aggregate prefix-cache hit rate across the fleet."""
+        q = sum(m.prefix.get("queries", 0) for m in self.per_replica)
+        h = sum(m.prefix.get("hits", 0) for m in self.per_replica)
+        return h / q if q else 0.0
+
+    @property
+    def peak_replicas(self) -> int:
+        """Most replicas simultaneously non-retired at any arrival/step."""
+        if not self.replica_spans:
+            return len(self.per_replica)
+        events = []
+        for start, end in self.replica_spans:
+            events.append((start, 1))
+            events.append((end, -1))
+        peak = cur = 0
+        for _, d in sorted(events, key=lambda e: (e[0], -e[1])):
+            cur += d
+            peak = max(peak, cur)
+        return peak
+
+    @property
+    def replica_seconds(self) -> float:
+        """Total replica-occupancy (virtual seconds summed over replicas)
+        — the capacity cost an autoscaled fleet actually paid."""
+        return sum(max(end - start, 0.0)
+                   for start, end in self.replica_spans)
 
     def replica_counts(self) -> List[int]:
         """Requests routed to each replica."""
@@ -104,6 +175,26 @@ class ClusterMetrics:
         for idx in self.assignments.values():
             counts[idx] += 1
         return counts
+
+    def per_replica_summary(self) -> List[dict]:
+        """Per-replica breakdown: the control-plane observability surface."""
+        counts = self.replica_counts()
+        out = []
+        for i, m in enumerate(self.per_replica):
+            row = {
+                "replica": i,
+                "state": (self.replica_states[i]
+                          if i < len(self.replica_states) else ACTIVE),
+                "requests": counts[i],
+                "tok_s": round(m.throughput, 2),
+                "p99_ttft_s": round(m.ttft_percentile(0.99), 4),
+                "slo_attainment": round(m.slo_attainment, 4),
+                "offloads": m.offload_events,
+            }
+            if m.prefix:
+                row["prefix_hit_rate"] = round(m.prefix_hit_rate, 4)
+            out.append(row)
+        return out
 
     def summary(self) -> dict:
         out = {
@@ -123,42 +214,184 @@ class ClusterMetrics:
             "per_replica_tok_s": [round(m.throughput, 2)
                                   for m in self.per_replica],
             "per_replica_requests": self.replica_counts(),
+            "per_replica": self.per_replica_summary(),
             "switches": sum(m.switch_count for m in self.per_replica),
             "offloads": sum(m.offload_events for m in self.per_replica),
             "reloads": sum(m.reload_events for m in self.per_replica),
             "blocks_allocated": sum(m.blocks_allocated
                                     for m in self.per_replica),
         }
+        if self.shed or self.autoscale_events:
+            out["shed_count"] = self.shed_count
+            out["slo_attainment_offered"] = round(
+                self.slo_attainment_offered, 4)
+        if self.autoscale_events:
+            out["peak_replicas"] = self.peak_replicas
+            out["replica_seconds"] = round(self.replica_seconds, 3)
+            out["autoscale"] = {
+                "adds": sum(1 for e in self.autoscale_events
+                            if e["kind"] == "add"),
+                "drains": sum(1 for e in self.autoscale_events
+                              if e["kind"] == "drain"),
+                "retires": sum(1 for e in self.autoscale_events
+                               if e["kind"] == "retire"),
+            }
         if any(m.prefix for m in self.per_replica):
             out["prefix_saved_tokens"] = sum(
                 m.prefix.get("saved_tokens", 0) for m in self.per_replica)
             out["prefix_hits"] = sum(
                 m.prefix.get("hits", 0) for m in self.per_replica)
+            out["prefix_hit_rate"] = round(self.prefix_hit_rate, 4)
         return out
 
 
 class ServingCluster:
-    def __init__(self, replicas: Sequence[ServingEngine], router: Router):
+    def __init__(self, replicas: Sequence[ServingEngine], router: Router,
+                 *, control: Optional[ControlPlane] = None,
+                 replica_factory: Optional[
+                     Callable[[int], ServingEngine]] = None):
         if not replicas:
             raise ValueError("cluster needs at least one replica")
         self.replicas = list(replicas)
         for i, eng in enumerate(self.replicas):
             eng.replica_id = i
         self.router = router
+        self.control = control if control is not None else ControlPlane()
+        # headroom-based routers share the cluster's telemetry book
+        if getattr(router, "control", None) is None:
+            router.control = self.control
+        self.replica_factory = replica_factory
+        self.state: List[str] = [ACTIVE] * len(self.replicas)
         self.assignments: Dict[int, int] = {}
+        self.shed: List[dict] = []
+        self.autoscale_events: List[dict] = []
+        self._starts = [e.clock for e in self.replicas]
+        self._retired_at: Dict[int, float] = {}
+        self._record_timeline = True
 
     # ------------------------------------------------------------------
     @property
     def num_replicas(self) -> int:
         return len(self.replicas)
 
-    def submit(self, req: Request) -> int:
-        """Route one request and enqueue it on the chosen replica."""
-        idx = self.router.route(req, self.replicas)
-        self.replicas[idx].submit(req)
-        self.assignments[req.req_id] = idx
-        return idx
+    @property
+    def num_active(self) -> int:
+        return sum(1 for s in self.state if s == ACTIVE)
 
+    def routable_replicas(self) -> List[ServingEngine]:
+        """Replicas the router may dispatch to: active only — draining
+        replicas finish their assigned work but accept nothing new.
+
+        A fully drained fleet (the operator drained everything by hand)
+        still has to land arrivals somewhere deterministic: fall back to
+        the draining replicas, and past that to the whole fleet — a
+        retired engine is just an idle engine wearing a control-plane
+        label, and serving there beats crashing the router."""
+        out = [e for e, s in zip(self.replicas, self.state) if s == ACTIVE]
+        out = out or [e for e, s in zip(self.replicas, self.state)
+                      if s != RETIRED]
+        return out or list(self.replicas)
+
+    # ------------------------------------------------------------------
+    # elastic fleet surface
+    # ------------------------------------------------------------------
+    def add_replica(self, now: float) -> int:
+        """Bring a fresh replica online at virtual time ``now`` (its clock
+        starts there — no retroactive work) and open it for routing."""
+        if self.replica_factory is None:
+            raise RuntimeError("cluster has no replica_factory")
+        rid = len(self.replicas)
+        eng = self.replica_factory(rid)
+        eng.replica_id = rid
+        eng.clock = max(eng.clock, now)
+        eng.record_timeline = self._record_timeline
+        self.replicas.append(eng)
+        self.state.append(ACTIVE)
+        self._starts.append(eng.clock)
+        self.autoscale_events.append(
+            {"kind": "add", "at": now, "replica": rid})
+        return rid
+
+    def drain_replica(self, idx: int, now: float) -> None:
+        """Stop routing to replica ``idx``; it finishes every request it
+        already owns (pending + waiting + running) and then retires —
+        draining never drops work."""
+        if self.state[idx] != ACTIVE:
+            return
+        self.state[idx] = DRAINING
+        self.autoscale_events.append(
+            {"kind": "drain", "at": now, "replica": idx})
+        self._maybe_retire(idx, now)
+
+    def _maybe_retire(self, idx: int, now: float) -> None:
+        if self.state[idx] == DRAINING and not self.replicas[idx].has_work():
+            self.state[idx] = RETIRED
+            self._retired_at[idx] = max(now, self.replicas[idx].clock)
+            self.autoscale_events.append(
+                {"kind": "retire", "at": self._retired_at[idx],
+                 "replica": idx})
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, now: Optional[float] = None) -> int:
+        """Route one request and enqueue it on the chosen replica."""
+        if now is None:
+            now = req.arrival
+        routable = self.routable_replicas()
+        pos = self.router.route(req, routable, now=now)
+        eng = routable[pos]
+        self.control.note_dispatch(eng, req, now)
+        eng.submit(req)
+        self.assignments[req.req_id] = eng.replica_id
+        return eng.replica_id
+
+    def _handle_arrival(self, req: Request) -> Optional[int]:
+        """Autoscale -> admission -> route, at the arrival instant.
+        Returns the replica id, or None when the request was shed."""
+        self.control.begin_arrival()
+        try:
+            return self._handle_arrival_inner(req)
+        finally:
+            self.control.end_arrival()
+
+    def _handle_arrival_inner(self, req: Request) -> Optional[int]:
+        now = req.arrival
+        scaler = self.control.autoscaler
+        admission = self.control.admission
+        min_forecast = None
+        if scaler is not None or admission is not None:
+            routable = self.routable_replicas()
+            min_forecast = min(self.control.forecast_ttft(e, req, now)
+                               for e in routable)
+        if scaler is not None:
+            loads = [e.load for e, s in zip(self.replicas, self.state)
+                     if s == ACTIVE]
+            n_alive = sum(1 for s in self.state if s != RETIRED)
+            action = scaler.decide(now, self.num_active, loads,
+                                   min_forecast, req.slo, n_alive=n_alive)
+            if action == "up" and self.replica_factory is not None:
+                self.add_replica(now)
+            elif action == "down" and self.num_active > 1:
+                active = [(e.load, e.replica_id) for e, s
+                          in zip(self.replicas, self.state) if s == ACTIVE]
+                _, idx = min(active)
+                self.drain_replica(idx, now)
+            if action is not None:
+                # the routable set changed: a fresh replica is dispatchable
+                # immediately, and a drained one no longer is — the
+                # admission decision must see the post-action fleet (a
+                # drained replica's low forecast must not keep the door
+                # open for traffic it can no longer take)
+                min_forecast = min(self.control.forecast_ttft(e, req, now)
+                                   for e in self.routable_replicas())
+        if admission is not None and min_forecast is not None \
+                and admission.should_shed(req, min_forecast):
+            self.shed.append({"req_id": req.req_id, "at": now,
+                              "slo": req.slo})
+            self.control.note_shed(now)
+            return None
+        return self.submit(req, now=now)
+
+    # ------------------------------------------------------------------
     def has_work(self) -> bool:
         return any(e.has_work() for e in self.replicas)
 
@@ -171,10 +404,11 @@ class ServingCluster:
     def run(self, requests: List[Request], *, max_steps: int = 5_000_000,
             record_timeline: bool = True) -> ClusterMetrics:
         """Discrete-event loop: route arrivals / step the earliest replica."""
+        self._record_timeline = record_timeline
         for e in self.replicas:
             e.record_timeline = record_timeline
         pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
-        starts = [e.clock for e in self.replicas]
+        self._starts = [e.clock for e in self.replicas]
         pi = 0
         steps = 0
         while steps < max_steps:
@@ -183,20 +417,30 @@ class ServingCluster:
                    if t is not None]
             t_engine = min(evs)[0] if evs else float("inf")
             if pi < len(pending) and pending[pi].arrival <= t_engine:
-                self.submit(pending[pi])
+                self._handle_arrival(pending[pi])
                 pi += 1
                 continue
             if not evs:
                 break
             _, idx = min(evs)
             self.replicas[idx].step()
+            self.control.observe_step(self.replicas[idx])
+            self._maybe_retire(idx, self.replicas[idx].clock)
             steps += 1
 
-        per = [e.finalize_metrics(starts[i])
+        per = [e.finalize_metrics(self._starts[i])
                for i, e in enumerate(self.replicas)]
-        makespan = max((e.clock - starts[i]
+        makespan = max((e.clock - self._starts[i]
                         for i, e in enumerate(self.replicas)
-                        if e.metrics.total_tokens or e.clock > starts[i]),
+                        if e.metrics.total_tokens or e.clock > self._starts[i]),
                        default=0.0)
+        end = max((e.clock for e in self.replicas), default=0.0)
+        spans = [(self._starts[i],
+                  self._retired_at.get(i, max(end, self._starts[i])))
+                 for i in range(len(self.replicas))]
         return ClusterMetrics(per_replica=per, elapsed=makespan,
-                              assignments=dict(self.assignments))
+                              assignments=dict(self.assignments),
+                              shed=list(self.shed),
+                              autoscale_events=list(self.autoscale_events),
+                              replica_states=list(self.state),
+                              replica_spans=spans)

@@ -1,0 +1,417 @@
+"""Cluster control plane: per-replica telemetry, predictive admission and
+elastic replica autoscaling.
+
+This is the fleet-control layer the Nightjar thesis implies: a serving
+system that *reacts to load* should not stop at per-replica knobs
+(speculation on/off, memory squeeze, batch growth) — the fleet itself must
+route, admit and scale on the same signals.  Everything here observes only
+replica queue state, the ``RooflineCostModel`` latency oracle and completed
+request statistics — never simulator internals — so the policies transfer
+to the real-execution tier unchanged (SpecServe / AdaSpec-style
+deadline-headroom control).
+
+Components
+----------
+``EWMA``
+    A bare online exponentially weighted moving average.
+``ReplicaTelemetry``
+    Per-replica online estimators fed by completed-request stats: EWMA
+    TTFT/TPOT plus a *forecast-residual* bias.  At dispatch time the control
+    plane records the model-based TTFT forecast for the routed request; when
+    the request finishes, ``observed_ttft - forecast`` updates the bias so
+    the predictor self-corrects for everything the analytic term misses
+    (decode interference, chunk scheduling, planner behaviour).
+``ReplicaSnapshot``
+    The observable state one routing/admission/scaling decision sees.
+``ControlPlane``
+    Owns the per-replica telemetry plus the optional admission and
+    autoscale controllers; computes the predicted-TTFT queue-delay forecast
+    ``max(clock - now, 0) + prefill_latency(backlog + prompt) + bias``.
+``AdmissionController``
+    Load shedding with hysteresis: when every replica's predicted TTFT
+    exceeds ``slo * shed_factor`` the request is rejected at the door
+    (counted as *shed*, not as an SLO miss of admitted traffic) and
+    admission only resumes once the forecast falls back under
+    ``slo * resume_factor`` — no flapping at the threshold.
+``AutoscaleController``
+    Elastic replica scaling on a windowed SLO-attainment signal (shed
+    requests count as misses) plus a fast pressure path (every replica's
+    forecast already past the deadline).  Scale-down drains the
+    least-loaded replica: it stops receiving traffic, finishes its running
+    work, then retires (see ``ServingCluster``).
+
+The routers built on these signals live in serving/router.py
+(``SLOAwareRouter``, ``PrefixAffinityRouter``); the elastic fleet mechanics
+(``add_replica`` / ``drain_replica``) live in serving/cluster.py.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from .kv_cache import CHAIN_ROOT, chain_hash
+from .request import Request
+
+
+# ---------------------------------------------------------------------------
+# routing-stable template identity
+# ---------------------------------------------------------------------------
+
+def template_key(tokens, window_tokens: int = 64) -> Optional[int]:
+    """Stable content hash of a prompt's first ``window_tokens`` tokens —
+    the sticky-routing identity for prefix-affinity dispatch.
+
+    Uses the BlockManager chain-hash scheme (``kv_cache.chain_hash``, a
+    seeded blake2b chain over token ids), NEVER Python's per-process-salted
+    ``hash()``: two independently
+    constructed clusters — or two processes with different
+    ``PYTHONHASHSEED`` — must route an identical request stream identically.
+    Returns ``None`` when the request carries no token ids (nothing to be
+    sticky about)."""
+    if not tokens:
+        return None
+    return chain_hash(CHAIN_ROOT, [int(t) for t in tokens[:window_tokens]])
+
+
+# ---------------------------------------------------------------------------
+# online estimators
+# ---------------------------------------------------------------------------
+
+
+class EWMA:
+    """Online exponentially weighted moving average (None until first obs)."""
+
+    def __init__(self, alpha: float = 0.3):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self.value: Optional[float] = None
+        self.n = 0
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None \
+            else self.alpha * x + (1.0 - self.alpha) * self.value
+        self.n += 1
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return self.value if self.value is not None else default
+
+
+class ReplicaTelemetry:
+    """Per-replica online predictors fed by completed-request stats.
+
+    Three estimators drive the queue-delay forecast:
+      * ``ewma_ttft`` / ``ewma_tpot`` — the replica's observed service
+        levels (reporting + cost-model-free fallback);
+      * ``ewma_slope`` — observed seconds of TTFT per backlog token at
+        dispatch time.  The roofline prefill term is a *floor*: it prices
+        the prompt FLOPs but not decode interference, batching or planner
+        behaviour.  The slope estimator learns the replica's TRUE marginal
+        delay per queued token from (dispatch backlog, observed TTFT)
+        pairs, so the forecast tracks queue growth proportionally instead
+        of by a constant additive correction;
+      * ``ewma_err`` — residual of the final forecast, self-correcting
+        whatever both terms above still miss.
+    """
+
+    def __init__(self, alpha: float = 0.3):
+        self.ewma_ttft = EWMA(alpha)
+        self.ewma_tpot = EWMA(alpha)
+        self.ewma_slope = EWMA(alpha)  # seconds per dispatch-backlog token
+        self.ewma_err = EWMA(alpha)    # observed_ttft - dispatch_forecast
+        self._forecasts: Dict[int, Tuple[float, int]] = {}
+        self._consumed = 0             # index into engine.metrics.requests
+
+    def note_dispatch(self, req_id: int, forecast: float,
+                      backlog_tokens: int) -> None:
+        self._forecasts[req_id] = (forecast, backlog_tokens)
+
+    def consume_finished(self, engine) -> List:
+        """Fold the replica's newly finished requests into the estimators;
+        returns the new RequestStats records (for cluster-wide windows)."""
+        stats = engine.metrics.requests
+        fresh = stats[self._consumed:]
+        for r in fresh:
+            self.ewma_ttft.update(r.ttft)
+            self.ewma_tpot.update(r.tpot)
+            rec = self._forecasts.pop(r.req_id, None)
+            if rec is not None:
+                forecast, backlog = rec
+                self.ewma_slope.update(r.ttft / max(backlog, 1))
+                self.ewma_err.update(r.ttft - forecast)
+        self._consumed = len(stats)
+        return fresh
+
+
+@dataclass
+class ReplicaSnapshot:
+    """Observable replica state at one control decision (no sim internals)."""
+
+    replica_id: int
+    t: float                      # decision instant (virtual time)
+    clock: float                  # the replica's own clock
+    load: int                     # pending + waiting + running requests
+    decode_count: int             # decode-ready running sequences
+    prefill_backlog_tokens: int   # committed, un-materialised prompt tokens
+    kv_allocatable: int           # free + cached-reusable blocks
+    kv_total: int
+    ewma_ttft: float
+    ewma_tpot: float
+    predicted_ttft: float         # forecast for a nominal next request
+    draining: bool = False
+
+    @property
+    def kv_headroom_frac(self) -> float:
+        return self.kv_allocatable / self.kv_total if self.kv_total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+class AdmissionController:
+    """Predictive load shedding with hysteresis.
+
+    Sheds an arrival when the BEST replica's predicted TTFT exceeds
+    ``slo * shed_factor`` — past that point admitting the request cannot
+    meet its deadline and only deepens every queue behind it (the p99
+    collapse).  Once shedding starts it persists until the forecast drops
+    back under ``slo * resume_factor`` (< shed_factor), so the controller
+    cannot flap admit/shed around a single threshold.  Requests without a
+    deadline are never shed."""
+
+    def __init__(self, *, shed_factor: float = 1.5,
+                 resume_factor: float = 1.0,
+                 default_slo: Optional[float] = None):
+        if resume_factor > shed_factor:
+            raise ValueError("resume_factor must be <= shed_factor")
+        self.shed_factor = shed_factor
+        self.resume_factor = resume_factor
+        self.default_slo = default_slo
+        self.shedding = False
+        self.shed_count = 0
+
+    def should_shed(self, req: Request, min_forecast: float) -> bool:
+        slo = req.slo if req.slo is not None else self.default_slo
+        if slo is None:
+            return False
+        if self.shedding:
+            if min_forecast <= slo * self.resume_factor:
+                self.shedding = False
+                return False
+        elif min_forecast > slo * self.shed_factor:
+            self.shedding = True
+        if self.shedding:
+            self.shed_count += 1
+        return self.shedding
+
+
+# ---------------------------------------------------------------------------
+# elastic autoscaling
+# ---------------------------------------------------------------------------
+
+
+class AutoscaleController:
+    """Scale the fleet on a windowed SLO-attainment signal.
+
+    Scale **up** (add a replica) when, over the trailing ``window_s`` of
+    virtual time, attainment of deadline-carrying traffic — counting shed
+    requests as misses — falls below ``up_attainment``, or immediately when
+    every replica's predicted TTFT already exceeds the deadline (the fast
+    pressure path; the windowed signal alone reacts one window late).
+
+    Scale **down** (drain the least-loaded replica) when windowed attainment
+    is at least ``down_attainment``, there is no pressure, and the fleet's
+    unfinished-request load would comfortably fit on one fewer replica.
+    Actions are separated by ``cooldown_s`` so one burst cannot thrash the
+    fleet."""
+
+    def __init__(self, *, min_replicas: int = 1, max_replicas: int = 4,
+                 window_s: float = 10.0, up_attainment: float = 0.9,
+                 down_attainment: float = 0.98,
+                 drain_load_per_replica: int = 8,
+                 cooldown_s: float = 2.0, min_window_samples: int = 8):
+        if min_replicas < 1 or max_replicas < min_replicas:
+            raise ValueError("need 1 <= min_replicas <= max_replicas")
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.window_s = window_s
+        self.up_attainment = up_attainment
+        self.down_attainment = down_attainment
+        self.drain_load_per_replica = drain_load_per_replica
+        self.cooldown_s = cooldown_s
+        # below this many window samples the attainment estimate is noise
+        # (one unlucky long prompt would flip a scaling decision) — the
+        # windowed signal abstains and only the pressure path may act
+        self.min_window_samples = min_window_samples
+        self._finished: Deque[Tuple[float, bool]] = deque()  # (t, slo_met)
+        self._shed: Deque[float] = deque()
+        self._last_action = float("-inf")
+
+    # -- signal feeds ---------------------------------------------------
+    def record_finish(self, t: float, slo_met: bool) -> None:
+        self._finished.append((t, slo_met))
+
+    def record_shed(self, t: float) -> None:
+        self._shed.append(t)
+
+    def _trim(self, now: float) -> None:
+        lo = now - self.window_s
+        while self._finished and self._finished[0][0] < lo:
+            self._finished.popleft()
+        while self._shed and self._shed[0] < lo:
+            self._shed.popleft()
+
+    def window_attainment(self, now: float) -> Optional[float]:
+        """Attainment over the trailing window, shed counted as missed;
+        None below ``min_window_samples`` (no reliable signal yet)."""
+        self._trim(now)
+        total = len(self._finished) + len(self._shed)
+        if total < max(self.min_window_samples, 1):
+            return None
+        met = sum(1 for _, ok in self._finished if ok)
+        return met / total
+
+    # -- decisions ------------------------------------------------------
+    def decide(self, now: float, n_active: int, loads: List[int],
+               min_forecast: Optional[float], slo: Optional[float],
+               n_alive: Optional[int] = None) -> Optional[str]:
+        """One scaling decision at an arrival instant: 'up', 'down' or
+        None.  ``loads`` are the active replicas' unfinished-request
+        counts; ``min_forecast`` is the best predicted TTFT for the
+        arriving request (None when unknown); ``n_alive`` counts every
+        replica still doing work — active AND draining (defaults to
+        ``n_active``).  The max-replica cap applies to ``n_alive``: a
+        draining replica is still consuming capacity, so scaling up past
+        it would put more than ``max_replicas`` engines on the hardware
+        concurrently."""
+        if n_alive is None:
+            n_alive = n_active
+        if now - self._last_action < self.cooldown_s:
+            return None
+        att = self.window_attainment(now)
+        pressure = (slo is not None and min_forecast is not None
+                    and min_forecast > slo)
+        if n_alive < self.max_replicas and (
+                pressure or (att is not None and att < self.up_attainment)):
+            self._last_action = now
+            return "up"
+        if (n_active > self.min_replicas and not pressure
+                and (att is None or att >= self.down_attainment)
+                and sum(loads) <= self.drain_load_per_replica
+                * (n_active - 1)):
+            self._last_action = now
+            return "down"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the control plane proper
+# ---------------------------------------------------------------------------
+
+
+class ControlPlane:
+    """Telemetry book + optional admission/autoscale controllers.
+
+    ``ServingCluster`` creates one per cluster (a bare, telemetry-only
+    plane when no controllers are configured), feeds it after every replica
+    step and consults it at every arrival.  Routers that dispatch on
+    predicted headroom (``SLOAwareRouter``, ``PrefixAffinityRouter``) are
+    bound to the same instance so routing, admission and scaling all see
+    one consistent forecast."""
+
+    def __init__(self, *, admission: Optional[AdmissionController] = None,
+                 autoscaler: Optional[AutoscaleController] = None,
+                 alpha: float = 0.3):
+        self.admission = admission
+        self.autoscaler = autoscaler
+        self.alpha = alpha
+        self.telemetry: Dict[int, ReplicaTelemetry] = {}
+        self._fc_cache: Optional[Dict[tuple, float]] = None
+
+    def begin_arrival(self) -> None:
+        """Open a forecast memo for one arrival decision.  Admission,
+        autoscaling, routing and dispatch bookkeeping all evaluate the same
+        (replica, request, now) forecasts — and no replica state changes
+        while one arrival is being decided — so one computation per replica
+        serves all of them.  The cluster closes the memo (``end_arrival``)
+        before any engine executes."""
+        self._fc_cache = {}
+
+    def end_arrival(self) -> None:
+        self._fc_cache = None
+
+    def tel(self, replica_id: int) -> ReplicaTelemetry:
+        return self.telemetry.setdefault(replica_id,
+                                         ReplicaTelemetry(self.alpha))
+
+    # -- prediction -----------------------------------------------------
+    def forecast_ttft(self, engine, req: Optional[Request],
+                      now: float) -> float:
+        """Predicted TTFT if ``req`` were dispatched to ``engine`` at
+        ``now``.
+
+        ``max(roofline floor, learned slope * backlog)`` over the prompt
+        tokens the replica is already committed to (plus this prompt), on
+        top of the replica's clock lag past the arrival instant, corrected
+        by the learned forecast-residual bias.  The roofline term prices
+        the pure prefill FLOPs (exact before any request has completed);
+        the slope term learns the replica's true marginal delay per queued
+        token — decode interference included — from completed-request
+        stats.  Falls back to the EWMA TTFT level when the backend exposes
+        no cost model (real tier without one)."""
+        key = (engine.replica_id, req.req_id if req is not None else None,
+               now)
+        if self._fc_cache is not None and key in self._fc_cache:
+            return self._fc_cache[key]
+        tel = self.tel(engine.replica_id)
+        lag = max(engine.clock - now, 0.0)
+        backlog = engine.prefill_backlog_tokens
+        if req is not None:
+            backlog += req.prompt_len
+        cm = getattr(engine.backend, "cm", None)
+        target = getattr(engine.backend, "target", None)
+        if cm is not None and isinstance(target, ModelConfig):
+            base = cm.prefill_latency(target, 1, max(backlog, 1))
+        else:
+            base = tel.ewma_ttft.get(0.0)
+        learned = tel.ewma_slope.get(0.0) * backlog
+        out = max(lag + max(base, learned) + tel.ewma_err.get(0.0), 0.0)
+        if self._fc_cache is not None:
+            self._fc_cache[key] = out
+        return out
+
+    def snapshot(self, engine, now: float, *,
+                 draining: bool = False) -> ReplicaSnapshot:
+        tel = self.tel(engine.replica_id)
+        bm = engine.scheduler.bm
+        return ReplicaSnapshot(
+            replica_id=engine.replica_id, t=now, clock=engine.clock,
+            load=engine.load, decode_count=engine.decode_count,
+            prefill_backlog_tokens=engine.prefill_backlog_tokens,
+            kv_allocatable=bm.num_allocatable, kv_total=bm.total_blocks,
+            ewma_ttft=tel.ewma_ttft.get(0.0),
+            ewma_tpot=tel.ewma_tpot.get(0.0),
+            predicted_ttft=self.forecast_ttft(engine, None, now),
+            draining=draining)
+
+    # -- event feeds ----------------------------------------------------
+    def note_dispatch(self, engine, req: Request, now: float) -> None:
+        backlog = engine.prefill_backlog_tokens + req.prompt_len
+        self.tel(engine.replica_id).note_dispatch(
+            req.req_id, self.forecast_ttft(engine, req, now), backlog)
+
+    def observe_step(self, engine) -> None:
+        """Consume a replica's newly finished requests after one step."""
+        fresh = self.tel(engine.replica_id).consume_finished(engine)
+        if self.autoscaler is not None:
+            for r in fresh:
+                self.autoscaler.record_finish(engine.clock, r.slo_met)
+
+    def note_shed(self, now: float) -> None:
+        if self.autoscaler is not None:
+            self.autoscaler.record_shed(now)

@@ -120,6 +120,23 @@ class ServingEngine:
         return (len(self._pending) + self.scheduler.num_waiting
                 + self.scheduler.num_running)
 
+    @property
+    def decode_count(self) -> int:
+        """Running sequences that are decode-ready (prefill complete)."""
+        return sum(1 for s in self.scheduler.running
+                   if s.prompt_remaining == 0)
+
+    @property
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens this replica has committed to but not yet
+        materialised: queued prompts (waiting + submitted-pending) plus the
+        un-prefilled remainder of running sequences.  Pure queue-state
+        observation — the control plane's queue-delay forecast input, equally
+        observable on the real tier."""
+        return (sum(r.prompt_len for r in self.scheduler.waiting)
+                + sum(s.prompt_remaining for s in self.scheduler.running)
+                + sum(item[2].prompt_len for item in self._pending))
+
     def has_work(self) -> bool:
         return bool(self._pending or self.scheduler.num_waiting
                     or self.scheduler.num_running)

@@ -39,6 +39,7 @@ Invariants (property-tested):
 """
 from __future__ import annotations
 
+import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -58,9 +59,37 @@ class SharedBlockWrite(Exception):
     ``BlockManager.fork_for_write`` first (copy-on-write)."""
 
 
-# chain-hash seed for the first block of a prompt (any fixed sentinel works;
-# tuples of ints hash deterministically across processes)
-_CHAIN_ROOT = -0x517CC1B727220A95
+# ---------------------------------------------------------------------------
+# Stable content hashing.  Any identity derived from token content that can
+# cross a process boundary (the prefix-cache index here, and the routing-tier
+# template keys in serving/controlplane.py) must come from this seeded
+# blake2b chain — never from Python's hash(), whose salting rules are an
+# implementation detail we refuse to depend on.  The chain is:
+#   h_0 = CHAIN_ROOT;  h_i = chain_hash(h_{i-1}, block_i_token_ids)
+# so a block's hash commits to the entire prefix before it.
+# ---------------------------------------------------------------------------
+
+# chain-hash seed for the first block of a prompt (a fixed, documented seed
+# so independently constructed processes agree on every chain value)
+CHAIN_ROOT = 0x517CC1B727220A95
+_CHAIN_ROOT = CHAIN_ROOT   # backward-compatible alias
+_MASK64 = (1 << 64) - 1
+
+
+def chain_hash(parent: int, tokens: Sequence[int]) -> int:
+    """Seeded content hash of one token block chained onto ``parent``.
+
+    blake2b over the parent hash plus the token ids serialised as
+    little-endian int64 — one C-level call per block, deterministic across
+    processes, platforms, interpreter versions and ``PYTHONHASHSEED``
+    values (regression-tested against golden values in
+    tests/test_controlplane.py).  This sits on the per-admission hot path
+    (every full block of every prompt is hashed), hence no Python-level
+    per-token loop."""
+    buf = (parent & _MASK64).to_bytes(8, "little") \
+        + np.asarray(tokens, dtype="<i8").tobytes()
+    return int.from_bytes(hashlib.blake2b(buf, digest_size=8).digest(),
+                          "little")
 
 
 @dataclass
@@ -252,7 +281,7 @@ class BlockManager:
         h = _CHAIN_ROOT
         for i in range(len(tokens) // bs):
             blk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
-            h = hash((h, blk))
+            h = chain_hash(h, blk)
             b = self.hash_index.get(h)
             if b is None or self.block_chain[b][1] != blk:
                 break
@@ -295,7 +324,7 @@ class BlockManager:
         for i in range(min(n, len(table))):
             blk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
             parent = h
-            h = hash((parent, blk))
+            h = chain_hash(parent, blk)
             b = table[i]
             if self.block_hash.get(b) == h:
                 continue                      # already registered
@@ -441,7 +470,7 @@ class BlockManager:
         for h, b in self.hash_index.items():
             assert self.block_hash.get(b) == h, (h, b)
             parent, toks = self.block_chain[b]
-            assert hash((parent, toks)) == h, f"stale chain for block {b}"
+            assert chain_hash(parent, toks) == h, f"stale chain for block {b}"
             assert len(toks) == self.block_size, "partial block registered"
             assert b not in free_set, f"registered block {b} in free list"
             assert b in refs or b in self.cached, f"registered block {b} dead"

@@ -292,10 +292,22 @@ class ContinuousBatchingScheduler:
                 return False
 
     def _preempt_youngest(self, exclude: Optional[Sequence] = None) -> None:
+        """Evict the youngest running sequence to free blocks — but only if
+        it is younger than the sequence asking (strict age priority).  A
+        young sequence may never displace older work: without this guard
+        two prompts that cannot coexist in the pool evict each other in an
+        endless recompute ping-pong (each restart re-evicts the other's
+        blocks), and neither ever finishes.  With it, the younger of the
+        two preempts itself and waits for the elder to complete."""
         candidates = [s for s in self.running if s is not exclude]
+        if exclude is not None:
+            key = (exclude.request.arrival, exclude.req_id)
+            candidates = [s for s in candidates
+                          if (s.request.arrival, s.req_id) > key]
         if not candidates:
             return
-        victim = max(candidates, key=lambda s: s.request.arrival)
+        victim = max(candidates,
+                     key=lambda s: (s.request.arrival, s.req_id))
         self._preempt(victim)
 
     def preempt(self, seq: Sequence) -> None:

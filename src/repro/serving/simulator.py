@@ -17,6 +17,8 @@ from ..configs.base import ModelConfig
 from ..core.bandits import Policy, make_policy
 from ..core.cswitch import CSwitchTable
 from .cluster import ServingCluster
+from .controlplane import (AdmissionController, AutoscaleController,
+                           ControlPlane)
 from .costmodel import HardwareProfile, RooflineCostModel, TPU_V5E, kv_bytes_per_token
 from .engine import ServingEngine, StepOutcome
 from .kv_cache import BlockManager
@@ -165,15 +167,37 @@ def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
 
 def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                       policy_name: str = "nightjar", *,
-                      router: str = "jsq") -> ServingCluster:
-    """N independent simulated replicas behind one router.
+                      router: str = "jsq",
+                      router_kwargs: Optional[dict] = None,
+                      shed_factor: Optional[float] = None,
+                      autoscale: Optional[dict] = None) -> ServingCluster:
+    """N independent simulated replicas behind one router + control plane.
 
     Every replica gets its OWN scheduler, planner, elastic memory manager
     and acceptance RNG (seed offset by replica index so replicas do not see
     correlated acceptance draws), exactly like N separate serving processes
-    behind a front-end."""
-    engines = [
-        build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
-        for i in range(n_replicas)
-    ]
-    return ServingCluster(engines, make_router(router))
+    behind a front-end.  Replicas the autoscaler adds later come from the
+    same seeded factory (seed offset by replica id), so an elastic run is
+    exactly as reproducible as a static one.
+
+    ``shed_factor`` enables admission control (shed at the door when every
+    replica's predicted TTFT exceeds ``slo * shed_factor``); ``autoscale``
+    is a kwargs dict for :class:`AutoscaleController` (e.g.
+    ``dict(min_replicas=1, max_replicas=4)``) enabling elastic scaling —
+    the cluster then STARTS at ``min_replicas`` and grows on demand."""
+
+    def factory(i: int) -> ServingEngine:
+        return build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
+
+    admission = None
+    if shed_factor is not None and shed_factor > 0:
+        admission = AdmissionController(shed_factor=shed_factor)
+    autoscaler = None
+    if autoscale is not None:
+        autoscaler = AutoscaleController(**autoscale)
+        n_replicas = autoscaler.min_replicas
+    engines = [factory(i) for i in range(n_replicas)]
+    control = ControlPlane(admission=admission, autoscaler=autoscaler)
+    return ServingCluster(engines, make_router(router,
+                                               **(router_kwargs or {})),
+                          control=control, replica_factory=factory)

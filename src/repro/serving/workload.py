@@ -88,6 +88,38 @@ def dynamic_rate_trace(duration_s: float = 120.0, *, low: float = 2.0,
     return RateTrace(np.asarray(ts), np.asarray(rates))
 
 
+def bursty_trace(*, base: float = 4.0, spike: float = 40.0,
+                 base_s: float = 20.0, spike_s: float = 15.0,
+                 drain_s: float = 25.0, drain: "float | None" = None,
+                 jitter: float = 0.1, knot_s: float = 1.0,
+                 seed: int = 0) -> "RateTrace":
+    """Regime-shift arrival trace: baseline -> spike -> drain.
+
+    The autoscaler workload: a steady ``base`` qps phase, an abrupt
+    ``spike`` qps burst of ``spike_s`` seconds (the regime shift a static
+    fleet must over-provision for), then a ``drain`` phase (default
+    ``base / 2``) long enough for an elastic fleet to scale back down.
+    Knots every ``knot_s`` seconds carry seeded multiplicative jitter of
+    +-``jitter`` so the phases are noisy but exactly reproducible."""
+    if drain is None:
+        drain = base / 2.0
+    rng = np.random.default_rng(seed)
+    ts, rates = [], []
+    t = 0.0
+    total = base_s + spike_s + drain_s
+    while t < total:
+        if t < base_s:
+            r = base
+        elif t < base_s + spike_s:
+            r = spike
+        else:
+            r = drain
+        ts.append(t)
+        rates.append(r * rng.uniform(1.0 - jitter, 1.0 + jitter))
+        t += knot_s
+    return RateTrace(np.asarray(ts), np.asarray(rates))
+
+
 @dataclass
 class RateTrace:
     times: np.ndarray
@@ -120,16 +152,22 @@ class RateTrace:
 
 
 def templated_requests(rate_qps: float, n: int, *, dataset: str = "templated",
-                       template_len: "int | None" = None, seed: int = 0,
+                       template_len: "int | None" = None,
+                       num_templates: int = 1, seed: int = 0,
                        max_prompt: int = 2048, max_output: int = 1024,
                        vocab: int = 32000,
                        slo: "float | None" = None) -> List[Request]:
-    """Poisson arrivals whose prompts share a common template prefix.
+    """Poisson arrivals whose prompts share common template prefixes.
 
-    Every request's ``prompt_tokens`` is the SAME ``template_len``-token
-    system prompt (drawn once from ``seed``) followed by a per-request
-    suffix whose length follows the dataset's prompt distribution — the
-    canonical prefix-caching workload.  ``template_len=0`` produces fully
+    Every request's ``prompt_tokens`` is one of ``num_templates`` distinct
+    ``template_len``-token system prompts (each drawn once from ``seed``;
+    the per-request template id is a seeded uniform draw) followed by a
+    per-request suffix whose length follows the dataset's prompt
+    distribution — the canonical prefix-caching workload, and with
+    ``num_templates > 1`` the sticky-routing workload: an affinity router
+    can partition the template population across replicas so each
+    replica's cache specialises, where load-only routing scatters every
+    template onto every replica.  ``template_len=0`` produces fully
     disjoint prompts of the same shape (the caching-off control arm).
     Token ids are synthesised (the simulated tier only hashes them; the
     real tier can cap ``vocab`` to the model's)."""
@@ -138,7 +176,11 @@ def templated_requests(rate_qps: float, n: int, *, dataset: str = "templated",
     if template_len is None:
         template_len = d.get("template_len", 0)
     deadline = dataset_slo(dataset, slo)
-    template = rng.integers(0, vocab, size=template_len).tolist()
+    # num_templates == 1 keeps the historical draw order byte-identical
+    templates = [rng.integers(0, vocab, size=template_len).tolist()
+                 for _ in range(max(num_templates, 1))]
+    tids = (rng.integers(0, num_templates, size=n)
+            if num_templates > 1 else np.zeros(n, dtype=int))
     gaps = rng.exponential(1.0 / rate_qps, size=n)
     arrivals = np.cumsum(gaps)
     suffixes = _lengths(rng, d["p_mu"], d["p_sigma"], n, 4,
@@ -148,7 +190,7 @@ def templated_requests(rate_qps: float, n: int, *, dataset: str = "templated",
     out = []
     for i in range(n):
         sfx = rng.integers(0, vocab, size=int(suffixes[i])).tolist()
-        toks = template + sfx
+        toks = templates[int(tids[i])] + sfx
         out.append(Request(i, float(arrivals[i]), len(toks),
                            int(outputs[i]), float(alphas[i]),
                            prompt_tokens=toks, slo=deadline))

@@ -1,6 +1,6 @@
-"""Benchmark-harness smoke: the prefill grid, the dense-vs-paged backend
-grid and the table renderer run end-to-end under tier-1, so the bench
-entrypoints can't silently rot."""
+"""Benchmark-harness smoke: the prefill grid, the control-plane grid, the
+dense-vs-paged backend grid and the table renderer run end-to-end under
+tier-1, so the bench entrypoints can't silently rot."""
 import json
 import os
 import subprocess
@@ -73,6 +73,42 @@ def test_prefix_grid_end_to_end():
         assert on["prefix_hit_rate"] == 0.0
 
 
+def test_control_grid_end_to_end():
+    """`--only control` runs the control-plane grid, persists
+    BENCH_control.json, and the acceptance criteria hold: affinity routing
+    strictly beats kv on aggregate prefix hit-rate and p99 TTFT with
+    identical per-request committed token counts (templated arm), and the elastic fleet
+    strictly beats the static fleet on SLO attainment of admitted traffic
+    at equal peak replica count (bursty arm)."""
+    res = _run("benchmarks.run", "--only", "control", "--fast")
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = [l for l in res.stdout.splitlines() if l.startswith("control.")]
+    names = {r.split(",")[0] for r in rows}
+    assert {f"control.templated.static.{r}"
+            for r in ("rr", "kv", "slo", "affinity")} <= names
+    assert {f"control.bursty.{f}.{r}" for f in ("static", "autoscale")
+            for r in ("kv", "slo")} <= names
+
+    data = json.load(open(os.path.join(ROOT, "BENCH_control.json")))
+    grid = data["grid"]
+    # templated arm: cache specialisation under sticky routing
+    aff = grid["templated.static.affinity"]
+    kv = grid["templated.static.kv"]
+    assert aff["tokens_sha"] == kv["tokens_sha"]
+    assert aff["finished"] == kv["finished"] > 0
+    assert aff["prefix_hit_rate"] > kv["prefix_hit_rate"]
+    assert aff["p99_ttft_s"] < kv["p99_ttft_s"]
+    # bursty arm: elastic vs static at equal peak replica count
+    for router in ("kv", "slo"):
+        el = grid[f"bursty.autoscale.{router}"]
+        st = grid[f"bursty.static.{router}"]
+        assert el["peak_replicas"] == st["peak_replicas"] == 2
+        assert el["slo_attainment"] > st["slo_attainment"]
+        assert el["shed"] > 0 and st["shed"] == 0
+        assert el["replica_seconds"] < st["replica_seconds"]
+        assert el["autoscale_adds"] >= 1
+
+
 def test_backend_grid_end_to_end():
     """`--only backend` runs REAL dense and paged backends, prints the CSV
     grid and persists BENCH_backend.json with the capacity comparison."""
@@ -100,3 +136,5 @@ def test_make_tables_end_to_end():
     # and the prefix grid section renders (table when the JSON exists,
     # a pointer when it doesn't)
     assert "BENCH_prefix" in res.stdout or "Prefix-sharing" in res.stdout
+    # same for the control-plane grid
+    assert "BENCH_control" in res.stdout or "control plane" in res.stdout

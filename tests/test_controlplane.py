@@ -1,0 +1,443 @@
+"""Cluster control plane: telemetry estimators, stable routing hashes,
+admission control, elastic autoscaling and the golden control-plane e2e.
+
+The e2e tests pin the PR's acceptance criteria on seeded workloads:
+  * sticky prefix-affinity routing strictly beats KV-headroom routing on
+    aggregate prefix hit-rate AND p99 TTFT on the templated multi-template
+    workload, with identical per-request committed token counts;
+  * the elastic fleet (autoscale + admission control) strictly beats the
+    static 2-replica fleet on SLO attainment of admitted traffic on the
+    bursty trace, at equal peak replica count;
+  * two independently constructed clusters produce byte-identical routing
+    decisions for an identical request stream (and the template hash is
+    stable across PYTHONHASHSEED values — subprocess-checked).
+"""
+import hashlib
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import configs
+from repro.serving.cluster import ACTIVE, DRAINING, RETIRED, ServingCluster
+from repro.serving.controlplane import (AdmissionController,
+                                        AutoscaleController, ControlPlane,
+                                        EWMA, template_key)
+from repro.serving.costmodel import RTX_4090
+from repro.serving.kv_cache import CHAIN_ROOT, chain_hash
+from repro.serving.request import Request
+from repro.serving.router import (PrefixAffinityRouter, SLOAwareRouter,
+                                  make_router)
+from repro.serving.simulator import (SimConfig, build_sim_cluster,
+                                     build_sim_engine)
+from repro.serving.workload import (bursty_trace, poisson_requests,
+                                    templated_requests)
+
+
+def _cfg(**kw):
+    return SimConfig(target=configs.get_config("paper-7b"),
+                     draft=configs.get_draft_config("paper-7b"),
+                     hw=RTX_4090, max_batch=256, seed=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# EWMA estimators
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_converges_to_constant():
+    e = EWMA(alpha=0.3)
+    assert e.value is None and e.get(1.23) == 1.23
+    for _ in range(60):
+        e.update(5.0)
+    assert e.value == pytest.approx(5.0)
+    assert e.n == 60
+
+
+def test_ewma_tracks_level_shift():
+    e = EWMA(alpha=0.5)
+    for _ in range(20):
+        e.update(1.0)
+    assert e.value == pytest.approx(1.0)
+    for _ in range(20):
+        e.update(3.0)
+    assert e.value == pytest.approx(3.0, abs=1e-3)
+    with pytest.raises(ValueError):
+        EWMA(alpha=0.0)
+
+
+def test_telemetry_learns_from_finished_requests():
+    """After a run, the replica's telemetry holds converged TTFT/TPOT and
+    slope estimators (fed purely by completed-request stats)."""
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", router="slo")
+    reqs = poisson_requests(10, 40, dataset="alpaca", seed=3)
+    cl.run(reqs)
+    for eng in cl.replicas:
+        tel = cl.control.tel(eng.replica_id)
+        assert tel.ewma_ttft.n == len(eng.metrics.requests) > 0
+        assert tel.ewma_ttft.value > 0
+        assert tel.ewma_slope.value > 0
+        assert not tel._forecasts      # every dispatch got matched
+
+
+def test_replica_snapshot_observability():
+    """ReplicaSnapshot exposes exactly the observable decision state —
+    queue/backlog/KV/telemetry — and stays consistent with the forecast."""
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", router="slo")
+    reqs = poisson_requests(10, 30, dataset="alpaca", seed=4)
+    cl.run(reqs)
+    eng = cl.replicas[0]
+    for i in range(5):
+        eng.submit(Request(900 + i, eng.clock, 128, 8))
+    snap = cl.control.snapshot(eng, eng.clock, draining=True)
+    assert snap.replica_id == 0 and snap.draining
+    assert snap.load == eng.load == 5
+    assert snap.prefill_backlog_tokens == 5 * 128
+    assert snap.decode_count == eng.decode_count == 0
+    assert 0.0 < snap.kv_headroom_frac <= 1.0
+    assert snap.kv_allocatable <= snap.kv_total
+    assert snap.ewma_ttft > 0 and snap.ewma_tpot > 0   # fed by the run
+    # the snapshot's nominal forecast is the req=None forecast
+    assert snap.predicted_ttft == \
+        cl.control.forecast_ttft(eng, None, eng.clock)
+
+
+def test_forecast_monotone_in_backlog():
+    """The predicted TTFT grows with the replica's committed backlog —
+    the property deadline-headroom routing relies on."""
+    cp = ControlPlane()
+    e1 = build_sim_engine(_cfg(), "ar")
+    e2 = build_sim_engine(_cfg(), "ar")
+    probe = Request(99, 0.0, 64, 8, slo=1.0)
+    empty = cp.forecast_ttft(e1, probe, 0.0)
+    for i in range(20):
+        e2.submit(Request(i, 0.0, 512, 8))
+    loaded = cp.forecast_ttft(e2, probe, 0.0)
+    assert loaded > empty > 0
+
+
+# ---------------------------------------------------------------------------
+# stable template hashing (satellite: never Python's salted hash())
+# ---------------------------------------------------------------------------
+
+# golden values below: chain_hash is a documented cross-process contract —
+# if these move, every routing decision and prefix-cache index changes too
+def test_chain_hash_golden_values():
+    assert chain_hash(CHAIN_ROOT, [0]) == 0x36594F3778015CEB
+    assert chain_hash(CHAIN_ROOT, [1, 2, 3, 4]) == 0x9987D60CD5DA12D5
+    # chained: parent commits to the whole prefix
+    a = chain_hash(chain_hash(CHAIN_ROOT, [1, 2]), [3, 4])
+    b = chain_hash(chain_hash(CHAIN_ROOT, [1, 3]), [3, 4])
+    assert a != b
+
+
+def test_template_key_properties():
+    assert template_key(None) is None
+    assert template_key([]) is None
+    t = list(range(100))
+    assert template_key(t) == template_key(list(t))
+    # only the first window_tokens matter (suffixes don't break stickiness)
+    assert template_key(t + [7], 64) == template_key(t + [8], 64)
+    assert template_key([1] + t[1:], 64) != template_key(t, 64)
+
+
+def test_template_key_stable_across_hash_seeds():
+    """The routing hash must not depend on PYTHONHASHSEED: two interpreter
+    processes with different seeds agree on every template key."""
+    code = ("import sys; sys.path.insert(0, 'src');"
+            "from repro.serving.controlplane import template_key;"
+            "print([template_key(list(range(i, i + 80))) "
+            "for i in range(8)])")
+    outs = []
+    for seed in ("0", "4242"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        res = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=240,
+                             cwd=os.path.join(os.path.dirname(__file__),
+                                              ".."))
+        assert res.returncode == 0, res.stderr[-1000:]
+        outs.append(res.stdout)
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# admission control (shed hysteresis)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_shed_hysteresis():
+    ac = AdmissionController(shed_factor=1.5, resume_factor=1.0)
+    req = Request(0, 0.0, 16, 8, slo=1.0)
+    assert not ac.should_shed(req, 1.2)      # over slo but under 1.5x
+    assert ac.should_shed(req, 1.6)          # crosses the high threshold
+    # hysteresis: keeps shedding in the band even though 1.2 < 1.5x
+    assert ac.should_shed(req, 1.2)
+    assert ac.should_shed(req, 1.05)
+    # resumes only under resume_factor * slo
+    assert not ac.should_shed(req, 0.9)
+    assert not ac.should_shed(req, 1.2)      # and stays admitting in-band
+    assert ac.shed_count == 3
+
+
+def test_admission_never_sheds_deadline_free():
+    ac = AdmissionController(shed_factor=1.5)
+    req = Request(0, 0.0, 16, 8, slo=None)
+    assert not ac.should_shed(req, 1e9)
+    with pytest.raises(ValueError):
+        AdmissionController(shed_factor=1.0, resume_factor=1.5)
+
+
+# ---------------------------------------------------------------------------
+# autoscale controller
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_windowed_attainment_min_samples():
+    sc = AutoscaleController(min_replicas=1, max_replicas=4, window_s=5.0,
+                             min_window_samples=4)
+    assert sc.window_attainment(0.0) is None
+    for t in (0.5, 1.0):
+        sc.record_finish(t, True)
+    assert sc.window_attainment(1.0) is None      # below min samples
+    sc.record_finish(1.5, False)
+    sc.record_shed(2.0)                           # shed counts as a miss
+    assert sc.window_attainment(2.0) == pytest.approx(2 / 4)
+    # old samples age out of the window...
+    sc.record_finish(5.8, True)
+    sc.record_finish(5.9, True)
+    assert sc.window_attainment(6.2) == pytest.approx(2 / 4)
+    # ...until the signal thins below min samples and abstains again
+    assert sc.window_attainment(10.5) is None
+
+
+def test_autoscaler_up_on_pressure_down_when_calm_with_cooldown():
+    sc = AutoscaleController(min_replicas=1, max_replicas=2, window_s=5.0,
+                             cooldown_s=2.0, min_window_samples=2)
+    # pressure path: every replica's forecast past the deadline
+    assert sc.decide(0.0, 1, [10], min_forecast=2.0, slo=0.5) == "up"
+    # cooldown blocks an immediate follow-up
+    assert sc.decide(0.5, 2, [10, 10], min_forecast=2.0, slo=0.5) is None
+    # calm + attained window + low load -> drain
+    for t in (2.5, 2.6, 2.7):
+        sc.record_finish(t, True)
+    assert sc.decide(3.0, 2, [1, 0], min_forecast=0.1, slo=0.5) == "down"
+    # at min_replicas it never drains further
+    assert sc.decide(6.0, 1, [0], min_forecast=0.1, slo=0.5) is None
+
+
+# ---------------------------------------------------------------------------
+# elastic fleet mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_drain_never_drops_running_requests():
+    """A drained replica finishes everything it owns, then retires."""
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", router="rr")
+    reqs = poisson_requests(20, 30, dataset="alpaca", seed=5)
+    for r in reqs[:10]:
+        cl._handle_arrival(r)
+    owned = [rid for rid, idx in cl.assignments.items() if idx == 0]
+    assert owned and cl.replicas[0].has_work()
+    cl.drain_replica(0, now=reqs[9].arrival)
+    assert cl.state[0] == DRAINING
+    m = cl.run(reqs[10:])
+    assert cl.state[0] == RETIRED
+    # every request the drained replica owned completed there
+    done = {r.req_id for r in cl.replicas[0].metrics.requests}
+    assert set(owned) <= done
+    # and the whole stream completed exactly once across the fleet
+    assert sorted(r.req_id for r in m.requests) == \
+        sorted(r.req_id for r in reqs)
+
+
+def test_no_routing_to_draining_replica():
+    cl = build_sim_cluster(_cfg(), 3, "nightjar", router="rr")
+    cl.drain_replica(1, now=0.0)
+    for i in range(12):
+        cl.submit(Request(i, 0.0, 16, 4))
+    assert set(cl.assignments.values()) == {0, 2}
+    # retire is immediate when the drained replica holds no work
+    assert cl.state[1] == RETIRED
+
+
+def test_fully_drained_fleet_still_serves():
+    """Draining every replica by hand must not crash routing: arrivals
+    fall back to the drained fleet and still complete."""
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", router="jsq")
+    cl.drain_replica(0, now=0.0)
+    cl.drain_replica(1, now=0.0)
+    assert cl.state == [RETIRED, RETIRED]    # idle at drain time
+    reqs = poisson_requests(5, 6, dataset="alpaca", seed=8)
+    m = cl.run(reqs)
+    assert len(m.requests) == 6
+
+
+def test_autoscaler_caps_on_alive_not_active():
+    """A draining replica still occupies capacity: the max-replica cap
+    counts it, so drain->pressure cannot push the fleet past max."""
+    sc = AutoscaleController(min_replicas=1, max_replicas=2, window_s=5.0,
+                             cooldown_s=0.0, min_window_samples=2)
+    # 1 active + 1 draining = 2 alive: scale-up must be refused even
+    # under pressure...
+    assert sc.decide(0.0, 1, [10], min_forecast=9.0, slo=0.5,
+                     n_alive=2) is None
+    # ...and allowed again once the draining replica retires
+    assert sc.decide(1.0, 1, [10], min_forecast=9.0, slo=0.5,
+                     n_alive=1) == "up"
+
+
+def test_add_replica_joins_at_virtual_now():
+    cl = build_sim_cluster(_cfg(), 1, "nightjar", router="jsq")
+    cl.submit(Request(90, 7.5, 16, 4), now=7.5)   # load on the old replica
+    rid = cl.add_replica(now=7.5)
+    assert rid == 1 and cl.replicas[1].clock == 7.5
+    assert cl.state == [ACTIVE, ACTIVE]
+    cl.submit(Request(0, 7.5, 16, 4), now=7.5)
+    assert cl.assignments[0] == 1        # empty new replica wins JSQ
+    assert cl.autoscale_events[0]["kind"] == "add"
+
+
+# ---------------------------------------------------------------------------
+# routers on the control-plane signals
+# ---------------------------------------------------------------------------
+
+
+def test_slo_router_prefers_headroom():
+    cp = ControlPlane()
+    engines = [build_sim_engine(_cfg(), "ar") for _ in range(2)]
+    for i, e in enumerate(engines):
+        e.replica_id = i
+    for i in range(10):
+        engines[0].submit(Request(100 + i, 0.0, 512, 8))
+    r = SLOAwareRouter(cp)
+    assert r.route(Request(0, 0.0, 32, 8, slo=1.0), engines, now=0.0) == 1
+
+
+def test_affinity_router_sticky_and_spill():
+    cp = ControlPlane()
+    engines = [build_sim_engine(_cfg(), "ar") for _ in range(2)]
+    for i, e in enumerate(engines):
+        e.replica_id = i
+    r = PrefixAffinityRouter(cp, spill_slack=2.0, default_slo=0.5)
+    tmpl = list(range(80))
+    req = lambda i, toks: Request(i, 0.0, len(toks), 8,  # noqa: E731
+                                  prompt_tokens=toks, slo=0.5)
+    home = r.route(req(0, tmpl + [1]), engines, now=0.0)
+    # same template sticks to its home regardless of load ordering
+    assert r.route(req(1, tmpl + [2]), engines, now=0.0) == home
+    # overload the home replica far past the deadline -> spillover, but
+    # the home mapping survives for when pressure clears
+    for i in range(400):
+        engines[home].submit(Request(500 + i, 0.0, 1024, 8))
+    spill = r.route(req(2, tmpl + [3]), engines, now=0.0)
+    assert spill != home and r.spills == 1
+    assert r.home[template_key(tmpl)] == engines[home].replica_id
+
+
+def test_make_router_names_and_back_compat():
+    from repro.serving.router import (JoinShortestQueue, KVHeadroomRouter,
+                                      RoundRobinRouter)
+    assert isinstance(make_router("rr"), RoundRobinRouter)
+    assert isinstance(make_router("jsq"), JoinShortestQueue)
+    assert isinstance(make_router("kv"), KVHeadroomRouter)
+    assert isinstance(make_router("slo"), SLOAwareRouter)
+    assert isinstance(make_router("affinity"), PrefixAffinityRouter)
+    with pytest.raises(KeyError):
+        make_router("nope")
+    # legacy positional route() signature still works
+    engines = [build_sim_engine(_cfg(), "ar") for _ in range(2)]
+    assert make_router("jsq").route(Request(0, 0.0, 8, 4), engines) == 0
+
+
+# ---------------------------------------------------------------------------
+# golden control-plane e2e (the PR's acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def _stream_sha(m):
+    stream = sorted((r.req_id, r.tokens) for r in m.requests)
+    return hashlib.sha256(repr(stream).encode()).hexdigest()
+
+
+def _run_templated(router):
+    cfg = _cfg(chunk_tokens=384, prefix_caching=True)
+    cl = build_sim_cluster(cfg, 2, "nightjar", router=router)
+    reqs = templated_requests(60, 140, num_templates=8, seed=1)
+    return cl.run(reqs), cl
+
+
+def test_affinity_beats_kv_on_templated_golden():
+    """Sticky template routing specialises the replicas' prefix caches:
+    strictly higher aggregate hit-rate AND strictly lower p99 TTFT than
+    KV-headroom routing, with identical per-request committed token
+    counts."""
+    m_kv, _ = _run_templated("kv")
+    m_aff, _ = _run_templated("affinity")
+    assert len(m_kv.requests) == len(m_aff.requests) == 140
+    assert _stream_sha(m_aff) == _stream_sha(m_kv)
+    assert m_aff.prefix_hit_rate > m_kv.prefix_hit_rate
+    assert m_aff.ttft_percentile(0.99) < m_kv.ttft_percentile(0.99)
+
+
+def _run_bursty(elastic):
+    trace = bursty_trace(base=4, spike=160, base_s=8, spike_s=5,
+                         drain_s=12, drain=2, seed=2)
+    reqs = trace.sample_requests(860, dataset="alpaca", seed=3)
+    kw = {}
+    if elastic:
+        kw = dict(shed_factor=1.5,
+                  autoscale=dict(min_replicas=1, max_replicas=2,
+                                 window_s=8.0))
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", router="slo", **kw)
+    return cl.run(reqs), cl
+
+
+def test_autoscale_beats_static_on_bursty_golden():
+    """The elastic fleet (autoscale to the same peak + admission control)
+    strictly beats the always-on 2-replica fleet on SLO attainment of
+    admitted traffic — shed requests are accounted separately, and the
+    elastic fleet pays fewer replica-seconds."""
+    m_st, _ = _run_bursty(elastic=False)
+    m_el, cl = _run_bursty(elastic=True)
+    assert m_st.shed_count == 0
+    assert m_el.peak_replicas == 2       # equal peak replica count
+    assert m_el.slo_attainment > m_st.slo_attainment
+    assert m_el.replica_seconds < m_st.replica_seconds
+    assert m_el.shed_count > 0
+    # the fleet actually scaled (1 -> 2) under the spike
+    assert any(e["kind"] == "add" for e in m_el.autoscale_events)
+    # honest offered-load accounting is also reported
+    assert 0.0 < m_el.slo_attainment_offered < m_el.slo_attainment
+
+
+def test_routing_decisions_byte_identical_across_runs():
+    """Two independently constructed clusters given the same stream make
+    byte-identical routing / shedding decisions (the determinism
+    acceptance criterion), including under the full control plane."""
+    a, _ = _run_templated("affinity")
+    b, _ = _run_templated("affinity")
+    assert a.assignments == b.assignments
+    assert _stream_sha(a) == _stream_sha(b)
+    x, _ = _run_bursty(elastic=True)
+    y, _ = _run_bursty(elastic=True)
+    assert x.assignments == y.assignments
+    assert [s["req_id"] for s in x.shed] == [s["req_id"] for s in y.shed]
+    assert x.autoscale_events == y.autoscale_events
+
+
+def test_cluster_summary_per_replica_breakdown():
+    m, _ = _run_templated("affinity")
+    s = m.summary()
+    assert len(s["per_replica"]) == 2
+    for row in s["per_replica"]:
+        assert {"replica", "state", "requests", "slo_attainment",
+                "offloads", "p99_ttft_s"} <= set(row)
+        assert "prefix_hit_rate" in row      # caching was on
+    assert s["prefix_hit_rate"] > 0
+    m2, _ = _run_bursty(elastic=True)
+    s2 = m2.summary()
+    assert s2["shed_count"] == m2.shed_count > 0
+    assert s2["peak_replicas"] == 2
+    assert s2["autoscale"]["adds"] >= 1
+    assert s2["replica_seconds"] > 0

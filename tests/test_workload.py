@@ -3,7 +3,7 @@ dynamic-rate trace shape, per-dataset SLO attachment, templated prompts."""
 import numpy as np
 import pytest
 
-from repro.serving.workload import (DATASETS, dataset_slo,
+from repro.serving.workload import (DATASETS, bursty_trace, dataset_slo,
                                     dynamic_rate_trace, poisson_requests,
                                     split_requests, templated_requests,
                                     tiny_requests)
@@ -124,6 +124,26 @@ def test_templated_requests_deterministic_and_disjoint_mode():
     assert d[0].prompt_tokens[:4] != d[1].prompt_tokens[:4]
 
 
+def test_templated_requests_multi_template():
+    """num_templates > 1: every prompt starts with one of exactly K
+    distinct template prefixes (the sticky-routing workload)."""
+    reqs = templated_requests(20, 60, template_len=64, num_templates=4,
+                              seed=5)
+    prefixes = {tuple(r.prompt_tokens[:64]) for r in reqs}
+    assert len(prefixes) == 4
+    # the template id draw is seeded: identical across constructions
+    again = templated_requests(20, 60, template_len=64, num_templates=4,
+                               seed=5)
+    assert [r.prompt_tokens for r in reqs] == \
+        [r.prompt_tokens for r in again]
+    # every template is actually used (60 draws over 4 ids)
+    counts = {}
+    for r in reqs:
+        counts[tuple(r.prompt_tokens[:64])] = \
+            counts.get(tuple(r.prompt_tokens[:64]), 0) + 1
+    assert min(counts.values()) >= 1
+
+
 def test_tiny_requests_template_prefix():
     reqs = tiny_requests(6, prompt_len=16, template_len=8, seed=2)
     t = reqs[0].prompt_tokens[:8]
@@ -152,6 +172,37 @@ def test_dynamic_rate_trace_shape():
     # rate_at is piecewise-constant lookup incl. before-first-knot clamping
     assert trace.rate_at(-1.0) == trace.rates[0]
     assert trace.rate_at(1e9) == trace.rates[-1]
+
+
+def test_bursty_trace_phases_and_determinism():
+    """Regime-shift trace: baseline -> spike -> drain, knots every knot_s,
+    jittered rates inside the phase envelopes, fully seed-deterministic."""
+    tr = bursty_trace(base=4.0, spike=40.0, base_s=10.0, spike_s=5.0,
+                      drain_s=10.0, drain=2.0, jitter=0.1, seed=7)
+    assert len(tr.times) == 25                    # (10 + 5 + 10) / 1s knots
+    assert list(tr.times) == sorted(tr.times)
+    for t, r in zip(tr.times, tr.rates):
+        if t < 10.0:
+            lo, hi = 4.0, 4.0
+        elif t < 15.0:
+            lo, hi = 40.0, 40.0
+        else:
+            lo, hi = 2.0, 2.0
+        assert lo * 0.9 <= r <= hi * 1.1
+    # the spike phase is the clear maximum regime
+    assert tr.rates.max() >= 40.0 * 0.9 > tr.rates[:10].max()
+    # seed determinism, trace and sampled arrivals alike
+    tr2 = bursty_trace(base=4.0, spike=40.0, base_s=10.0, spike_s=5.0,
+                       drain_s=10.0, drain=2.0, jitter=0.1, seed=7)
+    assert list(tr.rates) == list(tr2.rates)
+    a = tr.sample_requests(60, dataset="alpaca", seed=9)
+    b = tr2.sample_requests(60, dataset="alpaca", seed=9)
+    assert _fields(a) == _fields(b)
+    assert [r.arrival for r in a] == sorted(r.arrival for r in a)
+    # default drain rate is half the baseline
+    tr3 = bursty_trace(base=8.0, spike=40.0, base_s=2.0, spike_s=2.0,
+                       drain_s=4.0, jitter=0.0, seed=0)
+    assert tr3.rates[-1] == pytest.approx(4.0)
 
 
 def test_dynamic_trace_sampling_deterministic():
