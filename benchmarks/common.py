@@ -43,14 +43,18 @@ def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
                 seed: int = 0, enable_offload: bool = True,
                 tau_low_frac: float = 0.1, kv_reserve_frac: float = 0.1,
                 chunk_tokens: int = 0, slo: float = None,
-                prefix_caching: bool = False, requests=None):
+                prefix_caching: bool = False, requests=None,
+                num_blocks: int = None, kv_offload: bool = False,
+                host_kv_blocks: int = 0):
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
                     seed=seed, enable_offload=enable_offload,
                     tau_low_frac=tau_low_frac,
                     kv_reserve_frac=kv_reserve_frac,
                     chunk_tokens=chunk_tokens,
-                    prefix_caching=prefix_caching)
+                    prefix_caching=prefix_caching,
+                    num_blocks=num_blocks, kv_offload=kv_offload,
+                    host_kv_blocks=host_kv_blocks)
     eng = build_sim_engine(cfg, policy)
     if requests is not None:
         reqs = requests

@@ -46,6 +46,19 @@ def table(cells, title):
     return "\n".join(out)
 
 
+def fmt_ms(v, n=1):
+    """Latency cell guarded by its sample count: `percentile` returns 0.0
+    on EMPTY input (and `goodput_of` returns 0.0 at zero elapsed), so a
+    cell backed by zero samples would render as a perfect 0ms — render
+    `n/a` instead whenever the count is 0."""
+    return f"{v * 1e3:.0f}ms" if n else "n/a"
+
+
+def fmt_num(v, n=1, spec=".1f"):
+    """Numeric cell with the same zero-sample guard as :func:`fmt_ms`."""
+    return format(v, spec) if n else "n/a"
+
+
 def prefix_table():
     """Render the prefix-sharing grid persisted by `run.py --only prefix`."""
     path = os.path.join(ROOT, "BENCH_prefix.json")
@@ -60,10 +73,11 @@ def prefix_table():
                "| hit rate | saved prefill tok | tokens sha |")
     out.append("|---|---|---|---|---|---|---|---|")
     for name, r in sorted(data.get("grid", {}).items()):
+        n = r.get("finished", 1)
         out.append(
-            f"| {name} | {r['p50_ttft_s']*1e3:.0f}ms "
-            f"| {r['p99_ttft_s']*1e3:.0f}ms "
-            f"| {r['goodput_tok_s']:.1f} | {r['blocks_allocated']} "
+            f"| {name} | {fmt_ms(r['p50_ttft_s'], n)} "
+            f"| {fmt_ms(r['p99_ttft_s'], n)} "
+            f"| {fmt_num(r['goodput_tok_s'], n)} | {r['blocks_allocated']} "
             f"| {r['prefix_hit_rate']:.3f} | {r['saved_prefill_tokens']} "
             f"| {r['tokens_sha']} |")
     print("\n".join(out))
@@ -90,9 +104,10 @@ def control_table():
     out.append("|---|---|---|---|---|---|---|---|---|---|")
     for name, r in sorted(data.get("grid", {}).items()):
         reqs = "/".join(str(c) for c in r.get("replica_requests", [])) or "-"
+        n = r.get("finished", 1)
         out.append(
-            f"| {name} | {r['p50_ttft_s']*1e3:.0f}ms "
-            f"| {r['p99_ttft_s']*1e3:.0f}ms "
+            f"| {name} | {fmt_ms(r['p50_ttft_s'], n)} "
+            f"| {fmt_ms(r['p99_ttft_s'], n)} "
             f"| {r['slo_attainment']:.3f} "
             f"| {r.get('slo_attainment_offered', r['slo_attainment']):.3f} "
             f"| {r.get('shed', 0)} "
@@ -100,6 +115,35 @@ def control_table():
             f"| {reqs} "
             f"| {r.get('peak_replicas', 2)} "
             f"| {r.get('replica_seconds', 0.0):.0f} |")
+    print("\n".join(out))
+
+
+def sessions_table():
+    """Render the host-offload session grid from `run.py --only sessions`."""
+    path = os.path.join(ROOT, "BENCH_sessions.json")
+    if not os.path.exists(path):
+        print("BENCH_sessions.json: missing (run benchmarks.run "
+              "--only sessions)")
+        return
+    data = json.load(open(path))
+    out = [f"\n### Host-memory KV offload, multi-turn sessions "
+           f"({data.get('sessions')} sessions x {data.get('turns')} turns, "
+           f"pool={data.get('num_blocks')} blocks, "
+           f"chunk={data.get('chunk_tokens')}, caching on)\n"]
+    out.append("| cell | warm p50 | warm p99 | cold p50 | cold p99 "
+               "| x-turn hit | restores | restore s | goodput | tokens sha |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for name, r in sorted(data.get("grid", {}).items()):
+        nw, nc = r.get("warm_turns", 0), r.get("cold_turns", 0)
+        out.append(
+            f"| {name} | {fmt_ms(r['p50_warm_ttft_s'], nw)} "
+            f"| {fmt_ms(r['p99_warm_ttft_s'], nw)} "
+            f"| {fmt_ms(r['p50_cold_ttft_s'], nc)} "
+            f"| {fmt_ms(r['p99_cold_ttft_s'], nc)} "
+            f"| {fmt_num(r['cross_turn_hit_rate'], nw, '.3f')} "
+            f"| {r['host_restores']} | {r['host_restore_s']:.4f} "
+            f"| {fmt_num(r['goodput_tok_s'], r.get('finished', 1))} "
+            f"| {r['tokens_sha']} |")
     print("\n".join(out))
 
 
@@ -114,6 +158,7 @@ def main():
         print(table(cells, f"{fname} ({fits}/{len(cells)} fit 16 GB)"))
     prefix_table()
     control_table()
+    sessions_table()
 
 
 if __name__ == "__main__":

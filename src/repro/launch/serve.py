@@ -35,6 +35,13 @@ at the door, drains back down after):
   PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
       --replicas 2 --router slo --autoscale --shed-factor 1.5 \
       --dataset alpaca --bursty --requests 400
+
+Host-memory KV offload tier on the multi-turn session workload (evicted
+prefix blocks spill to a host-side store and restore on the next turn's
+prefix hit instead of re-running prefill):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --dataset sessions --requests 48 --rate 0.5 --chunk-tokens 384 \
+      --prefix-caching on --kv-offload
 """
 from __future__ import annotations
 
@@ -68,6 +75,11 @@ def main():
                     default="fifo",
                     help="waiting-queue admission order for chunked "
                          "prefill: FIFO or earliest-TTFT-deadline first")
+    ap.add_argument("--kv-offload", action="store_true",
+                    help="host-memory KV spill tier: evicted cached-prefix "
+                         "blocks move to a host store and restore into free "
+                         "device blocks on a later prefix hit (requires "
+                         "--prefix-caching on)")
     ap.add_argument("--no-offload", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicas", type=int, default=1,
@@ -96,6 +108,10 @@ def main():
                          "constant-rate Poisson process")
     args = ap.parse_args()
 
+    if args.kv_offload and args.prefix_caching != "on":
+        ap.error("--kv-offload requires --prefix-caching on (the host tier "
+                 "is keyed by prefix chain hashes)")
+
     from .. import configs
 
     if args.tier == "sim":
@@ -103,6 +119,7 @@ def main():
         from ..serving.simulator import (SimConfig, build_sim_cluster,
                                          build_sim_engine)
         from ..serving.workload import (bursty_trace, poisson_requests,
+                                        session_requests,
                                         templated_requests)
 
         target = configs.get_config(args.arch)
@@ -115,12 +132,21 @@ def main():
             chunk_tokens=chunk,
             prefix_caching=args.prefix_caching == "on",
             prefill_order=args.prefill_order,
-            enable_offload=not args.no_offload, seed=args.seed)
-        if args.dataset == "templated" and args.bursty:
-            ap.error("--bursty is not supported with --dataset templated "
-                     "(the templated workload is a constant-rate Poisson "
-                     "stream); pick one")
-        if args.dataset == "templated":
+            enable_offload=not args.no_offload,
+            kv_offload=args.kv_offload, seed=args.seed)
+        if args.dataset in ("templated", "sessions") and args.bursty:
+            ap.error(f"--bursty is not supported with --dataset "
+                     f"{args.dataset} (that workload generates its own "
+                     f"arrival process); pick one")
+        if args.dataset == "sessions":
+            # --requests is the TOTAL request budget; each session
+            # contributes `turns` requests (one per conversation turn)
+            from ..serving.workload import DATASETS
+            turns = DATASETS["sessions"]["turns"]
+            reqs = session_requests(max(args.requests // turns, 1),
+                                    rate_qps=args.rate, seed=args.seed + 1,
+                                    slo=args.slo)
+        elif args.dataset == "templated":
             # prompts carry real token ids (shared template + suffix) so
             # the prefix cache has content to hash and the affinity router
             # has an identity to be sticky about
@@ -168,9 +194,14 @@ def main():
         # paged pool, sized from the roofline HBM budget
         cm = RooflineCostModel(TPU_V5E)
         block_size = 8
-        bm = BlockManager(num_blocks_for(cm, cfg, dcfg, block_size,
-                                         max_blocks=1024), block_size,
-                          prefix_caching=args.prefix_caching == "on")
+        nb = num_blocks_for(cm, cfg, dcfg, block_size, max_blocks=1024)
+        host_store = None
+        if args.kv_offload:
+            from ..serving.kv_cache import HostKVStore
+            host_store = HostKVStore(4 * nb)
+        bm = BlockManager(nb, block_size,
+                          prefix_caching=args.prefix_caching == "on",
+                          host_store=host_store)
         backend = make_real_backend(target, draft, max_batch=4, max_seq=256,
                                     seed=args.seed, block_manager=bm,
                                     cost_model=cm)

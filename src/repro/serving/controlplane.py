@@ -140,7 +140,14 @@ class ReplicaTelemetry:
             rec = self._forecasts.pop(r.req_id, None)
             if rec is not None:
                 forecast, backlog = rec
-                self.ewma_slope.update(r.ttft / max(backlog, 1))
+                if backlog > 0:
+                    # idle dispatches (zero backlog) observe the service
+                    # FLOOR, not a queue-delay slope: folding ttft/1 into
+                    # the slope would teach the forecaster seconds-per-
+                    # backlog-token ≈ baseline TTFT and inflate every
+                    # subsequent busy forecast.  The residual bias
+                    # (ewma_err) already captures the floor.
+                    self.ewma_slope.update(r.ttft / backlog)
                 self.ewma_err.update(r.ttft - forecast)
         self._consumed = len(stats)
         return fresh

@@ -211,6 +211,32 @@ class ServingEngine:
             seqs = [s for s in seqs if s in self.scheduler.running]
         return seqs
 
+    def _drain_host_transfers(self) -> float:
+        """Consume the host KV tier's transfer queues on the simulated tier
+        and return the modelled restore latency (charged to the clock:
+        restored blocks gate the admitted sequence's prefill, so the
+        host→device copy is synchronous; spills ride the async DMA stream,
+        §6.2, and cost nothing here).  Real backends drain these queues
+        themselves inside their timed steps (``apply_host_transfers``), so
+        this is a no-op for them."""
+        bm = self.scheduler.bm
+        hs = getattr(bm, "host_store", None)
+        if hs is None or hasattr(self.backend, "apply_host_transfers"):
+            return 0.0
+        spills = bm.drain_pending_spills()
+        for _, h in spills:
+            if h in hs.records:
+                hs.stats["spilled_blocks"] += 1
+        restores = bm.drain_pending_restores()
+        for h, _ in restores:
+            hs.take(h)
+        lat_fn = getattr(self.backend, "host_transfer_latency", None)
+        lat = (lat_fn(len(spills), len(restores))
+               if lat_fn is not None and restores else 0.0)
+        if lat:
+            hs.stats["restore_s"] += lat
+        return lat
+
     def _record_timeline(self, B: int, gamma: int, tokens: int,
                          latency: float, draft_ok: bool,
                          prefill_tokens: int = 0) -> None:
@@ -348,6 +374,11 @@ class ServingEngine:
             for s in batch.admitted:
                 on_admit(s)
 
+        # host-tier KV transfers queued during admission (spills from LRU
+        # eviction, restores from match_prefix host hits) complete before
+        # the fused step reads the restored prefixes
+        self.clock += self._drain_host_transfers()
+
         decode = [s for s in batch.decode]
         B = len(decode)
         delta_max = max((s.delta for s in decode), default=0)
@@ -436,7 +467,10 @@ class ServingEngine:
         if bm.prefix_caching:
             m.prefix = {k: bm.stats[k] for k in
                         ("queries", "hits", "saved_tokens", "shared_blocks",
-                         "forks", "evictions")}
+                         "forks", "evictions", "restored_blocks")}
+        hs = getattr(bm, "host_store", None)
+        if hs is not None:
+            m.host = dict(hs.stats)
         return m
 
     # ------------------------------------------------------------------

@@ -28,6 +28,19 @@ A block is therefore in exactly one of three states: **free** (allocatable,
 content dead), **cached-reusable** (refcount 0, content live in the hash
 index, reclaimable on demand) or **pinned** (refcount >= 1).
 
+With a ``HostKVStore`` attached (``host_store=``), eviction from the
+cached-reusable tier gains a fourth, host-side destination: instead of
+discarding the block's content, the manager records it under the block's
+chain hash and queues a device→host copy (``pending_spills``); a later
+``match_prefix`` walk that misses the device index but hits the host store
+restores the content into a *free* device block (``pending_restores``,
+host→device) and re-registers the hash, so the admission path counts the
+restored prefix as cached.  The physical tier drains both queues before its
+step writes — spills before restores, so a block spilled and re-matched in
+the same scheduling round restores the just-captured payload.  This is the
+KV-side generalisation of the paper's draft-offload move (§6.2): cold
+prefix state parks in host memory instead of being recomputed.
+
 Invariants (property-tested):
   I1  a block id is in the free list, the cached-LRU tier, or referenced
       by >=1 sequence — exactly one of the three
@@ -36,6 +49,10 @@ Invariants (property-tested):
   I4  migration preserves every sequence's logical KV contents bit-exactly
   I5  every cached hash maps to a live (non-free) block whose stored token
       chain reproduces the hash
+  I6  (host tier) every pending restore targets a registered device block
+      backed by a pinned host record; host and device indices are disjoint
+      except for restores in flight, and every host record's token chain
+      reproduces its key
 """
 from __future__ import annotations
 
@@ -103,11 +120,92 @@ class MigrationPlan:
         return len(self.src)
 
 
+@dataclass
+class HostBlockRecord:
+    """One spilled prefix block in host memory.
+
+    ``parent``/``tokens`` are the chain-hash material (enough to re-verify
+    the key and to re-register the block on restore); ``data`` holds the
+    per-pool page payloads once the physical tier executes the spill —
+    keyed ``"<pool_tag>:<page_key>"`` (e.g. ``"t:k_pages"``) with
+    host-side numpy arrays.  The simulated tier never fills ``data``."""
+
+    parent: int
+    tokens: Tuple[int, ...]
+    data: Dict[str, np.ndarray] = field(default_factory=dict)
+
+
+class HostKVStore:
+    """Host-memory spill tier for evicted cached-reusable prefix blocks.
+
+    An LRU dict keyed by the block's blake2b chain hash — the same
+    process-stable identity the device-side ``hash_index`` uses, so a
+    restored block re-registers under exactly the key ``match_prefix``
+    walks.  Capacity is counted in blocks; inserting past capacity evicts
+    host-LRU records, except records *pinned* by an in-flight restore
+    (the device side already re-registered their hash; dropping the record
+    before the physical copy would serve garbage content)."""
+
+    def __init__(self, capacity_blocks: int = 4096):
+        self.capacity = max(int(capacity_blocks), 1)
+        self.records: "OrderedDict[int, HostBlockRecord]" = OrderedDict()
+        self.pinned: set = set()               # hashes with restores in flight
+        self.stats: Dict[str, float] = dict(
+            spills=0, spilled_blocks=0, restores=0, host_evictions=0,
+            spill_s=0.0, restore_s=0.0)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __contains__(self, h: int) -> bool:
+        return h in self.records
+
+    def put(self, h: int, parent: int, tokens: Tuple[int, ...]) -> None:
+        """Index (or refresh) a spilled block.  A re-spill of a hash the
+        store already holds keeps the existing record (content is fully
+        determined by the hash) and just refreshes its LRU position."""
+        rec = self.records.get(h)
+        if rec is None:
+            self.records[h] = HostBlockRecord(parent, tuple(tokens))
+            self.stats["spills"] += 1
+        self.records.move_to_end(h)
+        while len(self.records) > self.capacity:
+            victim = next((k for k in self.records if k not in self.pinned),
+                          None)
+            if victim is None:
+                break                      # everything pinned: tolerate spill
+            del self.records[victim]
+            self.stats["host_evictions"] += 1
+
+    def get(self, h: int) -> Optional[HostBlockRecord]:
+        rec = self.records.get(h)
+        if rec is not None:
+            self.records.move_to_end(h)
+        return rec
+
+    def pin(self, h: int) -> None:
+        self.pinned.add(h)
+
+    def unpin(self, h: int) -> None:
+        self.pinned.discard(h)
+
+    def take(self, h: int) -> Optional[HostBlockRecord]:
+        """Consume a record at restore time: move semantics — once the
+        content is back in a device block the host copy is dropped (a later
+        eviction re-spills it)."""
+        rec = self.records.pop(h, None)
+        self.pinned.discard(h)
+        if rec is not None:
+            self.stats["restores"] += 1
+        return rec
+
+
 class BlockManager:
     """vLLM-style block allocator + Nightjar's elastic boundary."""
 
     def __init__(self, num_blocks: int, block_size: int, *,
-                 prefix_caching: bool = False):
+                 prefix_caching: bool = False,
+                 host_store: Optional[HostKVStore] = None):
         self.block_size = block_size
         self.base_blocks = num_blocks      # N_orig
         self.total_blocks = num_blocks     # N_orig or N_scale
@@ -126,9 +224,17 @@ class BlockManager:
         self.block_chain: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
         self.cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
         self.pending_copies: List[Tuple[int, int]] = []  # CoW (src, dst)
+        # --- host offload tier (inactive when host_store is None) ---
+        # spill: (block id, hash) device→host copies the physical tier owes;
+        # restore: (hash, block id) host→device copies, queued by
+        # match_prefix when a chain walk hits the host store.  Both drain
+        # before the step's writes, spills first.
+        self.host_store = host_store if prefix_caching else None
+        self.pending_spills: List[Tuple[int, int]] = []
+        self.pending_restores: List[Tuple[int, int]] = []
         self.stats: Dict[str, int] = dict(
             queries=0, hits=0, saved_tokens=0, shared_blocks=0, forks=0,
-            evictions=0, allocated_blocks=0)
+            evictions=0, allocated_blocks=0, restored_blocks=0)
 
     # ------------------------------------------------------------------
     @property
@@ -150,13 +256,13 @@ class BlockManager:
     # ------------------------------------------------------------------
     def _pop_block(self, what: str) -> int:
         """One allocatable block id: the free list first, then LRU eviction
-        of a cached-reusable prefix block (which unregisters it)."""
+        of a cached-reusable prefix block (which unregisters it, spilling
+        its content to the host tier when one is attached)."""
         if self.free:
             return self.free.pop()
         if self.cached:
-            b, _ = self.cached.popitem(last=False)   # least recently used
-            self._unregister(b)
-            self.stats["evictions"] += 1
+            b = next(iter(self.cached))              # least recently used
+            self._evict_cached_block(b)
             return b
         raise OutOfBlocks(f"{what}: pool exhausted")
 
@@ -266,13 +372,44 @@ class BlockManager:
             del self.hash_index[h]
         self.block_chain.pop(b, None)
         self.cached.pop(b, None)
+        if h is not None and self.pending_restores:
+            # the block was a restore TARGET whose host→device copy never
+            # executed: cancel the restore — the host record (still pinned
+            # until now) remains the sole owner of the content
+            kept = [(ph, pb) for ph, pb in self.pending_restores if pb != b]
+            if len(kept) != len(self.pending_restores):
+                self.pending_restores = kept
+                if self.host_store is not None:
+                    self.host_store.unpin(h)
+
+    def _evict_cached_block(self, b: int) -> None:
+        """Evict one cached-reusable block: spill its content to the host
+        tier (when attached, and unless the block is itself an
+        unmaterialised restore target — then the host record already owns
+        the content), then unregister.  The caller decides where the freed
+        id goes (returned to the caller by ``_pop_block``, appended to the
+        free list by ``plan_contraction``)."""
+        hs = self.host_store
+        h = self.block_hash.get(b)
+        self.cached.pop(b, None)
+        if hs is not None and h is not None and \
+                not any(pb == b for _, pb in self.pending_restores):
+            parent, toks = self.block_chain[b]
+            hs.put(h, parent, toks)
+            self.pending_spills.append((b, h))
+        self._unregister(b)
+        self.stats["evictions"] += 1
 
     def match_prefix(self, tokens: Optional[Sequence[int]]
                      ) -> Tuple[List[int], int]:
         """Longest cached prefix of ``tokens``: walk the hash chain over
         full blocks, verifying stored token content (collision guard).
-        Returns (block ids, matched token count) — both empty/0 when
-        caching is off or nothing matches."""
+        When the device index misses but the host tier holds the hash, the
+        walk continues by *restoring*: a free device block is registered
+        under the hash, parked in the cached-LRU tier, and the host→device
+        copy queued for the physical tier — so admission accounting sees
+        restorable blocks as cached.  Returns (block ids, matched token
+        count) — both empty/0 when caching is off or nothing matches."""
         if not self.prefix_caching or not tokens:
             return [], 0
         self.stats["queries"] += 1
@@ -283,10 +420,56 @@ class BlockManager:
             blk = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
             h = chain_hash(h, blk)
             b = self.hash_index.get(h)
-            if b is None or self.block_chain[b][1] != blk:
+            if b is not None:
+                if self.block_chain[b][1] != blk:
+                    break
+                blocks.append(b)
+                continue
+            b = self._restore_block(h, blk)
+            if b is None:
                 break
             blocks.append(b)
         return blocks, len(blocks) * bs
+
+    def _restore_block(self, h: int, blk: Tuple[int, ...]) -> Optional[int]:
+        """Pull one host-tier block back onto the device: allocate strictly
+        from the free list (never evict device-cached content to make room
+        — that would thrash the warmer tier), register the hash at the new
+        home, park it cached-reusable, and queue the host→device copy.  The
+        host record stays (pinned) until the physical drain consumes it."""
+        hs = self.host_store
+        if hs is None or not self.free:
+            return None
+        rec = hs.get(h)
+        if rec is None or rec.tokens != blk:
+            return None
+        b = self.free.pop()
+        self.hash_index[h] = b
+        self.block_hash[b] = h
+        self.block_chain[b] = (rec.parent, rec.tokens)
+        self.cached[b] = None
+        self.cached.move_to_end(b)
+        self.pending_restores.append((h, b))
+        hs.pin(h)
+        self.stats["restored_blocks"] += 1
+        return b
+
+    def drain_pending_spills(self) -> List[Tuple[int, int]]:
+        """Hand the queued device→host (block, hash) spills to the physical
+        tier, which gathers each block's pages into the matching
+        ``HostKVStore`` record (skipping hashes the host LRU already
+        dropped).  Must run before this step's writes AND before
+        ``drain_pending_restores`` — a block spilled and re-matched in the
+        same round restores the payload this drain captures."""
+        out, self.pending_spills = self.pending_spills, []
+        return out
+
+    def drain_pending_restores(self) -> List[Tuple[int, int]]:
+        """Hand the queued host→device (hash, block) restores to the
+        physical tier, which scatters each record's payload into the
+        target block and then ``take``s the record (move semantics)."""
+        out, self.pending_restores = self.pending_restores, []
+        return out
 
     def share(self, seq_id: int, blocks: List[int], tokens: int) -> List[int]:
         """Admission side of prefix sharing: map cached prefix ``blocks``
@@ -333,6 +516,14 @@ class BlockManager:
             self.hash_index[h] = b
             self.block_hash[b] = h
             self.block_chain[b] = (parent, blk)
+            if self.host_store is not None:
+                # the sequence re-materialised this content on device (e.g.
+                # a restore was skipped for lack of free blocks): the fresh
+                # device copy supersedes the host record — drop it so the
+                # tiers stay disjoint.  It cannot be pinned: a pinned hash
+                # has a pending restore, hence is already in hash_index and
+                # was skipped above.
+                self.host_store.records.pop(h, None)
             added += 1
         return added
 
@@ -395,20 +586,30 @@ class BlockManager:
     def plan_contraction(self) -> Optional[MigrationPlan]:
         if self.total_blocks == self.base_blocks:
             return None
-        # cached-reusable (refcount-0) prefix blocks are reclaimable by
-        # definition: evict them all so the preserved-region accounting sees
-        # every reusable slot and no unreferenced high block survives the
-        # boundary trim (prefix reuse restarts warm after contraction)
-        while self.cached:
-            b, _ = self.cached.popitem(last=False)
-            self._unregister(b)
-            self.stats["evictions"] += 1
+        # Cached-reusable (refcount-0) prefix blocks AT OR ABOVE the
+        # boundary cannot survive the trim: evict them (spilling to the
+        # host tier when attached).  Below-boundary cached blocks KEEP
+        # their registrations — the shrunk pool can hold them, and
+        # evicting them too would cold-restart the prefix cache on every
+        # contraction cycle.
+        for b in [x for x in self.cached if x >= self.boundary]:
+            self._evict_cached_block(b)
             if b < self.total_blocks and b not in self.reserved:
                 self.free.append(b)
         evict = sorted(
             b for t in self.tables.values() for b in t if b >= self.boundary)
-        # preserved-region free slots
+        # preserved-region free slots; when they cannot host every migrated
+        # block, evict the minimum number of below-boundary cached blocks
+        # (LRU-first, spilled like any other eviction) to make room —
+        # pinned content always outranks reusable content
         low_free = [b for b in self.free if b < self.boundary]
+        while len(low_free) < len(evict):
+            b = next((x for x in self.cached if x < self.boundary), None)
+            if b is None:
+                break
+            self._evict_cached_block(b)
+            self.free.append(b)
+            low_free.append(b)
         if len(low_free) < len(evict):
             return None  # not enough room — §6.4 step 2 verification failed
         dst = sorted(low_free)[: len(evict)]
@@ -433,8 +634,9 @@ class BlockManager:
             self.refcount[new] = self.refcount.pop(old)
             self.reserved.discard(new)
             # registered (pinned) prefix blocks carry their hash to the new
-            # home; cached refcount-0 blocks were already evicted at plan
-            # time, so only table-referenced registrations can appear here
+            # home; high cached refcount-0 blocks were already evicted at
+            # plan time (below-boundary ones survive in place, untouched by
+            # the mapping), so only table-referenced registrations appear
             h = self.block_hash.pop(old, None)
             if h is not None:
                 self.block_hash[new] = h
@@ -479,6 +681,27 @@ class BlockManager:
             assert self.hash_index.get(h) == b, (b, h)
         for src, dst in self.pending_copies:
             assert refs.get(dst) == 1, f"CoW target {dst} not private"
+        # I6: the host tier's index is consistent with the device's — every
+        # pending restore targets a registered (cached or pinned) device
+        # block backed by a pinned host record, tiers are disjoint except
+        # for restores in flight, and every host record reproduces its key
+        hs = self.host_store
+        if hs is not None:
+            restoring = {h for h, _ in self.pending_restores}
+            for h, b in self.pending_restores:
+                assert h in hs.records, f"restore {h:#x} lost its record"
+                assert h in hs.pinned, f"restore {h:#x} not pinned"
+                assert self.hash_index.get(h) == b, (h, b)
+                assert b in self.cached or b in refs, \
+                    f"restore target {b} neither cached nor referenced"
+            for h, rec in hs.records.items():
+                assert chain_hash(rec.parent, rec.tokens) == h, \
+                    f"host record {h:#x} chain mismatch"
+                assert len(rec.tokens) == self.block_size, \
+                    "partial block spilled"
+                if h not in restoring:
+                    assert h not in self.hash_index, \
+                        f"hash {h:#x} live on both tiers without a restore"
 
 
 class PhysicalKVPool:
@@ -537,3 +760,19 @@ class PhysicalKVPool:
                                                 use_kernel=use_kernel)
         self.v = block_migration.migrate_blocks(self.v, src, dst,
                                                 use_kernel=use_kernel)
+
+    def spill_blocks(self, ids: Sequence[int]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Device→host gather of whole blocks for the host KV tier: one
+        batched index gather per array (the spill half of the offload
+        path), returned as host-side numpy of shape (L, n, bs, KH, hd)."""
+        idx = jnp.asarray(list(ids), jnp.int32)
+        return np.asarray(self.k[:, idx]), np.asarray(self.v[:, idx])
+
+    def restore_blocks(self, ids: Sequence[int], k_payload, v_payload) -> None:
+        """Host→device scatter of spilled blocks back into the pool — the
+        same batched index-vector scatter the block-migration kernel's
+        oracle performs, with the source staged from host memory."""
+        idx = jnp.asarray(list(ids), jnp.int32)
+        self.k = self.k.at[:, idx].set(jnp.asarray(k_payload, self.k.dtype))
+        self.v = self.v.at[:, idx].set(jnp.asarray(v_payload, self.v.dtype))

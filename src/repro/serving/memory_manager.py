@@ -14,6 +14,14 @@ Transfers are modelled as asynchronous (CUDA-stream analogue, §6.2): the
 manager records a completion time and the engine's clock only blocks if it
 *consumes* the resource before the transfer finishes — offload/reload never
 stall the decode path.
+
+With a host KV tier attached to the BlockManager (``host_store``), memory
+pressure offloads instead of discarding: every cached-reusable block
+``plan_contraction`` evicts is spilled to the ``HostKVStore``, and the
+``flush_fn`` hook (``RealBackend.apply_host_transfers`` on the real tier)
+runs between planning and the §6.4 data movement so those blocks' pages
+are captured BEFORE migration reuses their below-boundary targets and
+``shrink_fn`` trims the high region.
 """
 from __future__ import annotations
 
@@ -39,7 +47,8 @@ class ElasticMemoryManager:
                  offload_fn: Optional[Callable[[], None]] = None,
                  reload_fn: Optional[Callable[[], None]] = None,
                  grow_fn: Optional[Callable[[int], None]] = None,
-                 shrink_fn: Optional[Callable[[int], None]] = None):
+                 shrink_fn: Optional[Callable[[int], None]] = None,
+                 flush_fn: Optional[Callable[[], None]] = None):
         self.bm = bm
         self.draft_blocks = draft_blocks          # N_draft
         self.tau_low_frac = tau_low_frac
@@ -55,6 +64,10 @@ class ElasticMemoryManager:
         # RealBackend.grow_pools/shrink_pools).  None on the simulated tier.
         self.grow_fn = grow_fn
         self.shrink_fn = shrink_fn
+        # host-tier spill flush (real tier: RealBackend.apply_host_transfers)
+        # — must run after plan_contraction queued its spills and before the
+        # migration/shrink overwrite or trim the spilled blocks' pages
+        self.flush_fn = flush_fn
 
         self.draft_resident = True
         self.expanded = False
@@ -116,6 +129,8 @@ class ElasticMemoryManager:
             return  # §6.4 step 2 verification failed — retry later
         migrate_latency = 0.0
         if plan is not None:
+            if self.flush_fn is not None:
+                self.flush_fn()   # capture contraction-time spills first
             if self.migrate_fn is not None:
                 migrate_latency = self.migrate_fn(plan) or 0.0
             self.bm.commit_contraction(plan)

@@ -86,6 +86,30 @@ class PagedKVRuntime:
         """§6.4 step 3 on the physical paged pools."""
         self.apply_copies(plan.src, plan.dst, use_kernel=use_kernel)
 
+    def spill_blocks(self, ids: Seq[int]) -> Dict[str, np.ndarray]:
+        """Device→host gather of whole blocks for the host KV offload tier:
+        ONE batched index gather per page array (k/v), materialised to host
+        numpy.  Returned arrays have shape (L, n, block_size, KH, hd) with
+        the block axis second, so ``arr[:, i]`` is block ``ids[i]``'s
+        payload for a single :class:`~.kv_cache.HostBlockRecord`."""
+        idx = jnp.asarray(list(ids), jnp.int32)
+        return {key: np.asarray(arr[:, idx])
+                for key, arr in self.pages.items()}
+
+    def restore_blocks(self, ids: Seq[int],
+                       payloads: Dict[str, np.ndarray]) -> None:
+        """Host→device scatter of spilled block payloads back into the page
+        arrays — one batched index-vector scatter per pool, the same data
+        movement shape as the block-migration path with the source staged
+        from host memory.  ``payloads`` mirrors :meth:`spill_blocks`'s
+        (L, n, block_size, KH, hd) layout."""
+        if not len(ids):
+            return
+        idx = jnp.asarray(list(ids), jnp.int32)
+        for key in self.pages:
+            self.pages[key] = self.pages[key].at[:, idx].set(
+                jnp.asarray(payloads[key], self.pages[key].dtype))
+
     def grow(self, extra_blocks: int) -> None:
         """§6.3 expansion of the physical pool: extend both page arrays by
         ``extra_blocks``, keeping the trash block LAST.  The old trash slot

@@ -188,10 +188,59 @@ class RealBackend:
         self.tkv.ctx[seq.req_id] = seq.prefilled
         self.dkv.ctx[seq.req_id] = seq.prefilled
 
+    def apply_host_transfers(self) -> None:
+        """Drain the BlockManager's host-tier queues: gather freshly
+        spilled blocks' pages (BOTH pools) into their ``HostKVStore``
+        records, then scatter queued restores back into their target device
+        blocks — spills strictly first, so a block spilled and re-matched
+        in the same scheduling round restores the payload captured here.
+        Runs BEFORE CoW copies and step writes (``_apply_pending_copies``)
+        so eviction-time content is read before anything overwrites it."""
+        hs = getattr(self.bm, "host_store", None)
+        if hs is None:
+            return
+        spills = self.bm.drain_pending_spills()
+        if spills:
+            t0 = time.perf_counter()
+            ids = [b for b, _ in spills]
+            tpay = self.tkv.spill_blocks(ids)
+            dpay = self.dkv.spill_blocks(ids)
+            for i, (_, h) in enumerate(spills):
+                rec = hs.records.get(h)
+                if rec is None:
+                    continue          # host LRU dropped it before the copy
+                rec.data = {f"t:{k}": v[:, i] for k, v in tpay.items()}
+                rec.data.update(
+                    {f"d:{k}": v[:, i] for k, v in dpay.items()})
+                hs.stats["spilled_blocks"] += 1
+            hs.stats["spill_s"] += time.perf_counter() - t0
+        restores = self.bm.drain_pending_restores()
+        if restores:
+            t0 = time.perf_counter()
+            recs = [(b, hs.take(h)) for h, b in restores]
+            # a queued restore's record is pinned from match to drain, so
+            # it cannot have been evicted from the host tier in between —
+            # and its payload landed in the spill drain above at the latest
+            assert all(r is not None and r.data for _, r in recs), \
+                "pinned host record lost before its restore drained"
+            ids = [b for b, _ in recs]
+            self.tkv.restore_blocks(ids, {
+                k: np.stack([r.data[f"t:{k}"] for _, r in recs], axis=1)
+                for k in self.tkv.pages})
+            self.dkv.restore_blocks(ids, {
+                k: np.stack([r.data[f"d:{k}"] for _, r in recs], axis=1)
+                for k in self.dkv.pages})
+            jax.block_until_ready(self.tkv.pages["k_pages"])
+            jax.block_until_ready(self.dkv.pages["k_pages"])
+            hs.stats["restore_s"] += time.perf_counter() - t0
+
     def _apply_pending_copies(self) -> None:
         """Execute the BlockManager's queued CoW forks on-device (one
         batched block-migration launch per pool) BEFORE this step's writes,
-        so a privatised block carries its shared content when written."""
+        so a privatised block carries its shared content when written.
+        Host-tier spills/restores drain first: a spill must read its
+        block's pages before a CoW copy or step write can touch them."""
+        self.apply_host_transfers()
         copies = self.bm.drain_pending_copies()
         if not copies:
             return
@@ -237,7 +286,11 @@ class RealBackend:
 
     def migrate_pools(self, plan) -> float:
         """§6.4 step 3: execute the contraction's block moves on both pools
-        (ElasticMemoryManager ``migrate_fn``); returns wall-clock seconds."""
+        (ElasticMemoryManager ``migrate_fn``); returns wall-clock seconds.
+        Contraction-time spills flush first — the spilled high blocks'
+        pages must be captured before migration reuses their below-boundary
+        targets and before ``shrink_pools`` trims the high region."""
+        self.apply_host_transfers()
         t0 = time.perf_counter()
         self.tkv.apply_plan(plan, use_kernel=self.use_kernel)
         self.dkv.apply_plan(plan, use_kernel=self.use_kernel)

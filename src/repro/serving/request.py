@@ -14,6 +14,8 @@ class Request:
     alpha: float = 0.8        # per-token draft-acceptance quality (sim tier)
     prompt_tokens: Optional[List[int]] = None  # real tier
     slo: Optional[float] = None  # TTFT deadline (s) for goodput accounting
+    session: Optional[int] = None  # multi-turn session id (sessions dataset)
+    turn: int = 0             # 0 = cold first turn, >0 = warm return turn
 
 
 @dataclass
@@ -52,7 +54,13 @@ class Sequence:
 
 
 def percentile(xs: List[float], q: float) -> float:
-    """Linear-interpolation percentile (numpy-free, deterministic)."""
+    """Linear-interpolation percentile (numpy-free, deterministic).
+
+    An empty sample returns 0.0 by contract — indistinguishable from a
+    true zero-latency percentile, so table renderers must gate on the
+    sample COUNT and print ``n/a`` for empty cells (see
+    benchmarks/make_tables.py; edge cases pinned in
+    tests/test_metrics_edges.py)."""
     if not xs:
         return 0.0
     s = sorted(xs)
@@ -72,6 +80,8 @@ class RequestStats:
     tpot: float               # time per output token after the first (s)
     tokens: int               # committed output tokens
     slo: Optional[float]      # TTFT deadline, None = no deadline
+    cached_tokens: int = 0    # prompt tokens admitted from the prefix cache
+    turn: int = 0             # session turn (warm/cold TTFT split)
 
     @property
     def slo_met(self) -> bool:
@@ -90,8 +100,13 @@ def slo_attainment_of(requests: List["RequestStats"]) -> float:
 def goodput_of(requests: List["RequestStats"], elapsed: float,
                throughput: float) -> float:
     """Tokens/s counting only requests that met their TTFT SLO (AdaSpec-style
-    goodput; falls back to raw throughput when no per-request stats exist)."""
-    if not elapsed:
+    goodput; falls back to raw throughput when no per-request stats exist).
+
+    Zero/negative ``elapsed`` returns 0.0 by contract (no time base — the
+    rate is undefined, not perfect); renderers must treat a cell with no
+    finished requests as ``n/a``, not 0 (pinned in
+    tests/test_metrics_edges.py)."""
+    if elapsed <= 0:
         return 0.0
     if not requests:
         return throughput
@@ -113,6 +128,8 @@ class Metrics:
     reload_events: int = 0
     blocks_allocated: int = 0              # cumulative free-list acquisitions
     prefix: dict = field(default_factory=dict)  # prefix-cache counters
+    host: dict = field(default_factory=dict)    # host KV tier counters
+                                                # (spills/restores/latency)
 
     def record_finish(self, seq: Sequence, now: float) -> None:
         """Stamp a completed sequence into the per-request stats."""
@@ -121,7 +138,8 @@ class Metrics:
         tpot = (now - first) / max(seq.generated - 1, 1)
         self.requests.append(RequestStats(
             req_id=seq.req_id, arrival=seq.request.arrival, ttft=ttft,
-            tpot=tpot, tokens=seq.generated, slo=seq.request.slo))
+            tpot=tpot, tokens=seq.generated, slo=seq.request.slo,
+            cached_tokens=seq.cached_tokens, turn=seq.request.turn))
 
     @property
     def throughput(self) -> float:
@@ -173,6 +191,13 @@ class Metrics:
                 "prefix_shared_blocks": self.prefix.get("shared_blocks", 0),
                 "prefix_forks": self.prefix.get("forks", 0),
                 "prefix_evictions": self.prefix.get("evictions", 0),
+            })
+        if self.host:
+            out.update({
+                "host_spills": int(self.host.get("spills", 0)),
+                "host_restores": int(self.host.get("restores", 0)),
+                "host_spill_s": round(self.host.get("spill_s", 0.0), 4),
+                "host_restore_s": round(self.host.get("restore_s", 0.0), 4),
             })
         return out
 

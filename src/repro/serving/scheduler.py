@@ -33,6 +33,15 @@ sequence's table at refcount+1 and starts the first prefill chunk at the
 match boundary — a cached prefix costs no prefill compute and no new
 blocks.  Any write range covering a shared block is privatised first via
 ``fork_for_write`` (copy-on-write).
+
+With a host KV tier attached (``BlockManager(host_store=...)``), the same
+``match_prefix`` walk transparently *restores* spilled blocks: a hash that
+misses the device index but hits the host store is re-registered into a
+free device block (host→device copy queued for the physical tier) and
+returned in ``shared`` like any device hit — so admission counts
+restorable blocks as cached with no scheduler-side special-casing, and the
+watermark arithmetic is unchanged (restores move blocks free→cached, both
+sides of ``num_allocatable``).
 """
 from __future__ import annotations
 
@@ -175,6 +184,9 @@ class ContinuousBatchingScheduler:
             shared: List[int] = []
             cached = 0
             if self.bm.prefix_caching and req.prompt_tokens is not None:
+                # may include host-tier restores: blocks re-registered from
+                # the HostKVStore count as cached here, their physical
+                # host→device copy drains before the step's writes
                 shared, matched = self.bm.match_prefix(req.prompt_tokens)
                 # at least one prompt position must be recomputed so the
                 # step produces logits for the first output token

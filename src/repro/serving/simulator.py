@@ -38,6 +38,19 @@ class SimulatedBackend:
         self.rng = np.random.default_rng(seed)
         self.block_size = block_size
 
+    def host_transfer_latency(self, n_spill: int, n_restore: int) -> float:
+        """Modelled host KV tier transfer cost for one drain (engine
+        ``_drain_host_transfers``).  Restores gate the admitted sequence's
+        prefill, so their host→device copy is synchronous and priced at the
+        PCIe-analogue ``host_link_bw`` over both pools' block bytes; spills
+        ride the async DMA stream (§6.2 semantics, same as draft offload)
+        and cost nothing on the critical path."""
+        if n_restore <= 0:
+            return 0.0
+        per_tok = (kv_bytes_per_token(self.target)
+                   + kv_bytes_per_token(self.draft))
+        return n_restore * self.block_size * per_tok / self.cm.hw.host_link_bw
+
     # ------------------------------------------------------------------
     def _ctx(self, seqs: List[Sequence]) -> int:
         return max((s.context_len for s in seqs), default=1)
@@ -123,6 +136,11 @@ class SimConfig:
     enable_offload: bool = True
     kv_reserve_frac: float = 0.1
     seed: int = 0
+    num_blocks: Optional[int] = None  # explicit device pool size (None =
+                                      # derive from the roofline HBM budget)
+    kv_offload: bool = False  # host-memory spill tier for evicted prefix
+                              # blocks (requires prefix_caching)
+    host_kv_blocks: int = 0   # host tier capacity (0 = 4x the device pool)
 
 
 def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
@@ -133,9 +151,15 @@ def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
 
     capacity_tokens = cm.kv_capacity_tokens(cfg.target, cfg.draft,
                                             reserve_frac=cfg.kv_reserve_frac)
-    num_blocks = max(capacity_tokens // cfg.block_size, 64)
+    num_blocks = (cfg.num_blocks if cfg.num_blocks is not None
+                  else max(capacity_tokens // cfg.block_size, 64))
+    host_store = None
+    if cfg.kv_offload and cfg.prefix_caching:
+        from .kv_cache import HostKVStore
+        host_store = HostKVStore(cfg.host_kv_blocks or 4 * num_blocks)
     bm = BlockManager(num_blocks, cfg.block_size,
-                      prefix_caching=cfg.prefix_caching)
+                      prefix_caching=cfg.prefix_caching,
+                      host_store=host_store)
     sched = ContinuousBatchingScheduler(
         bm, max_batch=cfg.max_batch,
         chunk_tokens=cfg.chunk_tokens if cfg.chunk_tokens > 0 else None,

@@ -38,6 +38,17 @@ DATASETS = {
     # copy-on-write prefix caching reclaims.
     "templated": dict(p_mu=3.6, p_sigma=0.7, o_mu=4.2, o_sigma=0.8,
                       a_a=5.0, a_b=3.0, slo_ttft=0.5, template_len=512),
+    # multi-turn chat sessions: each turn's prompt is the full conversation
+    # history (initial pasted context + alternating user/assistant tokens),
+    # re-submitted after a think-time gap.  p_* describe the per-turn USER
+    # message; o_* the assistant response; context_len the turn-0 system
+    # prompt / pasted context; think_s the mean think-time between turns.
+    # The host-KV-offload workload: between turns a session's prefix blocks
+    # go cold and are evicted from a tight device pool — warm-turn TTFT
+    # then hinges on whether the evicted history is restorable.
+    "sessions": dict(p_mu=4.0, p_sigma=0.6, o_mu=4.0, o_sigma=0.5,
+                     a_a=6.0, a_b=3.0, slo_ttft=1.0, context_len=768,
+                     turns=6, think_s=8.0),
 }
 
 
@@ -195,6 +206,59 @@ def templated_requests(rate_qps: float, n: int, *, dataset: str = "templated",
                            int(outputs[i]), float(alphas[i]),
                            prompt_tokens=toks, slo=deadline))
     return out
+
+
+def session_requests(n_sessions: int, *, turns: "int | None" = None,
+                     rate_qps: float = 0.5, think_s: "float | None" = None,
+                     context_len: "int | None" = None,
+                     dataset: str = "sessions", seed: int = 0,
+                     vocab: int = 32000, max_user: int = 512,
+                     max_output: int = 256,
+                     slo: "float | None" = None) -> List[Request]:
+    """Multi-turn chat sessions with think-time returns and history-growing
+    prompts.
+
+    Session starts are Poisson at ``rate_qps``.  Each session opens with a
+    ``context_len``-token pasted context (system prompt / document) plus a
+    user message; every later turn re-submits the FULL history — previous
+    prompt, the synthesised assistant response (``o_*``-distributed length),
+    and a fresh user message — after an exponential think-time gap (mean
+    ``think_s``, floored at 1s so a turn rarely returns before its
+    predecessor finishes).  Turn k's prompt therefore extends turn k-1's
+    prompt exactly, which makes warm turns the canonical prefix-restore
+    workload: registered history blocks match byte-for-byte, while the gap
+    gives a tight device pool time to evict them.
+
+    ``Request.session``/``Request.turn`` tag each request for warm/cold
+    TTFT splits; req_ids are assigned in global arrival order."""
+    rng = np.random.default_rng(seed)
+    d = DATASETS[dataset]
+    turns = int(turns if turns is not None else d.get("turns", 6))
+    think = float(think_s if think_s is not None else d.get("think_s", 8.0))
+    ctx_len = int(context_len if context_len is not None
+                  else d.get("context_len", 768))
+    deadline = dataset_slo(dataset, slo)
+    starts = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_sessions))
+    rows = []   # (arrival, session, turn, prompt_tokens, output_len, alpha)
+    for sid in range(n_sessions):
+        history = rng.integers(0, vocab, size=ctx_len).tolist()
+        t = float(starts[sid])
+        alpha = float(rng.beta(d["a_a"], d["a_b"]))
+        for k in range(turns):
+            user_len = int(_lengths(rng, d["p_mu"], d["p_sigma"],
+                                    1, 4, max_user)[0])
+            prompt = history + rng.integers(0, vocab, size=user_len).tolist()
+            out_len = int(_lengths(rng, d["o_mu"], d["o_sigma"],
+                                   1, 4, max_output)[0])
+            rows.append((t, sid, k, prompt, out_len, alpha))
+            # the assistant's (synthesised) response joins the history the
+            # next turn re-submits; the think-time gap moves the arrival
+            history = prompt + rng.integers(0, vocab, size=out_len).tolist()
+            t += 1.0 + float(rng.exponential(think))
+    rows.sort(key=lambda r: (r[0], r[1], r[2]))
+    return [Request(i, arr, len(p), out, alpha, prompt_tokens=p,
+                    slo=deadline, session=sid, turn=k)
+            for i, (arr, sid, k, p, out, alpha) in enumerate(rows)]
 
 
 def split_requests(requests: List[Request], n_replicas: int

@@ -109,6 +109,36 @@ def test_control_grid_end_to_end():
         assert el["autoscale_adds"] >= 1
 
 
+def test_sessions_grid_end_to_end():
+    """`--only sessions` runs the host-offload session grid, persists
+    BENCH_sessions.json, and the acceptance criteria hold: with offload on
+    at a fixed device pool, warm-turn p50/p99 TTFT strictly below cold-turn
+    TTFT, cross-turn prefix hit-rate > 0.8, host restores actually happen,
+    and committed token streams are byte-identical vs offload-off."""
+    res = _run("benchmarks.run", "--only", "sessions", "--fast")
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = [l for l in res.stdout.splitlines() if l.startswith("sessions.")]
+    assert {r.split(",")[0] for r in rows} == {"sessions.none",
+                                              "sessions.offload"}
+
+    data = json.load(open(os.path.join(ROOT, "BENCH_sessions.json")))
+    on, off = data["grid"]["offload"], data["grid"]["none"]
+    # identical committed token streams, every request finished, same split
+    assert on["tokens_sha"] == off["tokens_sha"]
+    assert on["finished"] == off["finished"] > 0
+    assert on["warm_turns"] == off["warm_turns"] > 0
+    assert on["cold_turns"] == off["cold_turns"] > 0
+    # the headline: restored history makes warm turns strictly cheaper
+    assert on["p50_warm_ttft_s"] < on["p50_cold_ttft_s"]
+    assert on["p99_warm_ttft_s"] < on["p99_cold_ttft_s"]
+    assert on["cross_turn_hit_rate"] > 0.8
+    assert on["cross_turn_hit_rate"] > off["cross_turn_hit_rate"]
+    # the tier actually moved blocks both ways, at modelled PCIe cost
+    assert on["host_restores"] > 0 and on["host_spills"] > 0
+    assert on["host_restore_s"] > 0
+    assert off["host_restores"] == off["host_spills"] == 0
+
+
 def test_backend_grid_end_to_end():
     """`--only backend` runs REAL dense and paged backends, prints the CSV
     grid and persists BENCH_backend.json with the capacity comparison."""

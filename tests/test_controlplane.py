@@ -441,3 +441,53 @@ def test_cluster_summary_per_replica_breakdown():
     assert s2["peak_replicas"] == 2
     assert s2["autoscale"]["adds"] >= 1
     assert s2["replica_seconds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# slope-estimator regression: idle dispatches must not poison the forecast
+# ---------------------------------------------------------------------------
+
+
+def _feed_telemetry(tel, observations):
+    """Drive ReplicaTelemetry through (backlog_tokens, observed_ttft)
+    dispatch/finish pairs via a stub engine."""
+    from types import SimpleNamespace
+
+    from repro.serving.controlplane import ReplicaTelemetry  # noqa: F401
+    from repro.serving.request import RequestStats
+
+    stats = []
+    eng = SimpleNamespace(metrics=SimpleNamespace(requests=stats))
+    for i, (backlog, ttft) in enumerate(observations):
+        tel.note_dispatch(i, forecast=0.0, backlog_tokens=backlog)
+        stats.append(RequestStats(req_id=i, arrival=0.0, ttft=ttft,
+                                  tpot=0.01, tokens=8, slo=None))
+        tel.consume_finished(eng)
+
+
+def test_idle_dispatches_do_not_poison_slope():
+    """Regression (pre-fix: a zero-backlog dispatch updated ewma_slope with
+    ttft / max(backlog, 1) = the replica's BASELINE TTFT, teaching the
+    forecaster a seconds-per-backlog-token four orders of magnitude too
+    large).  Alternating idle/busy dispatches must keep the learned slope
+    within tolerance of the busy-only estimate."""
+    from repro.serving.controlplane import ReplicaTelemetry
+
+    floor, slope, backlog = 0.05, 2e-5, 4000
+    busy = (backlog, floor + slope * backlog)       # ttft = 0.13
+    idle = (0, floor)
+
+    tel_busy = ReplicaTelemetry(alpha=0.3)
+    _feed_telemetry(tel_busy, [busy] * 40)
+    tel_alt = ReplicaTelemetry(alpha=0.3)
+    _feed_telemetry(tel_alt, [idle, busy] * 40)
+
+    ref = tel_busy.ewma_slope.value
+    alt = tel_alt.ewma_slope.value
+    assert ref == pytest.approx((floor + slope * backlog) / backlog)
+    # pre-fix the alternating estimate converges toward ~floor/1 = 0.05
+    # seconds-per-token (>1500x the busy-only slope); post-fix the idle
+    # dispatches are skipped and the estimates agree
+    assert alt == pytest.approx(ref, rel=0.05)
+    # and idle observations still feed the residual/level estimators
+    assert tel_alt.ewma_ttft.n == 80

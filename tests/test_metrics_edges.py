@@ -1,0 +1,87 @@
+"""Edge-case contracts for the metric helpers: `percentile` returns 0.0 on
+empty samples and `goodput_of` returns 0.0 at zero elapsed — BY CONTRACT,
+so table renderers must gate on the sample count and print ``n/a`` instead
+of a fake perfect-latency cell (benchmarks/make_tables.py)."""
+import os
+import sys
+
+import pytest
+
+from repro.serving.request import (Metrics, RequestStats, goodput_of,
+                                   percentile, slo_attainment_of)
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+from benchmarks.make_tables import fmt_ms, fmt_num  # noqa: E402
+
+
+def _stat(req_id=0, ttft=0.1, tokens=10, slo=None):
+    return RequestStats(req_id=req_id, arrival=0.0, ttft=ttft, tpot=0.01,
+                        tokens=tokens, slo=slo)
+
+
+# ---------------------------------------------------------------------------
+# percentile
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_empty_returns_zero_by_contract():
+    assert percentile([], 0.5) == 0.0
+    assert percentile([], 0.99) == 0.0
+
+
+def test_percentile_nonempty_interpolates():
+    xs = [0.1, 0.2, 0.3, 0.4]
+    assert percentile(xs, 0.0) == 0.1
+    assert percentile(xs, 1.0) == 0.4
+    assert percentile(xs, 0.5) == pytest.approx(0.25)
+    assert percentile([0.7], 0.99) == 0.7
+
+
+# ---------------------------------------------------------------------------
+# goodput_of
+# ---------------------------------------------------------------------------
+
+
+def test_goodput_zero_elapsed_returns_zero_by_contract():
+    reqs = [_stat(tokens=100)]
+    assert goodput_of(reqs, 0.0, 123.0) == 0.0
+    assert goodput_of(reqs, -1.0, 123.0) == 0.0
+    assert goodput_of([], 0.0, 123.0) == 0.0
+
+
+def test_goodput_counts_only_slo_met():
+    reqs = [_stat(0, ttft=0.1, tokens=10, slo=0.5),
+            _stat(1, ttft=0.9, tokens=10, slo=0.5)]
+    assert goodput_of(reqs, 2.0, 10.0) == pytest.approx(5.0)
+    # no per-request stats: falls back to raw throughput
+    assert goodput_of([], 2.0, 10.0) == 10.0
+    assert slo_attainment_of(reqs) == 0.5
+    assert slo_attainment_of([]) == 1.0
+
+
+def test_metrics_zero_run_is_all_zero_not_crash():
+    m = Metrics()
+    assert m.throughput == 0.0
+    assert m.goodput == 0.0
+    assert m.ttft_percentile(0.99) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the renderer gate: zero-sample cells print n/a, never 0
+# ---------------------------------------------------------------------------
+
+
+def test_fmt_helpers_render_na_for_empty_cells():
+    assert fmt_ms(0.0, 0) == "n/a"
+    assert fmt_ms(percentile([], 0.99), 0) == "n/a"
+    assert fmt_num(0.0, 0) == "n/a"
+    assert fmt_num(goodput_of([], 0.0, 0.0), 0) == "n/a"
+
+
+def test_fmt_helpers_render_values_when_backed_by_samples():
+    assert fmt_ms(0.1234, 5) == "123ms"
+    assert fmt_ms(0.0, 5) == "0ms"        # a REAL zero renders as zero
+    assert fmt_num(12.34, 5) == "12.3"
+    assert fmt_num(0.875, 3, ".3f") == "0.875"

@@ -214,3 +214,58 @@ def test_dynamic_trace_sampling_deterministic():
     assert arr == sorted(arr)
     assert len(a) == 50
     assert all(r.slo == DATASETS["specbench"]["slo_ttft"] for r in a)
+
+
+# ---------------------------------------------------------------------------
+# multi-turn session workload (host-offload / prefix-restore scenario)
+# ---------------------------------------------------------------------------
+
+
+def test_session_requests_deterministic():
+    from repro.serving.workload import session_requests
+    a = session_requests(6, turns=4, rate_qps=0.5, seed=11)
+    b = session_requests(6, turns=4, rate_qps=0.5, seed=11)
+    assert _fields(a) == _fields(b)
+    assert [r.prompt_tokens for r in a] == [r.prompt_tokens for r in b]
+    assert [(r.session, r.turn) for r in a] == \
+        [(r.session, r.turn) for r in b]
+    c = session_requests(6, turns=4, rate_qps=0.5, seed=12)
+    assert _fields(a) != _fields(c)
+
+
+def test_session_prompts_grow_by_exact_prefix():
+    """Turn k's prompt extends turn k-1's prompt exactly (history = previous
+    prompt + synthesised response), which is what makes warm turns restore
+    cached prefix blocks byte-for-byte."""
+    from repro.serving.workload import session_requests
+    reqs = session_requests(5, turns=4, context_len=64, seed=3)
+    by_session = {}
+    for r in reqs:
+        by_session.setdefault(r.session, []).append(r)
+    assert set(by_session) == set(range(5))
+    for sid, rs in by_session.items():
+        rs.sort(key=lambda r: r.turn)
+        assert [r.turn for r in rs] == [0, 1, 2, 3]
+        assert len(rs[0].prompt_tokens) >= 64 + 4     # context + user msg
+        for prev, cur in zip(rs, rs[1:]):
+            n = len(prev.prompt_tokens)
+            assert cur.prompt_tokens[:n] == prev.prompt_tokens
+            assert len(cur.prompt_tokens) > n         # response + new user
+            assert cur.arrival >= prev.arrival + 1.0  # think-time floor
+
+
+def test_session_requests_arrival_order_and_tags():
+    from repro.serving.workload import DATASETS, session_requests
+    reqs = session_requests(8, turns=3, rate_qps=1.0, seed=0)
+    assert len(reqs) == 24
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)                 # global arrival order
+    assert [r.req_id for r in reqs] == list(range(24))
+    assert all(r.slo == DATASETS["sessions"]["slo_ttft"] for r in reqs)
+    # turn-0 requests are each session's first arrival
+    first = {r.session: r for r in reversed(sorted(reqs, key=lambda r: r.arrival))}
+    for sid, r in first.items():
+        assert r.turn == 0
+    # non-session datasets leave the tags at their defaults
+    other = poisson_requests(10, 5, dataset="sharegpt", seed=0)
+    assert all(r.session is None and r.turn == 0 for r in other)
