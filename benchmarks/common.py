@@ -73,18 +73,21 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
                 dataset: str = "alpaca", max_batch: int = 256, seed: int = 0,
                 chunk_tokens: int = 0, prefix_caching: bool = False,
                 requests=None, trace=None, router_kwargs=None,
-                shed_factor=None, autoscale=None):
+                shed_factor=None, autoscale=None, disaggregate=None):
     """Run one cluster cell on the simulated tier; rate is the TOTAL fleet
     arrival rate.  ``requests``/``trace`` override the Poisson stream;
     ``shed_factor``/``autoscale`` enable the control-plane admission and
-    elastic-scaling controllers.  Returns (ClusterMetrics, ServingCluster)."""
+    elastic-scaling controllers; ``disaggregate`` splits the fleet into
+    prefill/decode pools with priced KV handoff (kwargs dict for
+    ``build_sim_cluster``).  Returns (ClusterMetrics, ServingCluster)."""
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
                     seed=seed, chunk_tokens=chunk_tokens,
                     prefix_caching=prefix_caching)
     cl = build_sim_cluster(cfg, n_replicas, policy, router=router,
                            router_kwargs=router_kwargs,
-                           shed_factor=shed_factor, autoscale=autoscale)
+                           shed_factor=shed_factor, autoscale=autoscale,
+                           disaggregate=disaggregate)
     if requests is not None:
         reqs = requests
     elif trace is not None:
@@ -106,6 +109,16 @@ def saturated_gamma_stats(metrics, max_batch: int, *, last: int = 200):
     tail = hb[-min(last, len(hb)):]
     return (sum(tail) / len(tail),
             sum(1 for g in tail if g == 0) / len(tail))
+
+
+def bench_out(fname: str) -> str:
+    """Resolve a ``BENCH_*.json`` artifact path: the repo root by default,
+    or ``$BENCH_OUT_DIR`` when set (CI smoke runs point this at a temp dir
+    so bench artifacts never land in the checkout)."""
+    root = os.environ.get("BENCH_OUT_DIR")
+    if root:
+        return os.path.join(root, fname)
+    return os.path.join(os.path.dirname(__file__), "..", fname)
 
 
 class CSV:

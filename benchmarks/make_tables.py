@@ -14,6 +14,14 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 HBM = 16e9
 
 
+def bench_path(fname):
+    """BENCH_* artifacts follow ``$BENCH_OUT_DIR`` when set (matching
+    ``benchmarks.common.bench_out``, so CI temp-dir runs render too);
+    dry-run artifacts always live at the repo root."""
+    root = os.environ.get("BENCH_OUT_DIR") or ROOT
+    return os.path.join(root, fname)
+
+
 def load(fname):
     path = os.path.join(ROOT, fname)
     return json.load(open(path)) if os.path.exists(path) else []
@@ -61,7 +69,7 @@ def fmt_num(v, n=1, spec=".1f"):
 
 def prefix_table():
     """Render the prefix-sharing grid persisted by `run.py --only prefix`."""
-    path = os.path.join(ROOT, "BENCH_prefix.json")
+    path = bench_path("BENCH_prefix.json")
     if not os.path.exists(path):
         print("BENCH_prefix.json: missing (run benchmarks.run --only prefix)")
         return
@@ -85,7 +93,7 @@ def prefix_table():
 
 def control_table():
     """Render the control-plane grid persisted by `run.py --only control`."""
-    path = os.path.join(ROOT, "BENCH_control.json")
+    path = bench_path("BENCH_control.json")
     if not os.path.exists(path):
         print("BENCH_control.json: missing (run benchmarks.run "
               "--only control)")
@@ -105,11 +113,14 @@ def control_table():
     for name, r in sorted(data.get("grid", {}).items()):
         reqs = "/".join(str(c) for c in r.get("replica_requests", [])) or "-"
         n = r.get("finished", 1)
+        # offered-traffic attainment is None (n/a by contract) when no
+        # request was offered inside the window — same guard as fmt_ms
+        offered = r.get("slo_attainment_offered", r["slo_attainment"])
         out.append(
             f"| {name} | {fmt_ms(r['p50_ttft_s'], n)} "
             f"| {fmt_ms(r['p99_ttft_s'], n)} "
             f"| {r['slo_attainment']:.3f} "
-            f"| {r.get('slo_attainment_offered', r['slo_attainment']):.3f} "
+            f"| {'n/a' if offered is None else format(offered, '.3f')} "
             f"| {r.get('shed', 0)} "
             f"| {r.get('prefix_hit_rate', 0.0):.3f} "
             f"| {reqs} "
@@ -120,7 +131,7 @@ def control_table():
 
 def sessions_table():
     """Render the host-offload session grid from `run.py --only sessions`."""
-    path = os.path.join(ROOT, "BENCH_sessions.json")
+    path = bench_path("BENCH_sessions.json")
     if not os.path.exists(path):
         print("BENCH_sessions.json: missing (run benchmarks.run "
               "--only sessions)")
@@ -147,6 +158,42 @@ def sessions_table():
     print("\n".join(out))
 
 
+def disagg_table():
+    """Render the disaggregated-fleet grid from `run.py --only disagg`."""
+    path = bench_path("BENCH_disagg.json")
+    if not os.path.exists(path):
+        print("BENCH_disagg.json: missing (run benchmarks.run --only disagg)")
+        return
+    data = json.load(open(path))
+    hi = data.get("high", {})
+    out = [f"\n### Disaggregated prefill/decode fleet "
+           f"({data.get('replicas')} replicas vs {data.get('split')}, "
+           f"dataset={data.get('dataset')} qa_frac={data.get('qa_frac')}, "
+           f"chunk={data.get('chunk_tokens')}, "
+           f"max_batch={data.get('max_batch')}, "
+           f"high rate={hi.get('rate_qps')}qps)\n"]
+    out.append("| cell | p50 TTFT | p99 TTFT | SLO att | goodput tok/s "
+               "| handoffs | declined | transfer s | replica s "
+               "| tokens sha |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for name, r in sorted(data.get("grid", {}).items()):
+        n = r.get("finished", 1)
+        out.append(
+            f"| {name} | {fmt_ms(r['p50_ttft_s'], n)} "
+            f"| {fmt_ms(r['p99_ttft_s'], n)} "
+            f"| {fmt_num(r['slo_attainment'], n, '.3f')} "
+            f"| {fmt_num(r['goodput_tok_s'], n)} "
+            f"| {r.get('handoffs', 0)} | {r.get('handoffs_declined', 0)} "
+            f"| {r.get('handoff_transfer_s', 0.0):.4f} "
+            f"| {r.get('replica_seconds', 0.0):.0f} "
+            f"| {r['tokens_sha']} |")
+    acc = data.get("acceptance", {})
+    if acc:
+        out.append("\nacceptance: "
+                   + "; ".join(f"{k}={v}" for k, v in sorted(acc.items())))
+    print("\n".join(out))
+
+
 def main():
     for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
         cells = [fix_artifact(c) for c in load(fname)]
@@ -159,6 +206,7 @@ def main():
     prefix_table()
     control_table()
     sessions_table()
+    disagg_table()
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ import time
 import numpy as np
 
 from .common import (CSV, PAIRS, POLICIES, POLICY_LABEL, VICUNA_13B,
-                     VICUNA_68M, run_cluster, run_serving,
+                     VICUNA_68M, bench_out, run_cluster, run_serving,
                      saturated_gamma_stats, timed)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -276,9 +276,7 @@ def prefix_grid(csv: CSV, fast: bool):
                         f"blocks={row['blocks_allocated']};"
                         f"goodput={row['goodput_tok_s']:.1f}tok/s;"
                         f"hit_rate={hit:.3f};tokens_sha={sha}")
-    out_path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_prefix.json")
-    with open(out_path, "w") as f:
+    with open(bench_out("BENCH_prefix.json"), "w") as f:
         json.dump(results, f, indent=1)
 
 
@@ -356,9 +354,7 @@ def sessions_grid(csv: CSV, fast: bool):
                 f"cold_p99={row['p99_cold_ttft_s']*1e3:.0f}ms;"
                 f"xturn_hit={hit:.3f};"
                 f"restores={row['host_restores']};tokens_sha={sha}")
-    out_path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_sessions.json")
-    with open(out_path, "w") as f:
+    with open(bench_out("BENCH_sessions.json"), "w") as f:
         json.dump(results, f, indent=1)
 
 
@@ -534,9 +530,99 @@ def control_grid(csv: CSV, fast: bool):
                     f"peak_replicas={row['peak_replicas']};"
                     f"replica_s={row['replica_seconds']:.0f}")
 
-    out_path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_control.json")
-    with open(out_path, "w") as f:
+    with open(bench_out("BENCH_control.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+
+def disagg_grid(csv: CSV, fast: bool):
+    """Disaggregated prefill/decode fleet vs the colocated fleet at EQUAL
+    fleet size (4 replicas vs 2 prefill + 2 decode) on the mixed
+    long-prompt/long-decode workload.
+
+    The high cells are the slot-clogging regime: with a bounded admission
+    batch, colocated replicas' slots fill with long-lived decodes, so long
+    prompts queue behind residents and p99 TTFT collapses — while the
+    disaggregated prefill pool hands every finished prompt's KV blocks to a
+    decode replica (batched block migration priced at interconnect
+    bandwidth) and keeps admitting.  Headline: disagg.high strictly beats
+    colocated.high on p99 TTFT AND goodput with byte-identical per-request
+    committed token streams (migration changes WHERE decode runs, never
+    WHAT is computed).
+
+    The pricedout cells are the fallback demonstration: at low load with a
+    pricer margin, the queue-delay forecast saved never covers the modelled
+    transfer time, so the control plane declines (nearly) every handoff and
+    the 'disaggregated' fleet degrades gracefully to colocated serving —
+    never worse by construction.  Persists the grid to BENCH_disagg.json."""
+    import hashlib
+
+    from repro.serving.workload import mixed_requests
+
+    chunk, mb, qa = 128, 48, 0.25
+    rate_hi, n_hi = 28.0, 500
+    rate_lo, n_lo = 6.0, 100 if fast else 150
+    results = {"chunk_tokens": chunk, "max_batch": mb, "dataset": "mixed",
+               "qa_frac": qa, "replicas": 4, "split": "2 prefill + 2 decode",
+               "high": {"rate_qps": rate_hi, "requests": n_hi},
+               "pricedout": {"rate_qps": rate_lo, "requests": n_lo,
+                             "margin_s": 0.25},
+               "grid": {}}
+    hi_reqs = mixed_requests(rate_hi, n_hi, qa_frac=qa, seed=1)
+    lo_reqs = mixed_requests(rate_lo, n_lo, qa_frac=qa, seed=1)
+    cells = (
+        ("colocated.high", hi_reqs, None),
+        ("disagg.high", hi_reqs, dict(prefill=2, decode=2)),
+        ("colocated.low", lo_reqs, None),
+        ("disagg.pricedout", lo_reqs,
+         dict(prefill=2, decode=2, margin_s=0.25)),
+    )
+    for name, reqs, disagg in cells:
+        t0 = time.perf_counter()
+        m, cl = run_cluster("7b", 4, "nightjar", router="jsq",
+                            requests=reqs, chunk_tokens=chunk,
+                            max_batch=mb, disaggregate=disagg)
+        wall = (time.perf_counter() - t0) * 1e6
+        stream = sorted((r.req_id, r.tokens) for r in m.requests)
+        sha = hashlib.sha256(repr(stream).encode()).hexdigest()[:16]
+        row = {
+            "p50_ttft_s": m.ttft_percentile(0.5),
+            "p99_ttft_s": m.ttft_percentile(0.99),
+            "slo_attainment": m.slo_attainment,
+            "goodput_tok_s": m.goodput,
+            "throughput_tok_s": m.throughput,
+            "handoffs": len(m.handoffs),
+            "handoffs_declined": m.handoffs_declined,
+            "handoff_transfer_s": m.handoff_transfer_s,
+            "handoff_fallbacks": m.handoff_fallbacks,
+            "replica_seconds": m.replica_seconds,
+            "peak_replicas": m.peak_replicas,
+            "finished": len(m.requests),
+            "tokens_sha": sha,
+        }
+        results["grid"][name] = row
+        csv.add(f"disagg.{name}", wall,
+                f"p99_ttft={row['p99_ttft_s']*1e3:.0f}ms;"
+                f"slo_att={row['slo_attainment']:.3f};"
+                f"goodput={row['goodput_tok_s']:.1f}tok/s;"
+                f"handoffs={row['handoffs']};"
+                f"declined={row['handoffs_declined']};"
+                f"tokens_sha={sha}")
+    g = results["grid"]
+    results["acceptance"] = {
+        "disagg_wins_p99_ttft": (g["disagg.high"]["p99_ttft_s"]
+                                 < g["colocated.high"]["p99_ttft_s"]),
+        "disagg_wins_goodput": (g["disagg.high"]["goodput_tok_s"]
+                                > g["colocated.high"]["goodput_tok_s"]),
+        "streams_identical_high": (g["disagg.high"]["tokens_sha"]
+                                   == g["colocated.high"]["tokens_sha"]),
+        "streams_identical_low": (g["disagg.pricedout"]["tokens_sha"]
+                                  == g["colocated.low"]["tokens_sha"]),
+        "pricedout_declines": (g["disagg.pricedout"]["handoffs_declined"]
+                               > g["disagg.pricedout"]["handoffs"]),
+    }
+    csv.add("disagg.acceptance", 0.0,
+            ";".join(f"{k}={v}" for k, v in results["acceptance"].items()))
+    with open(bench_out("BENCH_disagg.json"), "w") as f:
         json.dump(results, f, indent=1)
 
 
@@ -637,9 +723,7 @@ def backend_grid(csv: CSV, fast: bool):
             f"budget_tokens={budget_tokens};dense={n_dense};paged={n_paged};"
             f"gain={n_paged / max(n_dense, 1):.1f}x")
 
-    out_path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_backend.json")
-    with open(out_path, "w") as f:
+    with open(bench_out("BENCH_backend.json"), "w") as f:
         json.dump(results, f, indent=1)
 
 
@@ -839,6 +923,7 @@ BENCHES = {
     "cluster": cluster_sweep,
     "routers": cluster_routers,
     "control": control_grid,
+    "disagg": disagg_grid,
     "table3": table3_cswitch,
     "table7": table7_memops,
     "regret": appendix_regret,

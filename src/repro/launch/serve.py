@@ -42,6 +42,16 @@ prefix hit instead of re-running prefill):
   PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
       --dataset sessions --requests 48 --rate 0.5 --chunk-tokens 384 \
       --prefix-caching on --kv-offload
+
+Disaggregated prefill/decode fleet on the mixed long-prompt/long-decode
+workload (arrivals prefill on a chunked-prefill pool, then the priced KV
+handoff migrates each finished prompt's blocks to a decode replica — or
+keeps it local when the transfer would lose):
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-7b --tier sim \
+      --hw rtx-4090 --dataset mixed --rate 28 --requests 500 \
+      --chunk-tokens 128 --max-batch 48 --disaggregate 2:2
+(the 24GB 4090 profile: the mixed workload's long prompts need KV headroom
+beside the 7B weights, which the 16GB v5e profile does not have)
 """
 from __future__ import annotations
 
@@ -57,6 +67,10 @@ def main():
     ap.add_argument("--rate", type=float, default=10.0)
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--dataset", default="sharegpt")
+    ap.add_argument("--qa-frac", type=float, default=None,
+                    help="document-QA fraction of the mixed long-prompt/"
+                         "long-decode dataset (default: the dataset's "
+                         "tuned 0.25; only valid with --dataset mixed)")
     ap.add_argument("--gamma-max", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--chunk-tokens", default="0",
@@ -106,6 +120,16 @@ def main():
                     help="sim tier: draw arrivals from the bursty "
                          "baseline->spike->drain trace instead of a "
                          "constant-rate Poisson process")
+    ap.add_argument("--hw", default="tpu-v5e",
+                    choices=["tpu-v5e", "rtx-4090", "a100-40g"],
+                    help="sim tier: roofline hardware profile")
+    ap.add_argument("--disaggregate", default=None, metavar="P:D",
+                    help="sim tier: split the fleet into P prefill + D "
+                         "decode replicas with priced KV handoff (requires "
+                         "--chunk-tokens > 0; overrides --replicas)")
+    ap.add_argument("--handoff-margin", type=float, default=0.0,
+                    help="pricer hysteresis in seconds: a handoff must beat "
+                         "staying put by at least this much")
     args = ap.parse_args()
 
     if args.kv_offload and args.prefix_caching != "on":
@@ -115,20 +139,23 @@ def main():
     from .. import configs
 
     if args.tier == "sim":
-        from ..serving.costmodel import RooflineCostModel, TPU_V5E
+        from ..serving.costmodel import (A100_40G, RTX_4090,
+                                         RooflineCostModel, TPU_V5E)
         from ..serving.simulator import (SimConfig, build_sim_cluster,
                                          build_sim_engine)
-        from ..serving.workload import (bursty_trace, poisson_requests,
-                                        session_requests,
+        from ..serving.workload import (bursty_trace, mixed_requests,
+                                        poisson_requests, session_requests,
                                         templated_requests)
 
+        hw = {"tpu-v5e": TPU_V5E, "rtx-4090": RTX_4090,
+              "a100-40g": A100_40G}[args.hw]
         target = configs.get_config(args.arch)
-        chunk = RooflineCostModel(TPU_V5E).resolve_chunk_tokens(
+        chunk = RooflineCostModel(hw).resolve_chunk_tokens(
             args.chunk_tokens, target)
         cfg = SimConfig(
             target=target,
             draft=configs.get_draft_config(args.arch),
-            hw=TPU_V5E, gamma_max=args.gamma_max, max_batch=args.max_batch,
+            hw=hw, gamma_max=args.gamma_max, max_batch=args.max_batch,
             chunk_tokens=chunk,
             prefix_caching=args.prefix_caching == "on",
             prefill_order=args.prefill_order,
@@ -153,6 +180,12 @@ def main():
             reqs = templated_requests(args.rate, args.requests,
                                       num_templates=args.num_templates,
                                       seed=args.seed + 1, slo=args.slo)
+        elif args.dataset == "mixed":
+            if args.bursty:
+                ap.error("--bursty is not supported with --dataset mixed")
+            reqs = mixed_requests(args.rate, args.requests,
+                                  qa_frac=args.qa_frac,
+                                  seed=args.seed + 1, slo=args.slo)
         elif args.bursty:
             trace = bursty_trace(seed=args.seed)
             reqs = trace.sample_requests(args.requests, dataset=args.dataset,
@@ -161,12 +194,29 @@ def main():
             reqs = poisson_requests(args.rate, args.requests,
                                     dataset=args.dataset, seed=args.seed + 1,
                                     slo=args.slo)
-        if args.replicas > 1 or args.autoscale or args.shed_factor > 0:
+        if args.qa_frac is not None and args.dataset != "mixed":
+            ap.error("--qa-frac only applies to --dataset mixed")
+        disaggregate = None
+        if args.disaggregate is not None:
+            try:
+                p, d = (int(x) for x in args.disaggregate.split(":"))
+            except ValueError:
+                ap.error("--disaggregate takes P:D (e.g. 2:2)")
+            if p < 1 or d < 1:
+                ap.error("--disaggregate needs at least one replica per pool")
+            if chunk <= 0:
+                ap.error("--disaggregate requires --chunk-tokens > 0 "
+                         "(the prefill pool runs chunked prefill)")
+            disaggregate = dict(prefill=p, decode=d,
+                                margin_s=args.handoff_margin)
+        if (args.replicas > 1 or args.autoscale or args.shed_factor > 0
+                or disaggregate is not None):
             autoscale = (dict(min_replicas=1, max_replicas=args.replicas)
                          if args.autoscale else None)
             cluster = build_sim_cluster(
                 cfg, args.replicas, args.policy, router=args.router,
-                shed_factor=args.shed_factor or None, autoscale=autoscale)
+                shed_factor=args.shed_factor or None, autoscale=autoscale,
+                disaggregate=disaggregate)
             metrics = cluster.run(reqs)
         else:
             engine = build_sim_engine(cfg, args.policy)

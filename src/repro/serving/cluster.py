@@ -50,7 +50,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
-from .controlplane import ControlPlane
+from .controlplane import ControlPlane, DecodePoolAutoscaler, HandoffPricer
 from .engine import ServingEngine
 from .request import (Metrics, Request, RequestStats, goodput_of, percentile,
                       slo_attainment_of)
@@ -58,6 +58,10 @@ from .router import Router
 
 # replica lifecycle states
 ACTIVE, DRAINING, RETIRED = "active", "draining", "retired"
+
+# replica roles (disaggregated mode; COLOCATED is the classic do-everything
+# replica of a non-disaggregated cluster)
+PREFILL, DECODE, COLOCATED = "prefill", "decode", "colocated"
 
 
 @dataclass
@@ -71,6 +75,11 @@ class ClusterMetrics:
     autoscale_events: List[dict] = field(default_factory=list)
     replica_states: List[str] = field(default_factory=list)
     replica_spans: List[tuple] = field(default_factory=list)  # (start, end)
+    replica_roles: List[str] = field(default_factory=list)
+    handoffs: List[dict] = field(default_factory=list)  # prefill->decode
+    handoffs_declined: int = 0        # pricer chose colocated fallback
+    handoff_transfer_s: float = 0.0   # total modelled interconnect time
+    handoff_fallbacks: int = 0        # adoptions that re-prefilled locally
 
     @property
     def total_tokens(self) -> int:
@@ -120,14 +129,27 @@ class ClusterMetrics:
         return slo_attainment_of(self.requests)
 
     @property
-    def slo_attainment_offered(self) -> float:
+    def offered_slo_count(self) -> int:
+        """Deadline-carrying requests in the offered load: finished ones
+        plus shed ones — the sample count behind
+        ``slo_attainment_offered`` (renderer gate)."""
+        return (sum(1 for r in self.requests if r.slo is not None)
+                + sum(1 for s in self.shed if s.get("slo") is not None))
+
+    @property
+    def slo_attainment_offered(self) -> Optional[float]:
         """Attainment over the OFFERED load: shed deadline-carrying
-        requests count as misses (the honest fleet-level number)."""
+        requests count as misses (the honest fleet-level number).
+
+        ``None`` when the offered load carries no deadline samples at all
+        (e.g. every request shed before any deadline-carrying one
+        finished) — n/a by contract, never a fake-perfect ratio
+        (tests/test_metrics_edges.py convention)."""
         with_slo = [r for r in self.requests if r.slo is not None]
         shed_slo = sum(1 for s in self.shed if s.get("slo") is not None)
         total = len(with_slo) + shed_slo
         if total == 0:
-            return 1.0
+            return None
         return sum(r.slo_met for r in with_slo) / total
 
     @property
@@ -181,14 +203,23 @@ class ClusterMetrics:
         counts = self.replica_counts()
         out = []
         for i, m in enumerate(self.per_replica):
+            # a replica that completed zero requests (retired mid-drain,
+            # or every request it saw was shed upstream) has NO latency
+            # samples: percentile() would report a fake-perfect 0.0 and
+            # slo_attainment a fake-perfect 1.0.  n/a by contract instead
+            # (tests/test_metrics_edges.py) — `finished` is the gate.
+            n = len(m.requests)
             row = {
                 "replica": i,
                 "state": (self.replica_states[i]
                           if i < len(self.replica_states) else ACTIVE),
+                "role": (self.replica_roles[i]
+                         if i < len(self.replica_roles) else COLOCATED),
                 "requests": counts[i],
+                "finished": n,
                 "tok_s": round(m.throughput, 2),
-                "p99_ttft_s": round(m.ttft_percentile(0.99), 4),
-                "slo_attainment": round(m.slo_attainment, 4),
+                "p99_ttft_s": round(m.ttft_percentile(0.99), 4) if n else None,
+                "slo_attainment": round(m.slo_attainment, 4) if n else None,
                 "offloads": m.offload_events,
             }
             if m.prefix:
@@ -223,8 +254,10 @@ class ClusterMetrics:
         }
         if self.shed or self.autoscale_events:
             out["shed_count"] = self.shed_count
-            out["slo_attainment_offered"] = round(
-                self.slo_attainment_offered, 4)
+            offered = self.slo_attainment_offered
+            out["offered_slo_count"] = self.offered_slo_count
+            out["slo_attainment_offered"] = (
+                round(offered, 4) if offered is not None else None)
         if self.autoscale_events:
             out["peak_replicas"] = self.peak_replicas
             out["replica_seconds"] = round(self.replica_seconds, 3)
@@ -235,6 +268,13 @@ class ClusterMetrics:
                               if e["kind"] == "drain"),
                 "retires": sum(1 for e in self.autoscale_events
                                if e["kind"] == "retire"),
+            }
+        if self.handoffs or self.handoffs_declined:
+            out["disagg"] = {
+                "handoffs": len(self.handoffs),
+                "declined": self.handoffs_declined,
+                "transfer_s": round(self.handoff_transfer_s, 4),
+                "adopt_fallbacks": self.handoff_fallbacks,
             }
         if any(m.prefix for m in self.per_replica):
             out["prefix_saved_tokens"] = sum(
@@ -249,7 +289,10 @@ class ServingCluster:
     def __init__(self, replicas: Sequence[ServingEngine], router: Router,
                  *, control: Optional[ControlPlane] = None,
                  replica_factory: Optional[
-                     Callable[[int], ServingEngine]] = None):
+                     Callable[[int], ServingEngine]] = None,
+                 roles: Optional[Sequence[str]] = None,
+                 pricer: Optional[HandoffPricer] = None,
+                 decode_autoscaler: Optional[DecodePoolAutoscaler] = None):
         if not replicas:
             raise ValueError("cluster needs at least one replica")
         self.replicas = list(replicas)
@@ -262,9 +305,34 @@ class ServingCluster:
             router.control = self.control
         self.replica_factory = replica_factory
         self.state: List[str] = [ACTIVE] * len(self.replicas)
+        # disaggregated mode: arrivals land on the PREFILL pool; once a
+        # request's prompt is fully materialised its KV blocks may migrate
+        # to a DECODE replica (priced per-handoff by `pricer`).  roles=None
+        # is the classic colocated cluster, unchanged.
+        self.disaggregated = roles is not None
+        if roles is not None:
+            roles = list(roles)
+            if len(roles) != len(self.replicas):
+                raise ValueError("roles must match replicas")
+            bad = set(roles) - {PREFILL, DECODE}
+            if bad:
+                raise ValueError(f"unknown roles {sorted(bad)}")
+            if PREFILL not in roles:
+                raise ValueError("disaggregated cluster needs >=1 prefill "
+                                 "replica")
+            self.roles: List[str] = roles
+        else:
+            self.roles = [COLOCATED] * len(self.replicas)
+        self.pricer = pricer
+        if self.disaggregated and self.pricer is None:
+            self.pricer = HandoffPricer(self.control)
+        self.decode_autoscaler = decode_autoscaler
         self.assignments: Dict[int, int] = {}
         self.shed: List[dict] = []
         self.autoscale_events: List[dict] = []
+        self.handoffs: List[dict] = []
+        self.handoff_transfer_s = 0.0
+        self._handoff_considered: set = set()
         self._starts = [e.clock for e in self.replicas]
         self._retired_at: Dict[int, float] = {}
         self._record_timeline = True
@@ -278,26 +346,46 @@ class ServingCluster:
     def num_active(self) -> int:
         return sum(1 for s in self.state if s == ACTIVE)
 
+    def _pool(self, role: str, *, state: Optional[str] = None) -> List[int]:
+        """Replica indices with ``role`` (optionally filtered by state)."""
+        return [i for i in range(len(self.replicas))
+                if self.roles[i] == role
+                and (state is None or self.state[i] == state)]
+
     def routable_replicas(self) -> List[ServingEngine]:
         """Replicas the router may dispatch to: active only — draining
         replicas finish their assigned work but accept nothing new.
+
+        Disaggregated mode scopes dispatch to the PREFILL pool (decode
+        replicas receive work only through the KV-handoff path), falling
+        back to the whole fleet if every prefill replica is gone.
 
         A fully drained fleet (the operator drained everything by hand)
         still has to land arrivals somewhere deterministic: fall back to
         the draining replicas, and past that to the whole fleet — a
         retired engine is just an idle engine wearing a control-plane
         label, and serving there beats crashing the router."""
-        out = [e for e, s in zip(self.replicas, self.state) if s == ACTIVE]
-        out = out or [e for e, s in zip(self.replicas, self.state)
-                      if s != RETIRED]
-        return out or list(self.replicas)
+        idxs = list(range(len(self.replicas)))
+        if self.disaggregated:
+            pre = self._pool(PREFILL)
+            cand = ([i for i in pre if self.state[i] == ACTIVE]
+                    or [i for i in pre if self.state[i] != RETIRED])
+            if cand:
+                return [self.replicas[i] for i in cand]
+            # no prefill replica left at all: serve colocated on whatever
+            # remains rather than dropping the arrival
+        out = [i for i in idxs if self.state[i] == ACTIVE]
+        out = out or [i for i in idxs if self.state[i] != RETIRED]
+        return [self.replicas[i] for i in (out or idxs)]
 
     # ------------------------------------------------------------------
     # elastic fleet surface
     # ------------------------------------------------------------------
-    def add_replica(self, now: float) -> int:
+    def add_replica(self, now: float, *, role: Optional[str] = None) -> int:
         """Bring a fresh replica online at virtual time ``now`` (its clock
-        starts there — no retroactive work) and open it for routing."""
+        starts there — no retroactive work) and open it for routing.  In
+        disaggregated mode ``role`` selects the pool it joins (default
+        prefill — the pool classic autoscaling serves)."""
         if self.replica_factory is None:
             raise RuntimeError("cluster has no replica_factory")
         rid = len(self.replicas)
@@ -307,9 +395,12 @@ class ServingCluster:
         eng.record_timeline = self._record_timeline
         self.replicas.append(eng)
         self.state.append(ACTIVE)
+        if role is None:
+            role = PREFILL if self.disaggregated else COLOCATED
+        self.roles.append(role)
         self._starts.append(eng.clock)
         self.autoscale_events.append(
-            {"kind": "add", "at": now, "replica": rid})
+            {"kind": "add", "at": now, "replica": rid, "role": role})
         return rid
 
     def drain_replica(self, idx: int, now: float) -> None:
@@ -319,12 +410,22 @@ class ServingCluster:
         if self.state[idx] != ACTIVE:
             return
         self.state[idx] = DRAINING
+        # stateful routers (sticky affinity homes) must forget this replica
+        # NOW: a stale home entry would keep steering its templates at a
+        # replica that accepts no new traffic
+        self.router.note_replica_dead(self.replicas[idx].replica_id)
         self.autoscale_events.append(
             {"kind": "drain", "at": now, "replica": idx})
         self._maybe_retire(idx, now)
 
     def _maybe_retire(self, idx: int, now: float) -> None:
         if self.state[idx] == DRAINING and not self.replicas[idx].has_work():
+            # the request queues are empty but the host KV tier's transfer
+            # queues may not be: flush them as part of the drain-to-retire
+            # transition, otherwise pending spills/restores are silently
+            # dropped and their pinned HostKVStore records leak forever
+            # (invariant I6 must hold across drain)
+            self.replicas[idx].flush_host_transfers()
             self.state[idx] = RETIRED
             self._retired_at[idx] = max(now, self.replicas[idx].clock)
             self.autoscale_events.append(
@@ -363,17 +464,25 @@ class ServingCluster:
             min_forecast = min(self.control.forecast_ttft(e, req, now)
                                for e in routable)
         if scaler is not None:
-            loads = [e.load for e, s in zip(self.replicas, self.state)
-                     if s == ACTIVE]
-            n_alive = sum(1 for s in self.state if s != RETIRED)
-            action = scaler.decide(now, self.num_active, loads,
+            # in disaggregated mode the classic TTFT-attainment autoscaler
+            # governs the PREFILL pool only (TTFT is a prefill-side
+            # property once decode is offloaded); the decode pool has its
+            # own controller below
+            if self.disaggregated:
+                scaled = self._pool(PREFILL)
+            else:
+                scaled = list(range(len(self.replicas)))
+            active = [i for i in scaled if self.state[i] == ACTIVE]
+            loads = [self.replicas[i].load for i in active]
+            n_alive = sum(1 for i in scaled if self.state[i] != RETIRED)
+            action = scaler.decide(now, len(active), loads,
                                    min_forecast, req.slo, n_alive=n_alive)
             if action == "up" and self.replica_factory is not None:
-                self.add_replica(now)
-            elif action == "down" and self.num_active > 1:
-                active = [(e.load, e.replica_id) for e, s
-                          in zip(self.replicas, self.state) if s == ACTIVE]
-                _, idx = min(active)
+                self.add_replica(
+                    now, role=PREFILL if self.disaggregated else None)
+            elif action == "down" and len(active) > 1:
+                idx = min(active,
+                          key=lambda i: (self.replicas[i].load, i))
                 self.drain_replica(idx, now)
             if action is not None:
                 # the routable set changed: a fresh replica is dispatchable
@@ -383,6 +492,20 @@ class ServingCluster:
                 # open for traffic it can no longer take)
                 min_forecast = min(self.control.forecast_ttft(e, req, now)
                                    for e in self.routable_replicas())
+        if self.decode_autoscaler is not None and self.disaggregated:
+            dec_active = self._pool(DECODE, state=ACTIVE)
+            snaps = [self.control.snapshot(self.replicas[i], now)
+                     for i in dec_active]
+            n_alive = sum(1 for i in self._pool(DECODE)
+                          if self.state[i] != RETIRED)
+            d_action = self.decode_autoscaler.decide(now, snaps,
+                                                     n_alive=n_alive)
+            if d_action == "up" and self.replica_factory is not None:
+                self.add_replica(now, role=DECODE)
+            elif d_action == "down" and len(dec_active) > 1:
+                idx = min(dec_active,
+                          key=lambda i: (self.replicas[i].load, i))
+                self.drain_replica(idx, now)
         if admission is not None and min_forecast is not None \
                 and admission.should_shed(req, min_forecast):
             self.shed.append({"req_id": req.req_id, "at": now,
@@ -390,6 +513,80 @@ class ServingCluster:
             self.control.note_shed(now)
             return None
         return self.submit(req, now=now)
+
+    # ------------------------------------------------------------------
+    # disaggregated prefill/decode handoff
+    # ------------------------------------------------------------------
+    def _consider_handoffs(self, src_idx: int) -> None:
+        """After a prefill replica's step: migrate each freshly completed
+        prompt to the decode pool iff the priced transfer wins.
+
+        A sequence is a candidate exactly once, at the step its prefill
+        completes and before it decodes a single token (the KV image is
+        whole-prompt, nothing speculative in flight).  Declined candidates
+        decode where they prefilled — the colocated fallback — and are
+        never reconsidered, so pricing is a one-shot decision made on the
+        same telemetry snapshot routing would see."""
+        src = self.replicas[src_idx]
+        now = src.clock
+        dsts = self._pool(DECODE, state=ACTIVE)
+        if not dsts:
+            return
+        extracted = 0
+        for seq in list(src.scheduler.running):
+            if (seq.prompt_remaining != 0 or seq.done
+                    or seq.generated != 0):
+                continue
+            rid = seq.req_id
+            if rid in self._handoff_considered:
+                continue
+            self._handoff_considered.add(rid)
+            # KV-headroom gate: a destination must be able to host the
+            # whole prompt ON TOP of the handoffs already in flight to it.
+            # On memory-tight profiles the decode pool saturates long
+            # before the prefill pool — migrating past its capacity would
+            # trade one replica's queue for another's preempt/recompute
+            # thrash, so a prompt no decode replica can host simply decodes
+            # where it prefilled (the colocated fallback, never worse).
+            plen = max(seq.request.prompt_len, 1)
+            hosts = [i for i in dsts if self.replicas[i].scheduler.bm
+                     .can_allocate(plen + sum(
+                         item[2].prompt_len
+                         for item in self.replicas[i]._handoffs))]
+            if not hosts:
+                if self.pricer is not None:
+                    self.pricer.declined += 1
+                continue
+            dst_i = min(hosts, key=lambda i: (
+                self.control.forecast_ttft(self.replicas[i], None, now),
+                self.replicas[i].load, i))
+            dst = self.replicas[dst_i]
+            if self.pricer is not None and not self.pricer.decide(
+                    src, dst, seq.request, now):
+                continue
+            transfer_s = (self.pricer.transfer_seconds(
+                src, seq.request.prompt_len) if self.pricer else 0.0)
+            payload = src.extract_for_handoff(seq)
+            dst.accept_handoff(seq.request, t_ready=now + transfer_s,
+                               payload=payload)
+            self.control.note_handoff(src, dst, rid)
+            self.assignments[rid] = dst.replica_id
+            self.handoff_transfer_s += transfer_s
+            self.handoffs.append(
+                {"req_id": rid, "at": now, "src": src.replica_id,
+                 "dst": dst.replica_id,
+                 "transfer_s": round(transfer_s, 6)})
+            extracted += 1
+        if (extracted and src.scheduler.num_waiting
+                and not src.scheduler.num_running):
+            # the handoff emptied the running set while requests sat in the
+            # waiting queue (admission had failed against blocks the
+            # migrated sequences held): an idle engine only retries
+            # admission on its next arrival, and with none pending it
+            # would deadlock — retry NOW against the freed pool.  If the
+            # head still cannot be admitted the step is a no-op and the
+            # replica is stuck exactly as a colocated one would be.
+            src.step()
 
     # ------------------------------------------------------------------
     def has_work(self) -> bool:
@@ -424,6 +621,8 @@ class ServingCluster:
                 break
             _, idx = min(evs)
             self.replicas[idx].step()
+            if self.disaggregated and self.roles[idx] == PREFILL:
+                self._consider_handoffs(idx)
             self.control.observe_step(self.replicas[idx])
             self._maybe_retire(idx, self.replicas[idx].clock)
             steps += 1
@@ -443,4 +642,11 @@ class ServingCluster:
                               shed=list(self.shed),
                               autoscale_events=list(self.autoscale_events),
                               replica_states=list(self.state),
-                              replica_spans=spans)
+                              replica_spans=spans,
+                              replica_roles=list(self.roles),
+                              handoffs=list(self.handoffs),
+                              handoffs_declined=(self.pricer.declined
+                                                 if self.pricer else 0),
+                              handoff_transfer_s=self.handoff_transfer_s,
+                              handoff_fallbacks=sum(
+                                  e.handoffs_refused for e in self.replicas))

@@ -316,6 +316,128 @@ class AutoscaleController:
         return None
 
 
+class DecodePoolAutoscaler:
+    """Elastic scaling for the decode pool of a disaggregated fleet.
+
+    The prefill pool scales on TTFT attainment (``AutoscaleController``:
+    deadlines are a prefill-side property once decode is offloaded); the
+    decode pool's failure modes are different — KV exhaustion (adoption
+    fallbacks, preemption churn) and TPOT collapse under oversized decode
+    batches — so it scales on those signals instead:
+
+    Scale **up** when any active decode replica's allocatable-KV headroom
+    falls under ``kv_pressure_frac``, when the pool's worst EWMA TPOT
+    exceeds ``tpot_slo_s`` (if configured), or when any replica's decode
+    batch exceeds ``decode_high`` (if configured).  Scale **down** when the
+    pool is calm (every headroom above ``calm_kv_frac``, no TPOT/batch
+    pressure) and the pool's total decode work would comfortably fit on one
+    fewer replica.  Actions are separated by ``cooldown_s``."""
+
+    def __init__(self, *, min_replicas: int = 1, max_replicas: int = 4,
+                 kv_pressure_frac: float = 0.15, calm_kv_frac: float = 0.4,
+                 tpot_slo_s: Optional[float] = None,
+                 decode_high: Optional[int] = None,
+                 drain_decode_per_replica: int = 8,
+                 cooldown_s: float = 2.0):
+        if min_replicas < 1 or max_replicas < min_replicas:
+            raise ValueError("need 1 <= min_replicas <= max_replicas")
+        if calm_kv_frac < kv_pressure_frac:
+            raise ValueError("calm_kv_frac must be >= kv_pressure_frac")
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.kv_pressure_frac = kv_pressure_frac
+        self.calm_kv_frac = calm_kv_frac
+        self.tpot_slo_s = tpot_slo_s
+        self.decode_high = decode_high
+        self.drain_decode_per_replica = drain_decode_per_replica
+        self.cooldown_s = cooldown_s
+        self._last_action = float("-inf")
+
+    def decide(self, now: float, snaps: List["ReplicaSnapshot"],
+               n_alive: Optional[int] = None) -> Optional[str]:
+        """One scaling decision for the decode pool: 'up', 'down' or None.
+        ``snaps`` are the ACTIVE decode replicas' snapshots; ``n_alive``
+        counts active + draining decode replicas (capacity cap, same
+        convention as ``AutoscaleController.decide``)."""
+        if not snaps:
+            return None
+        n_active = len(snaps)
+        if n_alive is None:
+            n_alive = n_active
+        if now - self._last_action < self.cooldown_s:
+            return None
+        kv_min = min(s.kv_headroom_frac for s in snaps)
+        pressure = kv_min < self.kv_pressure_frac
+        if self.tpot_slo_s is not None:
+            pressure = pressure or max(s.ewma_tpot for s in snaps) \
+                > self.tpot_slo_s
+        if self.decode_high is not None:
+            pressure = pressure or max(s.decode_count for s in snaps) \
+                > self.decode_high
+        if pressure and n_alive < self.max_replicas:
+            self._last_action = now
+            return "up"
+        if (n_active > self.min_replicas and not pressure
+                and kv_min >= self.calm_kv_frac
+                and sum(s.decode_count for s in snaps)
+                <= self.drain_decode_per_replica * (n_active - 1)):
+            self._last_action = now
+            return "down"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# handoff pricing (disaggregated prefill/decode)
+# ---------------------------------------------------------------------------
+
+
+class HandoffPricer:
+    """Prices one prefill→decode KV migration.
+
+    The handoff wins exactly when the predicted queue delay the request
+    escapes by leaving the prefill replica exceeds the modelled time to
+    move its KV blocks across the interconnect:
+
+        saved  = forecast_ttft(src) - forecast_ttft(dst)
+        cost   = kv_transfer_seconds(prompt_len) + margin_s
+        accept ⇔ saved > cost
+
+    Both forecasts come from the same ``ControlPlane`` book the routers
+    and admission use (roofline floor, learned backlog slope, residual
+    bias) — so pricing sharpens as telemetry accumulates.  When the
+    transfer loses, the request simply decodes where it prefilled: the
+    colocated fallback, never worse by construction.  A backend without a
+    transfer model (``kv_transfer_seconds``) prices the move at zero —
+    accept whenever any delay is saved."""
+
+    def __init__(self, control: "ControlPlane", *, margin_s: float = 0.0):
+        self.control = control
+        self.margin_s = margin_s
+        self.accepted = 0
+        self.declined = 0
+
+    def transfer_seconds(self, src, n_tokens: int) -> float:
+        fn = getattr(src.backend, "kv_transfer_seconds", None)
+        return fn(n_tokens) if fn is not None else 0.0
+
+    def quote(self, src, dst, req: Request,
+              now: float) -> Tuple[float, float]:
+        """(predicted queue-delay saved, modelled transfer cost)."""
+        saved = (self.control.forecast_ttft(src, None, now)
+                 - self.control.forecast_ttft(dst, None, now))
+        cost = self.transfer_seconds(src, req.prompt_len) + self.margin_s
+        return saved, cost
+
+    def decide(self, src, dst, req: Request, now: float) -> bool:
+        saved, cost = self.quote(src, dst, req, now)
+        win = saved > cost
+        if win:
+            self.accepted += 1
+        else:
+            self.declined += 1
+        return win
+
+
 # ---------------------------------------------------------------------------
 # the control plane proper
 # ---------------------------------------------------------------------------
@@ -422,3 +544,16 @@ class ControlPlane:
     def note_shed(self, now: float) -> None:
         if self.autoscaler is not None:
             self.autoscaler.record_shed(now)
+
+    def note_handoff(self, src_engine, dst_engine, req_id: int) -> None:
+        """A request dispatched to ``src_engine`` migrated to
+        ``dst_engine`` mid-flight.  Drop its dispatch-forecast record: the
+        source will never see it finish (no learning there), and folding
+        its end-to-end TTFT — which includes the source's queue delay —
+        into the DESTINATION's residual/slope estimators would inflate
+        every decode-pool forecast and talk the pricer out of future
+        handoffs (the forecast gap *is* the price signal).  Migrated
+        requests still feed the destination's service-level EWMAs via
+        ``consume_finished``."""
+        self.tel(src_engine.replica_id)._forecasts.pop(req_id, None)
+        self.tel(dst_engine.replica_id)  # ensure the book exists

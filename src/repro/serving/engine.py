@@ -44,6 +44,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Protocol, Sequence as Seq
 
 from ..core.bandits import Policy
+from .kv_cache import OutOfBlocks
 from .memory_manager import ElasticMemoryManager
 from .request import Metrics, Request, Sequence
 from .scheduler import ContinuousBatchingScheduler
@@ -100,6 +101,11 @@ class ServingEngine:
         self.metrics = Metrics()
         self.record_timeline = True
         self._pending: List = []   # heap of (arrival, req_id, Request)
+        # incoming prefilled requests migrating from a prefill-pool replica
+        # (disaggregated mode): heap of (t_ready, req_id, Request, payload)
+        self._handoffs: List = []
+        self.handoffs_in = 0       # adopted with KV intact
+        self.handoffs_refused = 0  # adoption fell back to local re-prefill
 
     # ------------------------------------------------------------------
     # steppable surface
@@ -117,8 +123,8 @@ class ServingEngine:
     def load(self) -> int:
         """Total requests owned by this replica that are not yet finished
         admission: pending + waiting + running (router load signal)."""
-        return (len(self._pending) + self.scheduler.num_waiting
-                + self.scheduler.num_running)
+        return (len(self._pending) + len(self._handoffs)
+                + self.scheduler.num_waiting + self.scheduler.num_running)
 
     @property
     def decode_count(self) -> int:
@@ -138,8 +144,19 @@ class ServingEngine:
                 + sum(item[2].prompt_len for item in self._pending))
 
     def has_work(self) -> bool:
-        return bool(self._pending or self.scheduler.num_waiting
+        return bool(self._pending or self._handoffs
+                    or self.scheduler.num_waiting
                     or self.scheduler.num_running)
+
+    def _next_income(self) -> Optional[float]:
+        """Earliest instant at which queued income (a submitted arrival or
+        an in-flight KV handoff) becomes actionable; ``None`` if neither."""
+        cands = []
+        if self._pending:
+            cands.append(self._pending[0][0])
+        if self._handoffs:
+            cands.append(self._handoffs[0][0])
+        return min(cands) if cands else None
 
     def peek_next_event(self) -> Optional[float]:
         """Virtual time of this engine's next actionable event.
@@ -149,15 +166,10 @@ class ServingEngine:
         run-to-completion loop historically terminated there too)."""
         if self.scheduler.num_running:
             return self.clock
-        if self.scheduler.num_waiting:
-            # admission is only retried when the clock moves or arrivals
-            # land; with nothing running the next chance is the next arrival
-            if self._pending:
-                return max(self.clock, self._pending[0][0])
-            return None
-        if self._pending:
-            return max(self.clock, self._pending[0][0])
-        return None
+        # with nothing running, admission is only retried when the clock
+        # moves — the next chance is the next arrival or handoff landing
+        t = self._next_income()
+        return max(self.clock, t) if t is not None else None
 
     # ------------------------------------------------------------------
     # pieces shared by the monolithic and hybrid step paths
@@ -165,6 +177,70 @@ class ServingEngine:
     def _drain_arrivals(self) -> None:
         while self._pending and self._pending[0][0] <= self.clock:
             self.scheduler.add_request(heapq.heappop(self._pending)[2])
+        while self._handoffs and self._handoffs[0][0] <= self.clock:
+            _, _, req, payload = heapq.heappop(self._handoffs)
+            self._adopt_prefilled(req, payload)
+
+    # ------------------------------------------------------------------
+    # disaggregated prefill/decode handoff surface
+    # ------------------------------------------------------------------
+    def accept_handoff(self, req: Request, t_ready: float,
+                       payload: Optional[dict] = None) -> None:
+        """Receive a fully-prefilled request migrating from a prefill-pool
+        replica.  ``t_ready`` is the virtual instant the KV transfer
+        completes (source clock + modelled interconnect time); the request
+        joins this replica's decode batch once the clock reaches it."""
+        heapq.heappush(self._handoffs, (t_ready, req.req_id, req,
+                                        payload or {}))
+
+    def _adopt_prefilled(self, req: Request, payload: dict) -> None:
+        """Materialise a handed-off request as a decode-ready sequence.
+
+        The migrated KV blocks land in this replica's pool (block-table
+        allocation covering the whole prompt, then the backend's
+        ``import_handoff`` writes the payload on the physical tier).  If
+        the pool cannot host the prompt right now, fall back to local
+        re-prefill through the ordinary waiting queue — strictly the
+        colocated behaviour, so a failed adoption is never worse than not
+        having handed off (the request always completes)."""
+        sched = self.scheduler
+        seq = Sequence(request=req)
+        key = sched._seq_key(seq)
+        try:
+            sched.bm.allocate(key, max(req.prompt_len, 1))
+        except OutOfBlocks:
+            self.handoffs_refused += 1
+            sched.add_request(req)
+            return
+        seq.prefilled = req.prompt_len
+        seq.prefill_done_at = self.clock
+        # draft-pool coverage travels with the KV: tokens the source's
+        # draft never saw still need catch-up before speculating here
+        seq.delta = int(payload.get("delta", 0))
+        imp = getattr(self.backend, "import_handoff", None)
+        if imp is not None:
+            imp(seq, payload)
+        sched.running.append(seq)
+        self.handoffs_in += 1
+
+    def extract_for_handoff(self, seq: Sequence) -> dict:
+        """Detach a fully-prefilled, not-yet-decoded sequence for migration
+        to a decode replica.  Returns the handoff payload (draft-coverage
+        debt, plus the physical KV bytes on the real tier); the sequence's
+        device blocks are released here — full prompt blocks stay in this
+        replica's prefix cache, so repeat templates keep their affinity
+        benefit even though decode happens elsewhere."""
+        sched = self.scheduler
+        payload: dict = {"delta": seq.delta,
+                         "prompt_len": seq.request.prompt_len}
+        export = getattr(self.backend, "export_handoff", None)
+        if export is not None:
+            payload["kv"] = export(seq)
+        sched.bm.release(sched._seq_key(seq))
+        if seq in sched.running:
+            sched.running.remove(seq)
+        self.backend.release(seq)
+        return payload
 
     def _commit_decode(self, seqs: Seq[Sequence], n_committed: Seq[int],
                        gamma: int) -> int:
@@ -237,6 +313,29 @@ class ServingEngine:
             hs.stats["restore_s"] += lat
         return lat
 
+    def flush_host_transfers(self) -> float:
+        """Complete every queued host-tier KV transfer *now* and charge the
+        modelled latency to the engine clock.
+
+        The step loop only drains these queues while the engine executes
+        steps; a drained replica with empty request queues never steps
+        again, so transfers queued by its last step's evictions (phase-5
+        commit evictions land AFTER the in-step drain point) would be
+        stranded — spilled payloads lost and restore-pinned
+        ``HostKVStore`` records leaked.  The cluster calls this at the
+        drain-to-retire transition.  Real backends move the bytes
+        themselves (``apply_host_transfers``)."""
+        bm = self.scheduler.bm
+        if getattr(bm, "host_store", None) is None:
+            return 0.0
+        apply = getattr(self.backend, "apply_host_transfers", None)
+        if apply is not None:
+            apply()
+            return 0.0
+        lat = self._drain_host_transfers()
+        self.clock += lat
+        return lat
+
     def _record_timeline(self, B: int, gamma: int, tokens: int,
                          latency: float, draft_ok: bool,
                          prefill_tokens: int = 0) -> None:
@@ -275,9 +374,10 @@ class ServingEngine:
                     s.delta = s.request.prompt_len  # draft never saw it
 
         if not self.scheduler.running:
-            if self._pending:
-                # idle: fast-forward to the next arrival
-                self.clock = max(self.clock, self._pending[0][0])
+            t_next = self._next_income()
+            if t_next is not None:
+                # idle: fast-forward to the next arrival / handoff landing
+                self.clock = max(self.clock, t_next)
                 return StepReport("idle", t_start, self.clock,
                                   admitted=len(admitted))
             return None
@@ -359,9 +459,10 @@ class ServingEngine:
 
         batch = self.scheduler.schedule_chunks()
         if batch.empty:
-            if self._pending:
-                # idle: fast-forward to the next arrival
-                self.clock = max(self.clock, self._pending[0][0])
+            t_next = self._next_income()
+            if t_next is not None:
+                # idle: fast-forward to the next arrival / handoff landing
+                self.clock = max(self.clock, t_next)
                 return StepReport("idle", t_start, self.clock)
             return None
 

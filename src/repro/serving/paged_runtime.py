@@ -63,6 +63,12 @@ class PagedKVRuntime:
         L, _, bs, kh, hd = k.shape
         return 2 * L * bs * kh * hd * k.dtype.itemsize  # k + v
 
+    def transfer_bytes(self, n_blocks: int) -> int:
+        """Wire bytes for migrating ``n_blocks`` of this pool between
+        replicas (the disaggregated handoff path — what the sim tier prices
+        at interconnect bandwidth)."""
+        return n_blocks * self.bytes_per_block
+
     # ------------------------------------------------------------------
     # copy-on-write + elastic physical pool (§6.3/6.4 on the real tier)
     # ------------------------------------------------------------------

@@ -63,6 +63,14 @@ class Router:
               now: float = 0.0) -> int:
         raise NotImplementedError
 
+    def note_replica_dead(self, replica_id: int) -> None:
+        """Liveness notification from the cluster: ``replica_id`` has been
+        drained or retired and must never be *chosen* again.  Stateless
+        routers need no bookkeeping (the cluster already excludes dead
+        replicas from the routable set); stateful routers that remember
+        replica ids across dispatches (sticky affinity homes) must purge
+        them here — a stale id silently re-routes traffic to a corpse."""
+
 
 class RoundRobinRouter(Router):
     name = "round-robin"
@@ -146,7 +154,23 @@ class PrefixAffinityRouter(Router):
         self.spill_slack = spill_slack
         self.default_slo = default_slo
         self.home: Dict[int, int] = {}       # template hash -> replica_id
+        self.dead: set = set()               # drained/retired replica ids
         self.spills = 0
+        self.rehomes = 0                     # templates moved off a dead home
+
+    def note_replica_dead(self, replica_id: int) -> None:
+        """Purge the sticky home map: every template homed on the drained
+        replica re-homes (stickily) at its next dispatch.  Without this the
+        map keeps pointing at the corpse — any caller that hands ``route``
+        a replica set still containing it (an external dispatcher, or the
+        cluster's fully-drained fallback tier) gets traffic routed to a
+        DRAINING/RETIRED replica, and hit-rate craters because followers
+        chase a cache that will never be served again."""
+        self.dead.add(replica_id)
+        stale = [k for k, rid in self.home.items() if rid == replica_id]
+        for k in stale:
+            del self.home[k]
+        self.rehomes += len(stale)
 
     # -- pieces ---------------------------------------------------------
     def _best(self, req: Request, replicas: Sequence[ServingEngine],
@@ -171,10 +195,18 @@ class PrefixAffinityRouter(Router):
     # -- routing --------------------------------------------------------
     def route(self, req: Request, replicas: Sequence[ServingEngine],
               now: float = 0.0) -> int:
+        # liveness first: a replica the cluster declared dead may only be
+        # used when the caller's whole set is dead (nothing else to serve
+        # on) — never stuck-to, never elected as a home
+        live = [i for i, e in enumerate(replicas)
+                if e.replica_id not in self.dead]
+        if not live:
+            live = list(range(len(replicas)))
         key = template_key(req.prompt_tokens, self.window_tokens)
         if key is None:
-            return self._best(req, replicas, now)
-        by_id = {e.replica_id: i for i, e in enumerate(replicas)}
+            best = self._best(req, [replicas[i] for i in live], now)
+            return live[best]
+        by_id = {replicas[i].replica_id: i for i in live}
         home = self.home.get(key)
         if home in by_id:
             pos = by_id[home]
@@ -182,14 +214,16 @@ class PrefixAffinityRouter(Router):
                 return pos
             # spillover: overflow this dispatch, keep the home mapping
             self.spills += 1
-            if len(replicas) == 1:
+            if len(live) == 1:
                 return pos
-            others = [i for i in range(len(replicas)) if i != pos]
+            others = [i for i in live if i != pos]
             best = self._best(req, [replicas[i] for i in others], now)
             return others[best]
         # first sight of this template (or its home drained/retired):
-        # elect a new home by best current headroom
-        pos = self._best(req, replicas, now)
+        # elect a new LIVE home by best current headroom — the new
+        # mapping is sticky exactly like the first one was
+        best = self._best(req, [replicas[i] for i in live], now)
+        pos = live[best]
         self.home[key] = replicas[pos].replica_id
         return pos
 

@@ -16,9 +16,9 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.bandits import Policy, make_policy
 from ..core.cswitch import CSwitchTable
-from .cluster import ServingCluster
+from .cluster import DECODE, PREFILL, ServingCluster
 from .controlplane import (AdmissionController, AutoscaleController,
-                           ControlPlane)
+                           ControlPlane, DecodePoolAutoscaler, HandoffPricer)
 from .costmodel import HardwareProfile, RooflineCostModel, TPU_V5E, kv_bytes_per_token
 from .engine import ServingEngine, StepOutcome
 from .kv_cache import BlockManager
@@ -50,6 +50,19 @@ class SimulatedBackend:
         per_tok = (kv_bytes_per_token(self.target)
                    + kv_bytes_per_token(self.draft))
         return n_restore * self.block_size * per_tok / self.cm.hw.host_link_bw
+
+    def kv_transfer_seconds(self, n_tokens: int) -> float:
+        """Modelled prefill→decode KV migration time for one handoff
+        (disaggregated fleets): both pools' KV bytes for the prompt, moved
+        over the inter-replica interconnect — ICI where the profile has
+        one, else the PCIe-analogue host link (the PR 6 spill path's
+        bandwidth class) — plus one fixed step overhead for the batched
+        block-descriptor exchange.  This is what the ``HandoffPricer``
+        charges against the queue-delay forecast saved."""
+        per_tok = (kv_bytes_per_token(self.target)
+                   + kv_bytes_per_token(self.draft))
+        bw = self.cm.hw.ici_bw or self.cm.hw.host_link_bw
+        return n_tokens * per_tok / bw + self.cm.hw.step_overhead
 
     # ------------------------------------------------------------------
     def _ctx(self, seqs: List[Sequence]) -> int:
@@ -194,7 +207,8 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                       router: str = "jsq",
                       router_kwargs: Optional[dict] = None,
                       shed_factor: Optional[float] = None,
-                      autoscale: Optional[dict] = None) -> ServingCluster:
+                      autoscale: Optional[dict] = None,
+                      disaggregate: Optional[dict] = None) -> ServingCluster:
     """N independent simulated replicas behind one router + control plane.
 
     Every replica gets its OWN scheduler, planner, elastic memory manager
@@ -208,7 +222,14 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
     replica's predicted TTFT exceeds ``slo * shed_factor``); ``autoscale``
     is a kwargs dict for :class:`AutoscaleController` (e.g.
     ``dict(min_replicas=1, max_replicas=4)``) enabling elastic scaling —
-    the cluster then STARTS at ``min_replicas`` and grows on demand."""
+    the cluster then STARTS at ``min_replicas`` and grows on demand.
+
+    ``disaggregate`` splits the fleet into prefill and decode pools:
+    ``dict(prefill=2, decode=2)`` (overrides ``n_replicas``), optionally
+    ``margin_s`` (pricer hysteresis) and ``decode_autoscale`` (kwargs for
+    :class:`DecodePoolAutoscaler`).  Arrivals land on the prefill pool
+    (which must run chunked prefill) and migrate to a decode replica
+    after prefill whenever the priced KV handoff beats staying put."""
 
     def factory(i: int) -> ServingEngine:
         return build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
@@ -220,8 +241,30 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
     if autoscale is not None:
         autoscaler = AutoscaleController(**autoscale)
         n_replicas = autoscaler.min_replicas
+    roles = None
+    pricer = None
+    decode_autoscaler = None
+    if disaggregate is not None:
+        if cfg.chunk_tokens <= 0:
+            raise ValueError("disaggregation requires chunked prefill "
+                             "(cfg.chunk_tokens > 0)")
+        n_prefill = int(disaggregate.get("prefill", max(n_replicas // 2, 1)))
+        n_decode = int(disaggregate.get("decode",
+                                        max(n_replicas - n_prefill, 1)))
+        if autoscaler is not None:
+            n_prefill = autoscaler.min_replicas
+        roles = [PREFILL] * n_prefill + [DECODE] * n_decode
+        n_replicas = len(roles)
+        da = disaggregate.get("decode_autoscale")
+        if da is not None:
+            decode_autoscaler = DecodePoolAutoscaler(**da)
     engines = [factory(i) for i in range(n_replicas)]
     control = ControlPlane(admission=admission, autoscaler=autoscaler)
+    if disaggregate is not None:
+        pricer = HandoffPricer(control,
+                               margin_s=disaggregate.get("margin_s", 0.0))
     return ServingCluster(engines, make_router(router,
                                                **(router_kwargs or {})),
-                          control=control, replica_factory=factory)
+                          control=control, replica_factory=factory,
+                          roles=roles, pricer=pricer,
+                          decode_autoscaler=decode_autoscaler)

@@ -49,6 +49,23 @@ DATASETS = {
     "sessions": dict(p_mu=4.0, p_sigma=0.6, o_mu=4.0, o_sigma=0.5,
                      a_a=6.0, a_b=3.0, slo_ttft=1.0, context_len=768,
                      turns=6, think_s=8.0),
+    # bimodal mix of long-prompt/short-decode (document QA: prefill-bound)
+    # and short-prompt/long-decode (generation: decode-bound) traffic — the
+    # disaggregation workload.  Colocated replicas interleave both regimes
+    # on one chunk budget: resident long decodes eat the budget's decode
+    # slots and the KV pool, so long prompts queue behind them and p99 TTFT
+    # collapses.  A split fleet prefills on replicas that shed their decode
+    # work and decodes on replicas that never see a prompt.  qa_frac is the
+    # long-prompt share; the qa_*/gen_* pairs parameterise the two modes.
+    # qa_frac=0.25: one document-QA prompt per three long generations —
+    # enough long decodes to clog a colocated fleet's batch slots, enough
+    # prompts for the disaggregated prefill pool to matter (the regime the
+    # --only disagg grid and launch/serve.py examples are tuned to)
+    "mixed": dict(p_mu=5.0, p_sigma=1.0, o_mu=4.5, o_sigma=0.9,
+                  a_a=5.0, a_b=3.0, slo_ttft=1.0, qa_frac=0.25,
+                  qa_p_mu=7.0, qa_p_sigma=0.5, qa_o_mu=3.2, qa_o_sigma=0.5,
+                  gen_p_mu=3.8, gen_p_sigma=0.5, gen_o_mu=6.1,
+                  gen_o_sigma=0.4),
 }
 
 
@@ -206,6 +223,38 @@ def templated_requests(rate_qps: float, n: int, *, dataset: str = "templated",
                            int(outputs[i]), float(alphas[i]),
                            prompt_tokens=toks, slo=deadline))
     return out
+
+
+def mixed_requests(rate_qps: float, n: int, *, dataset: str = "mixed",
+                   qa_frac: "float | None" = None, seed: int = 0,
+                   max_prompt: int = 2048, max_output: int = 1024,
+                   slo: "float | None" = None) -> List[Request]:
+    """Poisson arrivals from a bimodal long-prompt / long-decode mix.
+
+    Each request is independently a document-QA request (probability
+    ``qa_frac``: long prompt, short answer — prefill-bound) or a generation
+    request (short prompt, long completion — decode-bound).  The
+    disaggregation workload: on a colocated fleet the resident long decodes
+    consume the chunked-prefill token budget and KV pool on every replica,
+    queueing the long prompts behind them; a disaggregated fleet prefills
+    where no decode lives and decodes where no prompt lands."""
+    rng = np.random.default_rng(seed)
+    d = DATASETS[dataset]
+    deadline = dataset_slo(dataset, slo)
+    if qa_frac is None:
+        qa_frac = d.get("qa_frac", 0.5)
+    gaps = rng.exponential(1.0 / rate_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    is_qa = rng.uniform(size=n) < qa_frac
+    qa_p = _lengths(rng, d["qa_p_mu"], d["qa_p_sigma"], n, 4, max_prompt)
+    qa_o = _lengths(rng, d["qa_o_mu"], d["qa_o_sigma"], n, 4, max_output)
+    gen_p = _lengths(rng, d["gen_p_mu"], d["gen_p_sigma"], n, 4, max_prompt)
+    gen_o = _lengths(rng, d["gen_o_mu"], d["gen_o_sigma"], n, 4, max_output)
+    alphas = rng.beta(d["a_a"], d["a_b"], size=n)
+    return [Request(i, float(arrivals[i]),
+                    int(qa_p[i]) if is_qa[i] else int(gen_p[i]),
+                    int(qa_o[i]) if is_qa[i] else int(gen_o[i]),
+                    float(alphas[i]), slo=deadline) for i in range(n)]
 
 
 def session_requests(n_sessions: int, *, turns: "int | None" = None,

@@ -9,10 +9,12 @@ import sys
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def _run(*args):
+def _run(*args, env_extra=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
         env.get("PYTHONPATH", "")
+    if env_extra:
+        env.update(env_extra)
     return subprocess.run([sys.executable, "-m", *args], cwd=ROOT, env=env,
                           capture_output=True, text=True, timeout=600)
 
@@ -39,12 +41,15 @@ def test_prefill_grid_end_to_end():
     assert p99("prefill.high.chunk384") < p99("prefill.high.monolithic")
 
 
-def test_prefix_grid_end_to_end():
+def test_prefix_grid_end_to_end(tmp_path):
     """`--only prefix` runs the {templated,disjoint} x {cache,nocache} grid,
-    persists BENCH_prefix.json, and the headline templated.high cell shows
-    prefix caching strictly reducing p99 TTFT and allocated blocks with
-    byte-identical committed token streams — the acceptance criterion."""
-    res = _run("benchmarks.run", "--only", "prefix", "--fast")
+    persists BENCH_prefix.json (to $BENCH_OUT_DIR — smoke runs must not
+    clobber the committed artifact), and the headline templated.high cell
+    shows prefix caching strictly reducing p99 TTFT and allocated blocks
+    with byte-identical committed token streams — the acceptance
+    criterion."""
+    res = _run("benchmarks.run", "--only", "prefix", "--fast",
+               env_extra={"BENCH_OUT_DIR": str(tmp_path)})
     assert res.returncode == 0, res.stderr[-2000:]
     rows = [l for l in res.stdout.splitlines() if l.startswith("prefix.")]
     names = {r.split(",")[0] for r in rows}
@@ -53,7 +58,7 @@ def test_prefix_grid_end_to_end():
                      for rate in ("low", "high")
                      for mode in ("cache", "nocache")}
 
-    data = json.load(open(os.path.join(ROOT, "BENCH_prefix.json")))
+    data = json.load(open(tmp_path / "BENCH_prefix.json"))
     grid = data["grid"]
     for rate in ("low", "high"):
         on = grid[f"templated.{rate}.cache"]
@@ -73,14 +78,15 @@ def test_prefix_grid_end_to_end():
         assert on["prefix_hit_rate"] == 0.0
 
 
-def test_control_grid_end_to_end():
+def test_control_grid_end_to_end(tmp_path):
     """`--only control` runs the control-plane grid, persists
     BENCH_control.json, and the acceptance criteria hold: affinity routing
     strictly beats kv on aggregate prefix hit-rate and p99 TTFT with
     identical per-request committed token counts (templated arm), and the elastic fleet
     strictly beats the static fleet on SLO attainment of admitted traffic
     at equal peak replica count (bursty arm)."""
-    res = _run("benchmarks.run", "--only", "control", "--fast")
+    res = _run("benchmarks.run", "--only", "control", "--fast",
+               env_extra={"BENCH_OUT_DIR": str(tmp_path)})
     assert res.returncode == 0, res.stderr[-2000:]
     rows = [l for l in res.stdout.splitlines() if l.startswith("control.")]
     names = {r.split(",")[0] for r in rows}
@@ -89,7 +95,7 @@ def test_control_grid_end_to_end():
     assert {f"control.bursty.{f}.{r}" for f in ("static", "autoscale")
             for r in ("kv", "slo")} <= names
 
-    data = json.load(open(os.path.join(ROOT, "BENCH_control.json")))
+    data = json.load(open(tmp_path / "BENCH_control.json"))
     grid = data["grid"]
     # templated arm: cache specialisation under sticky routing
     aff = grid["templated.static.affinity"]
@@ -109,19 +115,20 @@ def test_control_grid_end_to_end():
         assert el["autoscale_adds"] >= 1
 
 
-def test_sessions_grid_end_to_end():
+def test_sessions_grid_end_to_end(tmp_path):
     """`--only sessions` runs the host-offload session grid, persists
     BENCH_sessions.json, and the acceptance criteria hold: with offload on
     at a fixed device pool, warm-turn p50/p99 TTFT strictly below cold-turn
     TTFT, cross-turn prefix hit-rate > 0.8, host restores actually happen,
     and committed token streams are byte-identical vs offload-off."""
-    res = _run("benchmarks.run", "--only", "sessions", "--fast")
+    res = _run("benchmarks.run", "--only", "sessions", "--fast",
+               env_extra={"BENCH_OUT_DIR": str(tmp_path)})
     assert res.returncode == 0, res.stderr[-2000:]
     rows = [l for l in res.stdout.splitlines() if l.startswith("sessions.")]
     assert {r.split(",")[0] for r in rows} == {"sessions.none",
                                               "sessions.offload"}
 
-    data = json.load(open(os.path.join(ROOT, "BENCH_sessions.json")))
+    data = json.load(open(tmp_path / "BENCH_sessions.json"))
     on, off = data["grid"]["offload"], data["grid"]["none"]
     # identical committed token streams, every request finished, same split
     assert on["tokens_sha"] == off["tokens_sha"]
@@ -139,23 +146,59 @@ def test_sessions_grid_end_to_end():
     assert off["host_restores"] == off["host_spills"] == 0
 
 
-def test_backend_grid_end_to_end():
+def test_backend_grid_end_to_end(tmp_path):
     """`--only backend` runs REAL dense and paged backends, prints the CSV
     grid and persists BENCH_backend.json with the capacity comparison."""
-    res = _run("benchmarks.run", "--only", "backend", "--fast")
+    res = _run("benchmarks.run", "--only", "backend", "--fast",
+               env_extra={"BENCH_OUT_DIR": str(tmp_path)})
     assert res.returncode == 0, res.stderr[-2000:]
     rows = [l for l in res.stdout.splitlines() if l.startswith("backend.")]
     names = {r.split(",")[0] for r in rows}
     assert names == {f"backend.{m}.{op}" for m in ("dense", "paged")
                      for op in ("prefill", "decode", "verify")} | \
         {"backend.capacity"}
-    data = json.load(open(os.path.join(ROOT, "BENCH_backend.json")))
+    data = json.load(open(tmp_path / "BENCH_backend.json"))
     assert set(data["grid"]) == {"dense", "paged"}
     for row in data["grid"].values():
         assert all(v > 0 for v in row.values())
     # the paged pool admits by actual context, not per-slot max_seq
     cap = data["capacity"]
     assert cap["paged_max_batch"] > cap["dense_max_batch"]
+
+
+def test_disagg_grid_end_to_end(tmp_path):
+    """`--only disagg` runs the colocated-vs-disaggregated grid, persists
+    BENCH_disagg.json, and the acceptance criteria hold: at the high-rate
+    cell the 2+2 disaggregated split strictly beats 4 colocated replicas on
+    p99 TTFT and goodput at equal replica-seconds budget, committed token
+    streams are byte-identical in both regimes, and the priced-out cell
+    (prohibitive margin at low rate) declines its handoffs — the colocated
+    fallback, never worse by construction."""
+    res = _run("benchmarks.run", "--only", "disagg", "--fast",
+               env_extra={"BENCH_OUT_DIR": str(tmp_path)})
+    assert res.returncode == 0, res.stderr[-2000:]
+    rows = [l for l in res.stdout.splitlines() if l.startswith("disagg.")]
+    names = {r.split(",")[0] for r in rows}
+    assert names == {"disagg.colocated.high", "disagg.disagg.high",
+                     "disagg.colocated.low", "disagg.disagg.pricedout",
+                     "disagg.acceptance"}
+
+    data = json.load(open(tmp_path / "BENCH_disagg.json"))
+    assert all(data["acceptance"].values()), data["acceptance"]
+    g = data["grid"]
+    col, dis = g["colocated.high"], g["disagg.high"]
+    # the headline: a strict tail-latency and goodput win at equal capacity
+    assert dis["p99_ttft_s"] < col["p99_ttft_s"]
+    assert dis["goodput_tok_s"] > col["goodput_tok_s"]
+    assert dis["tokens_sha"] == col["tokens_sha"]
+    assert dis["finished"] == col["finished"] > 0
+    assert dis["peak_replicas"] == col["peak_replicas"] == 4
+    assert dis["handoffs"] > 0 and dis["handoff_transfer_s"] > 0
+    # priced-out cell: the pricer keeps everything colocated, streams
+    # identical to the true colocated run
+    po = g["disagg.pricedout"]
+    assert po["handoffs_declined"] > po["handoffs"]
+    assert po["tokens_sha"] == g["colocated.low"]["tokens_sha"]
 
 
 def test_make_tables_end_to_end():
@@ -168,3 +211,5 @@ def test_make_tables_end_to_end():
     assert "BENCH_prefix" in res.stdout or "Prefix-sharing" in res.stdout
     # same for the control-plane grid
     assert "BENCH_control" in res.stdout or "control plane" in res.stdout
+    # and the disaggregated-fleet grid
+    assert "BENCH_disagg" in res.stdout or "Disaggregated" in res.stdout

@@ -299,6 +299,47 @@ def test_add_replica_joins_at_virtual_now():
 
 
 # ---------------------------------------------------------------------------
+# drain-time host-transfer flush (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_drain_flushes_stranded_host_transfers():
+    """Regression (pre-fix: a replica drained with host-tier transfers
+    still queued retired with ``pending_spills``/``pending_restores``
+    non-empty — spilled payloads were lost and restore-pinned
+    ``HostKVStore`` records leaked forever).  The drain-to-retire
+    transition must flush both queues, keep invariant I6, and charge the
+    modelled restore latency to the replica clock."""
+    import numpy as np
+    cfg = _cfg(chunk_tokens=384, prefix_caching=True, kv_offload=True,
+               num_blocks=8, host_kv_blocks=64, enable_offload=False)
+    cl = build_sim_cluster(cfg, 2, "nightjar", router="jsq")
+    eng = cl.replicas[0]
+    bm = eng.scheduler.bm
+    rng = np.random.default_rng(0)
+    tokens = [int(t) for t in rng.integers(0, 1000, 3 * bm.block_size)]
+    bm.allocate(900, len(tokens))
+    bm.register_prefix(900, tokens, len(tokens))
+    bm.release(900)                       # 3 blocks park cached
+    bm.allocate(901, 8 * bm.block_size)   # evict them -> queued spills
+    assert bm.pending_spills
+    bm.release(901)
+    blocks, cached = bm.match_prefix(tokens)   # host hit -> queued restores
+    assert cached == len(tokens) and bm.pending_restores
+    assert bm.host_store.pinned
+
+    clock_before = eng.clock
+    cl.drain_replica(0, now=0.0)
+    # idle at drain time -> retired immediately, with the transfer queues
+    # flushed rather than stranded
+    assert cl.state[0] == RETIRED
+    assert not bm.pending_spills and not bm.pending_restores
+    assert not bm.host_store.pinned       # no pinned record leaked
+    bm.check_invariants()                 # I6 holds across the drain
+    assert eng.clock > clock_before       # restore bytes priced, not free
+
+
+# ---------------------------------------------------------------------------
 # routers on the control-plane signals
 # ---------------------------------------------------------------------------
 
@@ -333,6 +374,66 @@ def test_affinity_router_sticky_and_spill():
     spill = r.route(req(2, tmpl + [3]), engines, now=0.0)
     assert spill != home and r.spills == 1
     assert r.home[template_key(tmpl)] == engines[home].replica_id
+
+
+def test_affinity_route_never_sticks_to_dead_home():
+    """Regression (pre-fix: draining a replica never reached the router,
+    so the sticky home map kept pointing at the corpse — any caller whose
+    replica set still contained it, e.g. an external dispatcher or the
+    cluster's fully-drained fallback tier, had traffic routed straight to
+    a DRAINING/RETIRED replica)."""
+    cp = ControlPlane()
+    engines = [build_sim_engine(_cfg(), "ar") for _ in range(3)]
+    for i, e in enumerate(engines):
+        e.replica_id = i
+    r = PrefixAffinityRouter(cp)
+    tmpl = list(range(80))
+    req = lambda i: Request(i, 0.0, 81, 8,  # noqa: E731
+                            prompt_tokens=tmpl + [i])
+    home = r.route(req(0), engines, now=0.0)
+    assert r.route(req(1), engines, now=0.0) == home
+    r.note_replica_dead(engines[home].replica_id)
+    # the stale home entry is purged immediately...
+    assert template_key(tmpl) not in r.home
+    assert r.rehomes == 1
+    # ...and the template re-homes STICKILY on a live replica even though
+    # this caller's set still contains the dead one
+    new = r.route(req(2), engines, now=0.0)
+    assert new != home
+    assert r.route(req(3), engines, now=0.0) == new
+    assert r.home[template_key(tmpl)] == engines[new].replica_id
+
+
+def test_affinity_rehomes_after_drain_midtrace():
+    """Drain a home replica mid-trace through the cluster: no later
+    arrival lands on the DRAINING/RETIRED replica, its templates re-home,
+    and the fleet's aggregate prefix hit-rate recovers on the new homes."""
+    cfg = _cfg(chunk_tokens=384, prefix_caching=True)
+    cl = build_sim_cluster(cfg, 3, "nightjar", router="affinity")
+    reqs = templated_requests(60, 140, num_templates=8, seed=1)
+    pending = sorted(reqs, key=lambda r: (r.arrival, r.req_id))
+    cut = 40
+    for r in pending[:cut]:
+        cl._handle_arrival(r)
+    # drain the replica hosting the most sticky homes
+    homes = list(cl.router.home.values())
+    assert homes
+    victim = max(set(homes), key=lambda rid: (homes.count(rid), rid))
+    cl.drain_replica(victim, now=pending[cut].arrival)
+    m = cl.run(pending[cut:])
+    assert cl.state[victim] == RETIRED
+    # every post-drain arrival avoided the drained replica
+    later = {r.req_id for r in pending[cut:]}
+    assert all(idx != victim for rid, idx in m.assignments.items()
+               if rid in later)
+    # its templates re-homed and stuck to live replicas
+    assert victim not in set(cl.router.home.values())
+    assert cl.router.rehomes > 0
+    # hit-rate recovers: followers share the re-homed caches
+    assert m.prefix_hit_rate > 0.5
+    # nothing dropped across the drain
+    assert sorted(r.req_id for r in m.requests) == \
+        sorted(r.req_id for r in reqs)
 
 
 def test_make_router_names_and_back_compat():

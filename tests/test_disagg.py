@@ -1,0 +1,384 @@
+"""Disaggregated prefill/decode fleets with priced KV handoff (tentpole).
+
+Pins the PR's acceptance criteria at test scale:
+  * the ``HandoffPricer`` decision flips exactly where the predicted
+    queue-delay saved crosses the modelled transfer time (parametrized —
+    the documented inequality IS the decision);
+  * disaggregated and colocated runs of the same seeded mixed workload
+    commit byte-identical token streams (migration moves bytes, never
+    changes computation), with decode replicas fed only through handoffs;
+  * a prohibitive pricing margin routes every candidate colocated (zero
+    handoffs, still byte-identical) — the never-worse fallback;
+  * a failed adoption (destination pool full) falls back to local
+    re-prefill through the ordinary waiting queue and the request still
+    completes with the same tokens;
+  * the decode pool has its own autoscaler scaling on KV pressure / TPOT,
+    not TTFT attainment;
+  * (slow tier) the real backend's export/import moves the physical KV
+    bytes: a request prefilled on one ``RealBackend`` and decoded on
+    another emits the same greedy stream as a colocated run.
+"""
+import hashlib
+
+import pytest
+
+from repro import configs
+from repro.serving.cluster import DECODE, PREFILL, ServingCluster
+from repro.serving.controlplane import (ControlPlane, DecodePoolAutoscaler,
+                                        HandoffPricer, ReplicaSnapshot)
+from repro.serving.costmodel import RTX_4090
+from repro.serving.request import Request
+from repro.serving.router import make_router
+from repro.serving.simulator import (SimConfig, build_sim_cluster,
+                                     build_sim_engine)
+from repro.serving.workload import mixed_requests
+
+
+def _cfg(**kw):
+    kw.setdefault("max_batch", 256)
+    return SimConfig(target=configs.get_config("paper-7b"),
+                     draft=configs.get_draft_config("paper-7b"),
+                     hw=RTX_4090, seed=0, **kw)
+
+
+def _stream_sha(m):
+    stream = sorted((r.req_id, r.tokens) for r in m.requests)
+    return hashlib.sha256(repr(stream).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# handoff pricing: the decision flip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backlog_reqs,margin,expect", [
+    # deep prefill queue on the source, empty destination: the predicted
+    # queue delay escaped dwarfs the modelled transfer time -> migrate
+    (40, 0.0, True),
+    # both replicas idle: nothing saved, the transfer still costs -> stay
+    (0, 0.0, False),
+    # same deep queue, prohibitive margin: priced out -> stay
+    (40, 1e4, False),
+])
+def test_handoff_pricing_decision_flip(backlog_reqs, margin, expect):
+    """accept <=> forecast_ttft(src) - forecast_ttft(dst) >
+    kv_transfer_seconds(prompt) + margin, on the same telemetry the
+    routers see."""
+    cp = ControlPlane()
+    src = build_sim_engine(_cfg(chunk_tokens=128), "nightjar")
+    dst = build_sim_engine(_cfg(chunk_tokens=128), "nightjar")
+    src.replica_id, dst.replica_id = 0, 1
+    for i in range(backlog_reqs):
+        src.submit(Request(100 + i, 0.0, 1024, 8))
+    pricer = HandoffPricer(cp, margin_s=margin)
+    req = Request(0, 0.0, 512, 64)
+    saved, cost = pricer.quote(src, dst, req, 0.0)
+    # the sim backend models the transfer at interconnect bandwidth: a
+    # 512-token prompt's KV bytes never move for free
+    assert cost >= pricer.transfer_seconds(src, req.prompt_len) > 0.0
+    assert (saved > cost) is expect
+    assert pricer.decide(src, dst, req, 0.0) is expect
+    assert (pricer.accepted, pricer.declined) == \
+        ((1, 0) if expect else (0, 1))
+
+
+def test_pricer_transfer_scales_with_prompt_and_margin():
+    cp = ControlPlane()
+    eng = build_sim_engine(_cfg(chunk_tokens=128), "nightjar")
+    eng.replica_id = 0
+    p = HandoffPricer(cp, margin_s=0.5)
+    assert p.transfer_seconds(eng, 2048) > p.transfer_seconds(eng, 128) > 0
+    _, cost = p.quote(eng, eng, Request(0, 0.0, 128, 8), 0.0)
+    assert cost == pytest.approx(p.transfer_seconds(eng, 128) + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# cluster construction and routing scope
+# ---------------------------------------------------------------------------
+
+
+def test_disaggregate_requires_chunked_prefill():
+    with pytest.raises(ValueError):
+        build_sim_cluster(_cfg(), 4, "nightjar",
+                          disaggregate=dict(prefill=2, decode=2))
+
+
+def test_cluster_roles_validation():
+    engines = [build_sim_engine(_cfg(chunk_tokens=128), "nightjar")
+               for _ in range(2)]
+    with pytest.raises(ValueError):
+        ServingCluster(engines, make_router("jsq"), roles=[PREFILL])
+    with pytest.raises(ValueError):
+        ServingCluster(engines, make_router("jsq"), roles=[DECODE, DECODE])
+    with pytest.raises(ValueError):
+        ServingCluster(engines, make_router("jsq"), roles=["gpu", PREFILL])
+
+
+def test_arrivals_route_to_prefill_pool_only():
+    cl = build_sim_cluster(_cfg(chunk_tokens=128), 4, "nightjar",
+                           router="rr", disaggregate=dict(prefill=2,
+                                                          decode=2))
+    assert cl.roles == [PREFILL, PREFILL, DECODE, DECODE]
+    for i in range(8):
+        cl.submit(Request(i, 0.0, 16, 4))
+    assert set(cl.assignments.values()) == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# golden e2e: byte-identity, handoff accounting, priced-out fallback
+# ---------------------------------------------------------------------------
+
+
+def _mixed_run(disaggregate):
+    cfg = _cfg(chunk_tokens=128, max_batch=16)
+    cl = build_sim_cluster(cfg, 4, "nightjar", router="jsq",
+                           disaggregate=disaggregate)
+    reqs = mixed_requests(20.0, 120, qa_frac=0.25, seed=1)
+    return cl.run(reqs), cl
+
+
+def test_disagg_streams_byte_identical_to_colocated():
+    """Same seeded mixed stream, 4 colocated replicas vs a 2+2 split:
+    identical committed tokens per request, decode replicas fed only via
+    the handoff path, transfer time accounted."""
+    m_col, _ = _mixed_run(None)
+    m_dis, cl = _mixed_run(dict(prefill=2, decode=2))
+    assert len(m_col.requests) == len(m_dis.requests) == 120
+    assert _stream_sha(m_dis) == _stream_sha(m_col)
+    assert len(m_dis.handoffs) > 0
+    assert m_dis.handoff_transfer_s > 0
+    # decode replicas receive work ONLY through handoffs
+    handed = {h["req_id"] for h in m_dis.handoffs}
+    for rid, idx in m_dis.assignments.items():
+        if cl.roles[idx] == DECODE:
+            assert rid in handed
+    # every handoff left a prefill replica for a decode replica
+    for h in m_dis.handoffs:
+        assert cl.roles[h["src"]] == PREFILL
+        assert cl.roles[h["dst"]] == DECODE
+        assert h["transfer_s"] > 0
+    s = m_dis.summary()
+    assert s["disagg"]["handoffs"] == len(m_dis.handoffs)
+    assert {r["role"] for r in s["per_replica"]} == {PREFILL, DECODE}
+
+
+def test_prohibitive_margin_prices_out_every_handoff():
+    """With the margin cranked past any achievable saving, the pricer
+    declines every candidate: zero migrations, decode pool idle, and the
+    committed streams still match the colocated run exactly."""
+    m_col, _ = _mixed_run(None)
+    m_dis, _ = _mixed_run(dict(prefill=2, decode=2, margin_s=1e6))
+    assert len(m_dis.handoffs) == 0
+    assert m_dis.handoffs_declined > 0
+    assert m_dis.handoff_transfer_s == 0.0
+    assert _stream_sha(m_dis) == _stream_sha(m_col)
+
+
+def test_disagg_deterministic_across_runs():
+    a, _ = _mixed_run(dict(prefill=2, decode=2))
+    b, _ = _mixed_run(dict(prefill=2, decode=2))
+    assert a.assignments == b.assignments
+    assert a.handoffs == b.handoffs
+    assert _stream_sha(a) == _stream_sha(b)
+
+
+# ---------------------------------------------------------------------------
+# adoption fallback: a full destination pool is never worse
+# ---------------------------------------------------------------------------
+
+
+def test_adoption_out_of_blocks_falls_back_to_local_prefill():
+    cfg = _cfg(chunk_tokens=128, num_blocks=64)
+    src = build_sim_engine(cfg, "nightjar")
+    dst = build_sim_engine(cfg, "nightjar")
+    src.replica_id, dst.replica_id = 0, 1
+    req = Request(0, 0.0, 100, 8)
+    src.submit(req)
+    while not any(s.prompt_remaining == 0 and s.generated == 0
+                  for s in src.scheduler.running):
+        src.step()
+    seq = next(s for s in src.scheduler.running if s.prompt_remaining == 0)
+    payload = src.extract_for_handoff(seq)
+    assert payload["prompt_len"] == 100
+    assert seq not in src.scheduler.running      # source released its slot
+
+    # destination pool too occupied to host the prompt: adoption must fall
+    # back to the local waiting queue, never drop the request
+    dst.scheduler.bm.allocate(999, 60 * cfg.block_size)
+    dst.accept_handoff(req, t_ready=0.0, payload=payload)
+    assert dst.load == 1
+    dst.step()
+    assert dst.handoffs_refused == 1
+    assert dst.handoffs_in == 0
+    assert dst.scheduler.num_waiting == 1
+    dst.scheduler.bm.release(999)
+    while dst.has_work():
+        dst.step()
+    assert [r.req_id for r in dst.metrics.requests] == [0]
+
+    # the fallback re-prefilled locally and committed the same stream a
+    # colocated engine would have
+    ref = build_sim_engine(cfg, "nightjar")
+    ref.run([Request(0, 0.0, 100, 8)])
+    assert dst.metrics.requests[0].tokens == ref.metrics.requests[0].tokens
+
+
+def test_successful_adoption_is_decode_ready():
+    cfg = _cfg(chunk_tokens=128)
+    src = build_sim_engine(cfg, "nightjar")
+    dst = build_sim_engine(cfg, "nightjar")
+    src.replica_id, dst.replica_id = 0, 1
+    req = Request(0, 0.0, 100, 8)
+    src.submit(req)
+    while not any(s.prompt_remaining == 0 and s.generated == 0
+                  for s in src.scheduler.running):
+        src.step()
+    seq = next(s for s in src.scheduler.running if s.prompt_remaining == 0)
+    payload = src.extract_for_handoff(seq)
+    dst.accept_handoff(req, t_ready=2.5, payload=payload)
+    dst.step()                                   # idle until the KV lands
+    assert dst.clock >= 2.5
+    dst.step()
+    assert dst.handoffs_in == 1 and dst.handoffs_refused == 0
+    assert dst.decode_count == 1                 # no re-prefill happened
+    while dst.has_work():
+        dst.step()
+    assert [r.req_id for r in dst.metrics.requests] == [0]
+
+
+# ---------------------------------------------------------------------------
+# decode-pool autoscaler
+# ---------------------------------------------------------------------------
+
+
+def _snap(i, alloc, total=100, decode=0, tpot=0.01):
+    return ReplicaSnapshot(replica_id=i, t=0.0, clock=0.0, load=0,
+                           decode_count=decode, prefill_backlog_tokens=0,
+                           kv_allocatable=alloc, kv_total=total,
+                           ewma_ttft=0.1, ewma_tpot=tpot,
+                           predicted_ttft=0.1)
+
+
+def test_decode_pool_autoscaler_pressure_calm_cooldown():
+    sc = DecodePoolAutoscaler(min_replicas=1, max_replicas=3,
+                              kv_pressure_frac=0.15, calm_kv_frac=0.4,
+                              drain_decode_per_replica=8, cooldown_s=2.0)
+    # KV pressure on any one replica -> up
+    assert sc.decide(0.0, [_snap(0, 10), _snap(1, 80)], n_alive=2) == "up"
+    # cooldown gates the follow-up
+    assert sc.decide(1.0, [_snap(0, 10), _snap(1, 80)], n_alive=3) is None
+    # at max alive (active + draining) the capacity cap refuses more
+    assert sc.decide(10.0, [_snap(0, 10)], n_alive=3) is None
+    # calm pool whose decode work fits on one fewer replica -> down
+    assert sc.decide(20.0, [_snap(0, 90, decode=2), _snap(1, 95, decode=2)],
+                     n_alive=2) == "down"
+    # at min_replicas it never drains further
+    assert sc.decide(30.0, [_snap(0, 90)], n_alive=1) is None
+    with pytest.raises(ValueError):
+        DecodePoolAutoscaler(min_replicas=2, max_replicas=1)
+    with pytest.raises(ValueError):
+        DecodePoolAutoscaler(kv_pressure_frac=0.5, calm_kv_frac=0.2)
+
+
+def test_decode_pool_autoscaler_tpot_pressure():
+    sc = DecodePoolAutoscaler(tpot_slo_s=0.05, max_replicas=2,
+                              cooldown_s=0.0)
+    # headroom is fine but the pool's worst TPOT blew the target
+    assert sc.decide(0.0, [_snap(0, 90, tpot=0.2)], n_alive=1) == "up"
+    assert sc.decide(1.0, [], n_alive=1) is None      # empty pool: no-op
+
+
+def test_decode_autoscaler_wired_into_cluster():
+    """A disaggregated cluster under sustained load grows its decode pool
+    through the wired-in DecodePoolAutoscaler (autoscale events carry the
+    decode role)."""
+    cfg = _cfg(chunk_tokens=128, max_batch=16, num_blocks=256)
+    cl = build_sim_cluster(
+        cfg, 3, "nightjar", router="jsq",
+        disaggregate=dict(prefill=2, decode=1,
+                          decode_autoscale=dict(min_replicas=1,
+                                                max_replicas=2,
+                                                kv_pressure_frac=0.3,
+                                                cooldown_s=0.5)))
+    reqs = mixed_requests(20.0, 120, qa_frac=0.25, seed=1)
+    m = cl.run(reqs)
+    assert len(m.requests) == 120
+    adds = [e for e in m.autoscale_events
+            if e["kind"] == "add" and e.get("role") == DECODE]
+    assert adds, "decode pool never scaled under KV pressure"
+    assert m.replica_roles.count(DECODE) >= 2
+
+
+# ---------------------------------------------------------------------------
+# slow tier: real-backend KV export/import round trip
+# ---------------------------------------------------------------------------
+
+
+def _real_engine(blocks=64, chunk=8):
+    # chunked prefill, like the cluster requires for disaggregation: the
+    # monolithic path commits the first token inside the prefill step, so
+    # a prefill-complete / zero-generated migration candidate only exists
+    # on the chunked path
+    from repro.core.bandits import make_policy
+    from repro.models import registry
+    from repro.serving.engine import ServingEngine
+    from repro.serving.kv_cache import BlockManager
+    from repro.serving.real_backend import RealBackend
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    def api(draft=False):
+        get = configs.get_draft_config if draft else configs.get_config
+        return registry.get_model(
+            configs.reduced(get("deepseek-7b")).replace(dtype="float32"))
+
+    target, draft = api(), api(draft=True)
+    bm = BlockManager(blocks, 8)
+    be = RealBackend(target, draft, max_batch=4, max_seq=96, seed=0,
+                     block_manager=bm)
+    sched = ContinuousBatchingScheduler(bm, max_batch=4, chunk_tokens=chunk,
+                                        watermark_frac=0.0)
+    eng = ServingEngine(be, sched, make_policy("ar", 3, seed=0), None,
+                        gamma_max=3)
+    return eng, be, target.cfg.vocab_size
+
+
+@pytest.mark.slow
+@pytest.mark.real_backend
+def test_real_tier_handoff_streams_identical():
+    """Prefill on one RealBackend, migrate the physical KV blocks
+    (export_handoff -> spill_blocks gather, import_handoff ->
+    restore_blocks scatter), decode on another: greedy streams match a
+    colocated run byte-for-byte."""
+    from repro.serving.workload import tiny_requests
+
+    out = 8
+    base_eng, base_be, vocab = _real_engine()
+    reqs = tiny_requests(3, rate_qps=1e6, prompt_len=12, output_len=out,
+                         vocab=vocab, seed=5)
+    base_eng.run(list(reqs), max_steps=3000)
+    base = {r.req_id: base_be.output_tokens(r.req_id)[:out + 1]
+            for r in reqs}
+
+    src, _, _ = _real_engine()
+    dst, dst_be, _ = _real_engine()
+    src.replica_id, dst.replica_id = 0, 1
+    for r in reqs:
+        src.submit(r)
+    for _ in range(3000):
+        if not src.has_work():
+            break
+        src.step()
+        for seq in list(src.scheduler.running):
+            if seq.prompt_remaining == 0 and not seq.done \
+                    and seq.generated == 0:
+                payload = src.extract_for_handoff(seq)
+                assert payload["kv"]["n_blocks"] > 0   # bytes travelled
+                dst.accept_handoff(seq.request, t_ready=dst.clock,
+                                   payload=payload)
+    for _ in range(3000):
+        if not dst.has_work():
+            break
+        dst.step()
+    assert dst.handoffs_in == 3 and dst.handoffs_refused == 0
+    got = {r.req_id: dst_be.output_tokens(r.req_id)[:out + 1] for r in reqs}
+    assert got == base

@@ -85,3 +85,40 @@ def test_fmt_helpers_render_values_when_backed_by_samples():
     assert fmt_ms(0.0, 5) == "0ms"        # a REAL zero renders as zero
     assert fmt_num(12.34, 5) == "12.3"
     assert fmt_num(0.875, 3, ".3f") == "0.875"
+
+
+# ---------------------------------------------------------------------------
+# cluster metrics at zero-sample windows: n/a by contract, never fake-perfect
+# ---------------------------------------------------------------------------
+
+
+def test_offered_attainment_na_when_no_deadline_samples():
+    """Regression: a run whose offered load carries no deadline samples
+    (everything shed before any deadline-carrying request finished, or no
+    request had an SLO at all) must report ``slo_attainment_offered`` as
+    None — n/a by contract — not divide by zero or fake a perfect 1.0."""
+    from repro.serving.cluster import ClusterMetrics
+    m = ClusterMetrics(per_replica=[Metrics()],
+                       shed=[{"req_id": 0, "at": 0.0, "slo": None}])
+    assert m.offered_slo_count == 0
+    assert m.slo_attainment_offered is None
+    assert m.summary()["slo_attainment_offered"] is None
+    # one offered deadline sample, shed: an honest 0.0, not n/a
+    m2 = ClusterMetrics(per_replica=[Metrics()],
+                        shed=[{"req_id": 0, "at": 0.0, "slo": 1.0}])
+    assert m2.offered_slo_count == 1
+    assert m2.slo_attainment_offered == 0.0
+
+
+def test_per_replica_summary_na_for_zero_sample_replica():
+    """A replica that finished zero requests (retired mid-drain, or every
+    request it saw was shed upstream) has no latency samples: its summary
+    row reports None for p99/attainment — the same n/a convention the
+    table renderers gate on — never percentile()'s fake-perfect 0.0."""
+    from repro.serving.cluster import ClusterMetrics
+    m = ClusterMetrics(per_replica=[Metrics()])
+    row = m.per_replica_summary()[0]
+    assert row["finished"] == 0
+    assert row["p99_ttft_s"] is None
+    assert row["slo_attainment"] is None
+    assert fmt_ms(0.0, row["finished"]) == "n/a"
