@@ -73,13 +73,15 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
                 dataset: str = "alpaca", max_batch: int = 256, seed: int = 0,
                 chunk_tokens: int = 0, prefix_caching: bool = False,
                 requests=None, trace=None, router_kwargs=None,
-                shed_factor=None, autoscale=None, disaggregate=None):
+                shed_factor=None, autoscale=None, disaggregate=None,
+                fault_plan=None):
     """Run one cluster cell on the simulated tier; rate is the TOTAL fleet
     arrival rate.  ``requests``/``trace`` override the Poisson stream;
     ``shed_factor``/``autoscale`` enable the control-plane admission and
     elastic-scaling controllers; ``disaggregate`` splits the fleet into
     prefill/decode pools with priced KV handoff (kwargs dict for
-    ``build_sim_cluster``).  Returns (ClusterMetrics, ServingCluster)."""
+    ``build_sim_cluster``); ``fault_plan`` (FaultPlan or spec string) arms
+    the seeded fault injector.  Returns (ClusterMetrics, ServingCluster)."""
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
                     seed=seed, chunk_tokens=chunk_tokens,
@@ -87,7 +89,7 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
     cl = build_sim_cluster(cfg, n_replicas, policy, router=router,
                            router_kwargs=router_kwargs,
                            shed_factor=shed_factor, autoscale=autoscale,
-                           disaggregate=disaggregate)
+                           disaggregate=disaggregate, fault_plan=fault_plan)
     if requests is not None:
         reqs = requests
     elif trace is not None:

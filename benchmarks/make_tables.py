@@ -194,6 +194,45 @@ def disagg_table():
     print("\n".join(out))
 
 
+def chaos_table():
+    """Render the chaos gate grid from `run.py --only chaos`.
+
+    MTTD/MTTR/recovery cells follow the n/a-by-contract rule (the same
+    contract tests/test_metrics_edges.py pins for latency percentiles): a
+    cell where no crash fired carries ``None``, never 0.0 — a fault-free
+    run has no recovery time, not an infinitely fast one."""
+    path = bench_path("BENCH_chaos.json")
+    if not os.path.exists(path):
+        print("BENCH_chaos.json: missing (run benchmarks.run --only chaos)")
+        return
+    data = json.load(open(path))
+    out = [f"\n### Chaos gate ({data.get('replicas')} replicas, "
+           f"dataset={data.get('dataset')}, rate={data.get('rate_qps')}qps, "
+           f"n={data.get('requests')})\n"]
+    out.append("| cell | finished | p99 TTFT | SLO att | crashes | lost "
+               "| requeues | failed | MTTD | MTTR | tokens sha |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for name, r in sorted(data.get("grid", {}).items()):
+        n = r.get("finished", 1)
+        nc = r.get("crashes", 0)
+        mttd = r.get("mttd_s")
+        mttr = r.get("mttr_s")
+        out.append(
+            f"| {name} | {n}/{data.get('requests')} "
+            f"| {fmt_ms(r['p99_ttft_s'], n)} "
+            f"| {fmt_num(r['slo_attainment'], n, '.3f')} "
+            f"| {nc} | {r.get('requests_lost', 0)} "
+            f"| {r.get('requeues', 0)} | {r.get('failed_requests', 0)} "
+            f"| {fmt_ms(mttd if mttd is not None else 0.0, nc)} "
+            f"| {fmt_ms(mttr if mttr is not None else 0.0, nc)} "
+            f"| {r['tokens_sha']} |")
+    acc = data.get("acceptance", {})
+    if acc:
+        out.append("\nacceptance: "
+                   + "; ".join(f"{k}={v}" for k, v in sorted(acc.items())))
+    print("\n".join(out))
+
+
 def main():
     for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
         cells = [fix_artifact(c) for c in load(fname)]
@@ -207,6 +246,7 @@ def main():
     control_table()
     sessions_table()
     disagg_table()
+    chaos_table()
 
 
 if __name__ == "__main__":

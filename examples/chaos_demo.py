@@ -1,0 +1,80 @@
+"""Chaos demo: crash a replica mid-run and watch the cluster recover.
+
+A 2-replica fleet serves a seeded arrival stream.  At t=2s the fault
+injector kills replica 1: its in-flight requests are lost with its KV
+blocks, the failure detector notices the silence on the shared virtual
+clock, a replacement replica spawns from the seeded factory, and every
+lost request re-queues through the router with exponential backoff and
+re-prefills from its prompt.  The punchline: ZERO requests dropped and
+committed token streams byte-identical to the fault-free run — the crash
+costs tail latency, never correctness.
+
+    PYTHONPATH=src python examples/chaos_demo.py [--crash-at 2.0]
+"""
+import argparse
+import hashlib
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs  # noqa: E402
+from repro.serving.cluster import FAILED  # noqa: E402
+from repro.serving.costmodel import RTX_4090  # noqa: E402
+from repro.serving.simulator import SimConfig, build_sim_cluster  # noqa: E402
+from repro.serving.workload import poisson_requests  # noqa: E402
+
+
+def stream_sha(m):
+    stream = sorted((r.req_id, r.tokens) for r in m.requests)
+    return hashlib.sha256(repr(stream).encode()).hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--crash-at", type=float, default=2.0)
+    ap.add_argument("--requests", type=int, default=240)
+    ap.add_argument("--rate", type=float, default=20.0)
+    args = ap.parse_args()
+
+    cfg = SimConfig(target=configs.get_config("paper-7b"),
+                    draft=configs.get_draft_config("paper-7b"),
+                    hw=RTX_4090, max_batch=256, seed=0)
+    reqs = poisson_requests(args.rate, args.requests, dataset="alpaca",
+                            seed=1)
+
+    print("=== fault-free baseline ===")
+    base = build_sim_cluster(cfg, 2, "nightjar").run(list(reqs))
+    print(f"finished {len(base.requests)}/{args.requests}, "
+          f"p99 TTFT {base.ttft_percentile(0.99)*1e3:.0f}ms, "
+          f"SLO attainment {base.slo_attainment:.3f}, "
+          f"tokens sha {stream_sha(base)}")
+
+    plan = f"crash:1@{args.crash_at}"
+    print(f"\n=== chaos run: {plan} ===")
+    cl = build_sim_cluster(cfg, 2, "nightjar", fault_plan=plan)
+    m = cl.run(list(reqs))
+    c = m.crashes[0]
+    print(f"crash at t={c['at']}s killed replica {c['replica']} with "
+          f"{c['lost']} requests in flight")
+    print(f"detected at t={c['detected_at']:.2f}s (MTTD {m.mttd:.2f}s), "
+          f"recovered at t={c['recovered_at']:.2f}s (MTTR {m.mttr:.2f}s)")
+    print(f"requeues {m.requeues}, retries {m.retries}, "
+          f"failed {len(m.failed_requests)}")
+    print(f"fleet: {len(cl.replicas)} replicas, states "
+          f"{[s for s in cl.state]} "
+          f"(replica {c['replica']} is {FAILED}, replacement spawned)")
+    print(f"finished {len(m.requests)}/{args.requests}, "
+          f"p99 TTFT {m.ttft_percentile(0.99)*1e3:.0f}ms, "
+          f"SLO attainment {m.slo_attainment:.3f}, "
+          f"tokens sha {stream_sha(m)}")
+
+    ok = (len(m.requests) == args.requests
+          and stream_sha(m) == stream_sha(base))
+    print(f"\nzero dropped + byte-identical committed streams: "
+          f"{'PASS' if ok else 'FAIL'}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -130,11 +130,20 @@ def main():
     ap.add_argument("--handoff-margin", type=float, default=0.0,
                     help="pricer hysteresis in seconds: a handoff must beat "
                          "staying put by at least this much")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="sim tier: deterministic fault schedule, e.g. "
+                         "'crash:1@2.0;straggle:0@1.0..3.0x4;"
+                         "handoff:fail@0..5#2;corrupt:0@4.0#1' — seeded by "
+                         "--seed, so the same spec + seed replays the exact "
+                         "same faults (forces the cluster path)")
     args = ap.parse_args()
 
     if args.kv_offload and args.prefix_caching != "on":
         ap.error("--kv-offload requires --prefix-caching on (the host tier "
                  "is keyed by prefix chain hashes)")
+    if args.fault_plan is not None and args.tier != "sim":
+        ap.error("--fault-plan runs on the simulated tier only (the "
+                 "injector is driven by the shared virtual clock)")
 
     from .. import configs
 
@@ -209,14 +218,21 @@ def main():
                          "(the prefill pool runs chunked prefill)")
             disaggregate = dict(prefill=p, decode=d,
                                 margin_s=args.handoff_margin)
+        fault_plan = None
+        if args.fault_plan is not None:
+            from ..serving.faults import FaultPlan
+            try:
+                fault_plan = FaultPlan.parse(args.fault_plan)
+            except ValueError as e:
+                ap.error(f"--fault-plan: {e}")
         if (args.replicas > 1 or args.autoscale or args.shed_factor > 0
-                or disaggregate is not None):
+                or disaggregate is not None or fault_plan is not None):
             autoscale = (dict(min_replicas=1, max_replicas=args.replicas)
                          if args.autoscale else None)
             cluster = build_sim_cluster(
                 cfg, args.replicas, args.policy, router=args.router,
                 shed_factor=args.shed_factor or None, autoscale=autoscale,
-                disaggregate=disaggregate)
+                disaggregate=disaggregate, fault_plan=fault_plan)
             metrics = cluster.run(reqs)
         else:
             engine = build_sim_engine(cfg, args.policy)

@@ -47,17 +47,21 @@ tests/test_controlplane.py).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 from .controlplane import ControlPlane, DecodePoolAutoscaler, HandoffPricer
 from .engine import ServingEngine
+from .faults import FaultInjector, RetryPolicy
 from .request import (Metrics, Request, RequestStats, goodput_of, percentile,
                       slo_attainment_of)
 from .router import Router
 
-# replica lifecycle states
-ACTIVE, DRAINING, RETIRED = "active", "draining", "retired"
+# replica lifecycle states.  FAILED is distinct from DRAINING: a draining
+# replica finishes the work it owns; a failed replica's in-flight work is
+# LOST (its blocks are gone) and must be re-dispatched elsewhere.
+ACTIVE, DRAINING, RETIRED, FAILED = "active", "draining", "retired", "failed"
 
 # replica roles (disaggregated mode; COLOCATED is the classic do-everything
 # replica of a non-disaggregated cluster)
@@ -80,6 +84,16 @@ class ClusterMetrics:
     handoffs_declined: int = 0        # pricer chose colocated fallback
     handoff_transfer_s: float = 0.0   # total modelled interconnect time
     handoff_fallbacks: int = 0        # adoptions that re-prefilled locally
+    handoff_failures: int = 0         # injected transfer failures
+    handoff_timeouts: int = 0         # injected transfer timeouts
+    handoff_retries: int = 0          # transfer retries after a fault
+    handoff_aborts: int = 0           # retry budget exhausted -> colocated
+    # fault tolerance (serving/faults.py): one dict per replica crash with
+    # at/replica/lost/detected_at/recovered_at stamps
+    crashes: List[dict] = field(default_factory=list)
+    requeues: int = 0                 # crashed requests re-submitted
+    retries: int = 0                  # retry attempts scheduled
+    failed_requests: List[dict] = field(default_factory=list)  # budget spent
 
     @property
     def total_tokens(self) -> int:
@@ -167,6 +181,31 @@ class ClusterMetrics:
         q = sum(m.prefix.get("queries", 0) for m in self.per_replica)
         h = sum(m.prefix.get("hits", 0) for m in self.per_replica)
         return h / q if q else 0.0
+
+    @property
+    def mttd(self) -> Optional[float]:
+        """Mean time-to-detect across crashes (crash -> detector firing).
+        ``None`` when no crash was detected — n/a by contract, never a
+        fake-free 0.0 (tests/test_metrics_edges.py convention)."""
+        ds = [c["detected_at"] - c["at"] for c in self.crashes
+              if c.get("detected_at") is not None]
+        return sum(ds) / len(ds) if ds else None
+
+    @property
+    def mttr(self) -> Optional[float]:
+        """Mean time-to-recover across crashes (crash -> last lost request
+        re-dispatched).  ``None`` when no crash completed recovery."""
+        rs = [c["recovered_at"] - c["at"] for c in self.crashes
+              if c.get("recovered_at") is not None]
+        return sum(rs) / len(rs) if rs else None
+
+    @property
+    def recovery_seconds(self) -> Optional[float]:
+        """Total virtual seconds spent in crash recovery windows; ``None``
+        when no crash recovered (n/a, not free)."""
+        rs = [c["recovered_at"] - c["at"] for c in self.crashes
+              if c.get("recovered_at") is not None]
+        return sum(rs) if rs else None
 
     @property
     def peak_replicas(self) -> int:
@@ -269,12 +308,33 @@ class ClusterMetrics:
                 "retires": sum(1 for e in self.autoscale_events
                                if e["kind"] == "retire"),
             }
-        if self.handoffs or self.handoffs_declined:
+        if (self.handoffs or self.handoffs_declined
+                or self.handoff_failures or self.handoff_timeouts
+                or self.handoff_aborts):
             out["disagg"] = {
                 "handoffs": len(self.handoffs),
                 "declined": self.handoffs_declined,
                 "transfer_s": round(self.handoff_transfer_s, 4),
                 "adopt_fallbacks": self.handoff_fallbacks,
+            }
+            if (self.handoff_failures or self.handoff_timeouts
+                    or self.handoff_aborts):
+                out["disagg"].update({
+                    "transfer_failures": self.handoff_failures,
+                    "transfer_timeouts": self.handoff_timeouts,
+                    "transfer_retries": self.handoff_retries,
+                    "transfer_aborts": self.handoff_aborts,
+                })
+        if self.crashes or self.requeues or self.failed_requests:
+            mttd, mttr = self.mttd, self.mttr
+            out["faults"] = {
+                "crashes": len(self.crashes),
+                "requests_lost": sum(c["lost"] for c in self.crashes),
+                "requeues": self.requeues,
+                "retries": self.retries,
+                "failed_requests": len(self.failed_requests),
+                "mttd_s": round(mttd, 4) if mttd is not None else None,
+                "mttr_s": round(mttr, 4) if mttr is not None else None,
             }
         if any(m.prefix for m in self.per_replica):
             out["prefix_saved_tokens"] = sum(
@@ -292,12 +352,20 @@ class ServingCluster:
                      Callable[[int], ServingEngine]] = None,
                  roles: Optional[Sequence[str]] = None,
                  pricer: Optional[HandoffPricer] = None,
-                 decode_autoscaler: Optional[DecodePoolAutoscaler] = None):
+                 decode_autoscaler: Optional[DecodePoolAutoscaler] = None,
+                 faults: Optional[FaultInjector] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 handoff_max_retries: int = 2):
         if not replicas:
             raise ValueError("cluster needs at least one replica")
         self.replicas = list(replicas)
+        self.faults = faults
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else RetryPolicy()
+        self.handoff_max_retries = handoff_max_retries
         for i, eng in enumerate(self.replicas):
             eng.replica_id = i
+            eng.faults = faults
         self.router = router
         self.control = control if control is not None else ControlPlane()
         # headroom-based routers share the cluster's telemetry book
@@ -336,6 +404,21 @@ class ServingCluster:
         self._starts = [e.clock for e in self.replicas]
         self._retired_at: Dict[int, float] = {}
         self._record_timeline = True
+        # fault-tolerance state: timed control events (crash / corrupt /
+        # detect / retry) interleave with engine steps and arrivals on the
+        # shared virtual clock.  All empty without a fault plan, so the
+        # fault-free path is byte-identical to pre-fault-layer behaviour.
+        self._control_events: List[tuple] = []  # heap (t, seq, kind, payload)
+        self._ctl_seq = 0
+        self.crashes: List[dict] = []
+        self.requeues = 0
+        self.retries = 0
+        self.failed_requests: List[dict] = []
+        self._attempts: Dict[int, int] = {}     # req_id -> retry attempts
+        self.handoff_failures = 0
+        self.handoff_timeouts = 0
+        self.handoff_retries = 0
+        self.handoff_aborts = 0
 
     # ------------------------------------------------------------------
     @property
@@ -364,10 +447,14 @@ class ServingCluster:
         still has to land arrivals somewhere deterministic: fall back to
         the draining replicas, and past that to the whole fleet — a
         retired engine is just an idle engine wearing a control-plane
-        label, and serving there beats crashing the router."""
-        idxs = list(range(len(self.replicas)))
+        label, and serving there beats crashing the router.  A FAILED
+        replica is NEVER a candidate at any fallback tier: routing there
+        would strand the request forever (a crashed engine never steps
+        again)."""
+        idxs = [i for i in range(len(self.replicas))
+                if self.state[i] != FAILED]
         if self.disaggregated:
-            pre = self._pool(PREFILL)
+            pre = [i for i in self._pool(PREFILL) if self.state[i] != FAILED]
             cand = ([i for i in pre if self.state[i] == ACTIVE]
                     or [i for i in pre if self.state[i] != RETIRED])
             if cand:
@@ -393,6 +480,10 @@ class ServingCluster:
         eng.replica_id = rid
         eng.clock = max(eng.clock, now)
         eng.record_timeline = self._record_timeline
+        eng.faults = self.faults
+        # birth counts as a heartbeat: a replica that never steps must not
+        # look crash-silent to the failure detector from t=0
+        self.control.detector.heartbeat(rid, eng.clock)
         self.replicas.append(eng)
         self.state.append(ACTIVE)
         if role is None:
@@ -431,6 +522,116 @@ class ServingCluster:
             self.autoscale_events.append(
                 {"kind": "retire", "at": self._retired_at[idx],
                  "replica": idx})
+
+    # ------------------------------------------------------------------
+    # fault tolerance: crash / detect / retry control events
+    # ------------------------------------------------------------------
+    def _schedule_ctl(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._control_events,
+                       (t, self._ctl_seq, kind, payload))
+        self._ctl_seq += 1
+
+    def _dispatch_ctl(self, t: float, kind: str, payload) -> None:
+        if kind == "crash":
+            self._on_crash(payload, t)
+        elif kind == "corrupt":
+            self._on_corrupt(payload, t)
+        elif kind == "detect":
+            self._on_detect(payload, t)
+        elif kind == "retry":
+            self._on_retry(payload, t)
+        else:  # pragma: no cover - defensive
+            raise ValueError(f"unknown control event {kind!r}")
+
+    def _on_crash(self, fault, now: float) -> None:
+        """Fail replica ``fault.replica`` at virtual time ``now``.  The
+        crash takes effect at the first scheduling point at or after the
+        fault time (engine steps are atomic).  All in-flight work is lost
+        and re-dispatched after DETECTION — recovery runs off the
+        missed-heartbeat signal, not the injector's ground truth."""
+        idx = fault.replica
+        if idx >= len(self.replicas) or self.state[idx] in (RETIRED, FAILED):
+            return
+        eng = self.replicas[idx]
+        self.state[idx] = FAILED
+        # sticky routers must forget this replica immediately, same as the
+        # drain path (PrefixAffinityRouter re-homes its templates)
+        self.router.note_replica_dead(eng.replica_id)
+        lost = eng.force_fail()
+        for req in lost:
+            # a prompt that finished prefill on the crashed replica but was
+            # never handed off must become a candidate again on its
+            # recovery replica
+            self._handoff_considered.discard(req.req_id)
+        self._retired_at[idx] = now    # occupancy span ends at the crash
+        rec = {"at": now, "replica": idx, "lost": len(lost),
+               "detected_at": None, "recovered_at": None,
+               "pending": {r.req_id for r in lost}, "_requests": lost}
+        self.crashes.append(rec)
+        self._schedule_ctl(now + self.control.detector.timeout_s,
+                           "detect", rec)
+
+    def _on_detect(self, rec: dict, now: float) -> None:
+        """The failure detector confirms a silent replica and kicks off
+        recovery: replace the replica (when a factory exists) and schedule
+        every lost request's retry with exponential backoff."""
+        idx = rec["replica"]
+        if idx not in self.control.detector.suspects(
+                now, [self.replicas[idx].replica_id]):
+            # stepped since the fault was scheduled (cannot happen for a
+            # FAILED replica, defensive): poll again one timeout later
+            self._schedule_ctl(now + self.control.detector.timeout_s,
+                               "detect", rec)
+            return
+        rec["detected_at"] = now
+        if self.replica_factory is not None:
+            # replace-on-crash reuses the elastic add path (autoscale event
+            # stream records it like any scale-up)
+            role = self.roles[idx] if self.disaggregated else None
+            self.add_replica(now, role=role)
+        if not rec["pending"]:
+            rec["recovered_at"] = now
+        for req in rec["_requests"]:
+            self._schedule_retry(req, rec, now)
+
+    def _schedule_retry(self, req: Request, rec: dict, now: float) -> None:
+        attempt = self._attempts.get(req.req_id, 0) + 1
+        self._attempts[req.req_id] = attempt
+        if self.retry_policy.exhausted(attempt):
+            # budget spent: the request is surfaced as FAILED in metrics —
+            # never silently dropped
+            self.failed_requests.append(
+                {"req_id": req.req_id, "at": now, "attempts": attempt - 1})
+            rec["pending"].discard(req.req_id)
+            if not rec["pending"] and rec["recovered_at"] is None:
+                rec["recovered_at"] = now
+            return
+        self.retries += 1
+        self._schedule_ctl(now + self.retry_policy.backoff(attempt),
+                           "retry", (req, rec))
+
+    def _on_retry(self, payload, now: float) -> None:
+        """Re-dispatch one crashed request through the router.  Admission
+        control is NOT re-consulted: the request was already admitted once
+        and shedding it now would drop accepted work.  It restarts from
+        its prompt (re-prefill); greedy decode makes the committed stream
+        byte-identical to a fault-free run."""
+        req, rec = payload
+        self.requeues += 1
+        self.submit(req, now=now)
+        rec["pending"].discard(req.req_id)
+        if not rec["pending"] and rec["recovered_at"] is None:
+            rec["recovered_at"] = now
+
+    def _on_corrupt(self, fault, now: float) -> None:
+        """Corrupt host-KV records on one replica (checksum catches them
+        at restore time; the prefix cold-re-prefills)."""
+        idx = fault.replica
+        if idx >= len(self.replicas):
+            return
+        hs = getattr(self.replicas[idx].scheduler.bm, "host_store", None)
+        if hs is not None and self.faults is not None:
+            self.faults.corrupt_host_records(hs, fault)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request, now: Optional[float] = None) -> int:
@@ -566,8 +767,37 @@ class ServingCluster:
                 continue
             transfer_s = (self.pricer.transfer_seconds(
                 src, seq.request.prompt_len) if self.pricer else 0.0)
+            # injected transfer faults: each failed/timed-out attempt
+            # wastes interconnect time; past the retry cap the sequence
+            # simply decodes where it prefilled (the colocated fallback
+            # PR 7 guarantees is never worse) — candidacy was already
+            # consumed, so it is not reconsidered
+            waste = 0.0
+            aborted = False
+            if self.faults is not None:
+                attempts = 0
+                while True:
+                    fault = self.faults.next_handoff_fault(now + waste)
+                    if fault is None:
+                        break
+                    if fault.mode == "timeout":
+                        waste += transfer_s * fault.timeout_factor
+                        self.handoff_timeouts += 1
+                    else:
+                        waste += transfer_s
+                        self.handoff_failures += 1
+                    attempts += 1
+                    if attempts > self.handoff_max_retries:
+                        aborted = True
+                        break
+                    self.handoff_retries += 1
+                self.handoff_transfer_s += waste
+            if aborted:
+                self.handoff_aborts += 1
+                continue
             payload = src.extract_for_handoff(seq)
-            dst.accept_handoff(seq.request, t_ready=now + transfer_s,
+            dst.accept_handoff(seq.request,
+                               t_ready=now + waste + transfer_s,
                                payload=payload)
             self.control.note_handoff(src, dst, rid)
             self.assignments[rid] = dst.replica_id
@@ -606,14 +836,32 @@ class ServingCluster:
             e.record_timeline = record_timeline
         pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
         self._starts = [e.clock for e in self.replicas]
+        if self.faults is not None:
+            for i, e in enumerate(self.replicas):
+                self.control.detector.heartbeat(e.replica_id, e.clock)
+            for t, kind, payload in self.faults.timed_events():
+                self._schedule_ctl(t, kind, payload)
         pi = 0
         steps = 0
         while steps < max_steps:
+            # a FAILED replica never steps again: its events are gone
             evs = [(t, i) for i, t in
                    enumerate(e.peek_next_event() for e in self.replicas)
-                   if t is not None]
+                   if t is not None and self.state[i] != FAILED]
             t_engine = min(evs)[0] if evs else float("inf")
-            if pi < len(pending) and pending[pi].arrival <= t_engine:
+            t_arrival = (pending[pi].arrival if pi < len(pending)
+                         else float("inf"))
+            # timed control events (crash / corrupt / detect / retry) fire
+            # ahead of engine steps and arrivals at the same instant; the
+            # heap is empty without a fault plan, leaving the fault-free
+            # event order byte-identical to the pre-fault-layer loop
+            if self._control_events and \
+                    self._control_events[0][0] <= min(t_engine, t_arrival):
+                t, _, kind, payload = heapq.heappop(self._control_events)
+                self._dispatch_ctl(t, kind, payload)
+                steps += 1
+                continue
+            if pi < len(pending) and t_arrival <= t_engine:
                 self._handle_arrival(pending[pi])
                 pi += 1
                 continue
@@ -637,6 +885,11 @@ class ServingCluster:
         spans = [(self._starts[i],
                   self._retired_at.get(i, max(end, self._starts[i])))
                  for i in range(len(self.replicas))]
+        # externally visible crash records: drop the internal request
+        # objects / pending sets so the list is JSON-serialisable
+        crashes = [{k: v for k, v in c.items()
+                    if k not in ("pending", "_requests")}
+                   for c in self.crashes]
         return ClusterMetrics(per_replica=per, elapsed=makespan,
                               assignments=dict(self.assignments),
                               shed=list(self.shed),
@@ -649,4 +902,12 @@ class ServingCluster:
                                                  if self.pricer else 0),
                               handoff_transfer_s=self.handoff_transfer_s,
                               handoff_fallbacks=sum(
-                                  e.handoffs_refused for e in self.replicas))
+                                  e.handoffs_refused for e in self.replicas),
+                              handoff_failures=self.handoff_failures,
+                              handoff_timeouts=self.handoff_timeouts,
+                              handoff_retries=self.handoff_retries,
+                              handoff_aborts=self.handoff_aborts,
+                              crashes=crashes,
+                              requeues=self.requeues,
+                              retries=self.retries,
+                              failed_requests=list(self.failed_requests))

@@ -387,6 +387,43 @@ class DecodePoolAutoscaler:
 
 
 # ---------------------------------------------------------------------------
+# failure detection
+# ---------------------------------------------------------------------------
+
+
+class FailureDetector:
+    """Missed-heartbeat failure detection on the shared virtual clock.
+
+    Every stepped replica heartbeats (``observe_step``); a replica whose
+    last heartbeat is more than ``timeout_s`` of virtual time old is a
+    *suspect*.  The cluster confirms a crash fault only through this
+    detector — recovery is driven by the observable signal (silence), not
+    by the injector's ground truth, so detection latency (MTTD) is a real,
+    measured component of MTTR rather than an assumed zero."""
+
+    def __init__(self, timeout_s: float = 0.25):
+        if timeout_s <= 0:
+            raise ValueError("detector timeout must be > 0")
+        self.timeout_s = timeout_s
+        self.last_seen: Dict[int, float] = {}
+
+    def heartbeat(self, replica_id: int, now: float) -> None:
+        prev = self.last_seen.get(replica_id)
+        if prev is None or now > prev:
+            self.last_seen[replica_id] = now
+
+    def silent_for(self, replica_id: int, now: float) -> float:
+        """Virtual seconds since the replica's last heartbeat (0 for a
+        replica never seen — birth counts as a heartbeat)."""
+        last = self.last_seen.setdefault(replica_id, now)
+        return max(now - last, 0.0)
+
+    def suspects(self, now: float, replica_ids) -> List[int]:
+        return [r for r in replica_ids
+                if self.silent_for(r, now) >= self.timeout_s]
+
+
+# ---------------------------------------------------------------------------
 # handoff pricing (disaggregated prefill/decode)
 # ---------------------------------------------------------------------------
 
@@ -455,11 +492,13 @@ class ControlPlane:
 
     def __init__(self, *, admission: Optional[AdmissionController] = None,
                  autoscaler: Optional[AutoscaleController] = None,
-                 alpha: float = 0.3):
+                 alpha: float = 0.3,
+                 detector: Optional[FailureDetector] = None):
         self.admission = admission
         self.autoscaler = autoscaler
         self.alpha = alpha
         self.telemetry: Dict[int, ReplicaTelemetry] = {}
+        self.detector = detector if detector is not None else FailureDetector()
         self._fc_cache: Optional[Dict[tuple, float]] = None
 
     def begin_arrival(self) -> None:
@@ -536,6 +575,7 @@ class ControlPlane:
 
     def observe_step(self, engine) -> None:
         """Consume a replica's newly finished requests after one step."""
+        self.detector.heartbeat(engine.replica_id, engine.clock)
         fresh = self.tel(engine.replica_id).consume_finished(engine)
         if self.autoscaler is not None:
             for r in fresh:

@@ -106,6 +106,10 @@ class ServingEngine:
         self._handoffs: List = []
         self.handoffs_in = 0       # adopted with KV intact
         self.handoffs_refused = 0  # adoption fell back to local re-prefill
+        # fault-injection seam (serving/faults.py): the cluster attaches a
+        # FaultInjector; None means every query below is a no-op
+        self.faults = None
+        self.failed = False        # crashed — permanently out of service
 
     # ------------------------------------------------------------------
     # steppable surface
@@ -336,6 +340,71 @@ class ServingEngine:
         self.clock += lat
         return lat
 
+    def _faulty(self, dt: float) -> float:
+        """Apply any straggler fault window covering (replica, clock) to a
+        step latency.  The SCALED value is what the clock, timeline and
+        planner all see — the policy adapting to a straggling replica is
+        the desired behaviour, not a measurement artifact.  The injected
+        surplus is tracked separately in ``metrics.fault_injected_s``."""
+        if self.faults is None or dt <= 0:
+            return dt
+        mult = self.faults.latency_multiplier(self.replica_id, self.clock)
+        if mult > 1.0:
+            self.metrics.fault_injected_s += dt * (mult - 1.0)
+            return dt * mult
+        return dt
+
+    # ------------------------------------------------------------------
+    # crash surface (serving/faults.py · cluster crash recovery)
+    # ------------------------------------------------------------------
+    def force_fail(self) -> List[Request]:
+        """Crash this replica: all in-flight work is lost, all device state
+        is gone.  Returns every request this replica owned (pending,
+        migrating, waiting, running) in req-id order so the cluster can
+        re-dispatch them; releases every block, cancels every pending
+        transfer and drops every host-store pin so nothing leaks (invariant
+        I7, ``check_invariants(failed=True)``).  The host-side spill
+        records themselves are irrelevant after the crash — the replica
+        never serves again — but pins and queues must clear because the
+        invariant checker (and the leak they model) is per-store."""
+        sched = self.scheduler
+        bm = sched.bm
+        m = self.metrics
+        lost: List[Request] = [item[2] for item in self._pending]
+        self._pending.clear()
+        lost += [item[2] for item in self._handoffs]
+        self._handoffs.clear()
+        lost += list(sched.waiting)
+        sched.waiting.clear()
+        for seq in list(sched.running):
+            # a half-decoded sequence already contributed a TTFT sample;
+            # its recovery run will contribute another from a different
+            # replica — remove the orphaned sample so the crashed attempt
+            # doesn't double-count (exact float: same arithmetic stamped it)
+            if seq.first_token_at is not None:
+                try:
+                    m.ttfts.remove(seq.first_token_at - seq.request.arrival)
+                except ValueError:
+                    pass
+            bm.release(sched._seq_key(seq))
+            self.backend.release(seq)
+            lost.append(seq.request)
+        sched.running.clear()
+        # device content is gone: unregister every cached-reusable block
+        # straight back to the free list — NO spill (the payload a spill
+        # would capture no longer exists), which also cancels in-flight
+        # restores and unpins their host records via _unregister
+        for b in list(bm.cached):
+            bm.cached.pop(b, None)
+            bm._unregister(b)
+            bm.free.append(b)
+        bm.pending_copies.clear()
+        bm.pending_spills.clear()
+        assert not bm.pending_restores, "restore survived its target"
+        self.failed = True
+        lost.sort(key=lambda r: r.req_id)
+        return lost
+
     def _record_timeline(self, B: int, gamma: int, tokens: int,
                          latency: float, draft_ok: bool,
                          prefill_tokens: int = 0) -> None:
@@ -367,7 +436,7 @@ class ServingEngine:
         admitted = self.scheduler.schedule()
         if admitted:
             t = self.backend.prefill(admitted, with_draft=draft_ok)
-            self.clock += t
+            self.clock += self._faulty(t)
             for s in admitted:
                 s.prefill_done_at = self.clock
                 if not draft_ok:
@@ -410,12 +479,13 @@ class ServingEngine:
         switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
         if switched_on and any(s.delta > 0 for s in running):
             t_catch = self.backend.draft_catchup(running)
-            self.clock += t_catch
+            self.clock += self._faulty(t_catch)
             for s in running:
                 s.delta = 0
 
         # 5. execute
         out = self.backend.step(running, gamma)
+        out.latency = self._faulty(out.latency)
         self.clock += out.latency
         total_committed = int(sum(out.n_committed))
 
@@ -507,13 +577,14 @@ class ServingEngine:
         switched_on = (self.prev_gamma_effective == 0 and gamma > 0)
         if switched_on and any(s.delta > 0 for s in decode):
             t_catch = self.backend.draft_catchup(decode)
-            self.clock += t_catch
+            self.clock += self._faulty(t_catch)
             for s in decode:
                 s.delta = 0
 
         # 5. execute the fused step
         out = self.backend.hybrid_step(batch.prefill_chunks, decode, gamma,
                                        with_draft=draft_ok)
+        out.latency = self._faulty(out.latency)
         self.clock += out.latency
         total_committed = int(sum(out.n_committed))
 

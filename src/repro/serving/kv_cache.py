@@ -51,8 +51,15 @@ Invariants (property-tested):
       chain reproduces the hash
   I6  (host tier) every pending restore targets a registered device block
       backed by a pinned host record; host and device indices are disjoint
-      except for restores in flight, and every host record's token chain
-      reproduces its key
+      except for restores in flight, and every host record either
+      reproduces its key AND passes its payload checksum, or fails the
+      checksum (no *silently* corrupt record — a failed checksum is
+      detectable and the restore path drops the record); pinned records
+      (restore in flight) always verify
+  I7  (crash) a FAILED replica owns nothing: no block tables, no
+      refcounts, no cached/registered blocks, every block back on the
+      free list, no pending copies/spills/restores, and no pinned host
+      records (``check_invariants(failed=True)``)
 """
 from __future__ import annotations
 
@@ -128,11 +135,31 @@ class HostBlockRecord:
     the key and to re-register the block on restore); ``data`` holds the
     per-pool page payloads once the physical tier executes the spill —
     keyed ``"<pool_tag>:<page_key>"`` (e.g. ``"t:k_pages"``) with
-    host-side numpy arrays.  The simulated tier never fills ``data``."""
+    host-side numpy arrays.  The simulated tier never fills ``data``.
+    ``checksum`` is the blake2b integrity stamp over (parent, tokens,
+    data), written at spill time (and re-sealed after the physical tier
+    fills ``data``) and verified before any restore — host memory is
+    outside the device's ECC domain, so a record is never trusted on
+    faith."""
 
     parent: int
     tokens: Tuple[int, ...]
     data: Dict[str, np.ndarray] = field(default_factory=dict)
+    checksum: Optional[int] = None
+
+
+def record_checksum(parent: int, tokens: Sequence[int],
+                    data: Dict[str, np.ndarray]) -> int:
+    """Integrity checksum of one host record: blake2b over the chain-hash
+    material plus every payload page (key + raw bytes, key-sorted so the
+    stamp is independent of dict insertion order)."""
+    hsh = hashlib.blake2b(digest_size=8)
+    hsh.update((parent & _MASK64).to_bytes(8, "little"))
+    hsh.update(np.asarray(tokens, dtype="<i8").tobytes())
+    for key in sorted(data):
+        hsh.update(key.encode())
+        hsh.update(np.ascontiguousarray(data[key]).tobytes())
+    return int.from_bytes(hsh.digest(), "little")
 
 
 class HostKVStore:
@@ -152,7 +179,7 @@ class HostKVStore:
         self.pinned: set = set()               # hashes with restores in flight
         self.stats: Dict[str, float] = dict(
             spills=0, spilled_blocks=0, restores=0, host_evictions=0,
-            spill_s=0.0, restore_s=0.0)
+            spill_s=0.0, restore_s=0.0, corrupt_dropped=0)
 
     def __len__(self) -> int:
         return len(self.records)
@@ -166,7 +193,9 @@ class HostKVStore:
         determined by the hash) and just refreshes its LRU position."""
         rec = self.records.get(h)
         if rec is None:
-            self.records[h] = HostBlockRecord(parent, tuple(tokens))
+            rec = HostBlockRecord(parent, tuple(tokens))
+            rec.checksum = record_checksum(rec.parent, rec.tokens, rec.data)
+            self.records[h] = rec
             self.stats["spills"] += 1
         self.records.move_to_end(h)
         while len(self.records) > self.capacity:
@@ -198,6 +227,50 @@ class HostKVStore:
         if rec is not None:
             self.stats["restores"] += 1
         return rec
+
+    # -- integrity ---------------------------------------------------------
+
+    def seal(self, h: int) -> None:
+        """Re-stamp a record's checksum after its payload pages are filled
+        (the physical tier writes ``data`` after ``put`` indexed the
+        record, so the stamp must follow the bytes)."""
+        rec = self.records.get(h)
+        if rec is not None:
+            rec.checksum = record_checksum(rec.parent, rec.tokens, rec.data)
+
+    def verify(self, h: int) -> bool:
+        """True iff the record exists and its bytes match its stamp."""
+        rec = self.records.get(h)
+        return rec is not None and rec.checksum == record_checksum(
+            rec.parent, rec.tokens, rec.data)
+
+    def drop_corrupt(self, h: int) -> None:
+        """Discard a record that failed verification.  The prefix it held
+        will cold-re-prefill — strictly better than serving bad KV."""
+        self.records.pop(h, None)
+        self.pinned.discard(h)
+        self.stats["corrupt_dropped"] += 1
+
+    def corrupt(self, h: int) -> bool:
+        """Fault injection: flip payload bits of one record WITHOUT
+        updating its stamp (models bit rot / a bad DMA).  Pinned records
+        are refused — an in-flight restore already owns that content.
+        Returns True if the record was corrupted."""
+        rec = self.records.get(h)
+        if rec is None or h in self.pinned:
+            return False
+        if rec.data:
+            key = sorted(rec.data)[0]
+            arr = np.ascontiguousarray(rec.data[key])
+            flat = arr.view(np.uint8).reshape(-1).copy()
+            if not flat.size:
+                return False
+            flat[0] ^= 0xFF
+            rec.data[key] = flat.view(arr.dtype).reshape(arr.shape)
+        else:
+            # simulated tier holds no pages: corrupt the chain material
+            rec.tokens = (rec.tokens[0] ^ 1,) + rec.tokens[1:]
+        return True
 
 
 class BlockManager:
@@ -441,7 +514,15 @@ class BlockManager:
         if hs is None or not self.free:
             return None
         rec = hs.get(h)
-        if rec is None or rec.tokens != blk:
+        if rec is None:
+            return None
+        if not hs.verify(h):
+            # integrity stamp mismatch (bit rot, bad DMA, injected fault):
+            # drop the record and let the prefix cold-re-prefill — bad KV
+            # is never restored into the device tier
+            hs.drop_corrupt(h)
+            return None
+        if rec.tokens != blk:
             return None
         b = self.free.pop()
         self.hash_index[h] = b
@@ -649,7 +730,26 @@ class BlockManager:
         self.reserved.clear()
 
     # ------------------------------------------------------------------
-    def check_invariants(self) -> None:
+    def check_invariants(self, *, failed: bool = False) -> None:
+        if failed:
+            # I7: a FAILED replica owns nothing.  Its in-flight work is
+            # lost, its blocks are gone — every block must be back on the
+            # free list with no residual registrations, queued transfers
+            # or host-store pins (a leak here is permanent: the replica
+            # never steps again to drain anything).
+            assert not self.tables, f"FAILED replica owns tables {self.tables}"
+            assert not self.refcount, "FAILED replica holds refcounts"
+            assert not self.cached, "FAILED replica holds cached blocks"
+            assert not self.hash_index and not self.block_hash, \
+                "FAILED replica holds registrations"
+            assert not self.pending_copies, "FAILED replica owes CoW copies"
+            assert not self.pending_spills, "FAILED replica owes spills"
+            assert not self.pending_restores, "FAILED replica owes restores"
+            assert len(self.free) == self.total_blocks, \
+                (len(self.free), self.total_blocks)
+            if self.host_store is not None:
+                assert not self.host_store.pinned, \
+                    f"FAILED replica pins host records {self.host_store.pinned}"
         refs: Dict[int, int] = {}
         for t in self.tables.values():
             for b in t:
@@ -695,10 +795,18 @@ class BlockManager:
                 assert b in self.cached or b in refs, \
                     f"restore target {b} neither cached nor referenced"
             for h, rec in hs.records.items():
-                assert chain_hash(rec.parent, rec.tokens) == h, \
-                    f"host record {h:#x} chain mismatch"
-                assert len(rec.tokens) == self.block_size, \
-                    "partial block spilled"
+                if hs.verify(h):
+                    assert chain_hash(rec.parent, rec.tokens) == h, \
+                        f"host record {h:#x} chain mismatch"
+                    assert len(rec.tokens) == self.block_size, \
+                        "partial block spilled"
+                else:
+                    # a record may carry injected corruption, but never
+                    # SILENTLY: the stamp must catch it, and a pinned
+                    # record (restore in flight — its content is about to
+                    # land on the device) must always verify
+                    assert h not in hs.pinned, \
+                        f"pinned host record {h:#x} fails its checksum"
                 if h not in restoring:
                     assert h not in self.hash_index, \
                         f"hash {h:#x} live on both tiers without a restore"

@@ -212,15 +212,19 @@ class RealBackend:
                 rec.data = {f"t:{k}": v[:, i] for k, v in tpay.items()}
                 rec.data.update(
                     {f"d:{k}": v[:, i] for k, v in dpay.items()})
+                hs.seal(h)  # re-stamp the checksum over the filled pages
                 hs.stats["spilled_blocks"] += 1
             hs.stats["spill_s"] += time.perf_counter() - t0
         restores = self.bm.drain_pending_restores()
         if restores:
             t0 = time.perf_counter()
-            recs = [(b, hs.take(h)) for h, b in restores]
             # a queued restore's record is pinned from match to drain, so
-            # it cannot have been evicted from the host tier in between —
-            # and its payload landed in the spill drain above at the latest
+            # it cannot have been evicted from the host tier in between, and
+            # the fault injector never corrupts pinned records — so a
+            # checksum mismatch here is real memory corruption, not noise
+            assert all(hs.verify(h) for h, _ in restores), \
+                "pinned host record fails its checksum at restore drain"
+            recs = [(b, hs.take(h)) for h, b in restores]
             assert all(r is not None and r.data for _, r in recs), \
                 "pinned host record lost before its restore drained"
             ids = [b for b, _ in recs]

@@ -130,6 +130,8 @@ class Metrics:
     prefix: dict = field(default_factory=dict)  # prefix-cache counters
     host: dict = field(default_factory=dict)    # host KV tier counters
                                                 # (spills/restores/latency)
+    fault_injected_s: float = 0.0  # extra seconds injected by straggler
+                                   # fault windows (latency multiplier)
 
     def record_finish(self, seq: Sequence, now: float) -> None:
         """Stamp a completed sequence into the per-request stats."""
@@ -199,6 +201,8 @@ class Metrics:
                 "host_spill_s": round(self.host.get("spill_s", 0.0), 4),
                 "host_restore_s": round(self.host.get("restore_s", 0.0), 4),
             })
+        if self.fault_injected_s:
+            out["fault_injected_s"] = round(self.fault_injected_s, 4)
         return out
 
     def _base_summary(self) -> dict:

@@ -208,7 +208,9 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                       router_kwargs: Optional[dict] = None,
                       shed_factor: Optional[float] = None,
                       autoscale: Optional[dict] = None,
-                      disaggregate: Optional[dict] = None) -> ServingCluster:
+                      disaggregate: Optional[dict] = None,
+                      fault_plan=None,
+                      retry_policy=None) -> ServingCluster:
     """N independent simulated replicas behind one router + control plane.
 
     Every replica gets its OWN scheduler, planner, elastic memory manager
@@ -229,7 +231,14 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
     ``margin_s`` (pricer hysteresis) and ``decode_autoscale`` (kwargs for
     :class:`DecodePoolAutoscaler`).  Arrivals land on the prefill pool
     (which must run chunked prefill) and migrate to a decode replica
-    after prefill whenever the priced KV handoff beats staying put."""
+    after prefill whenever the priced KV handoff beats staying put.
+
+    ``fault_plan`` (a :class:`~repro.serving.faults.FaultPlan` or a spec
+    string for :meth:`FaultPlan.parse`) arms a seeded
+    :class:`~repro.serving.faults.FaultInjector` (seed = ``cfg.seed``, so
+    the same plan + seed reproduces the exact same fault schedule);
+    ``retry_policy`` overrides the crash-recovery
+    :class:`~repro.serving.faults.RetryPolicy`."""
 
     def factory(i: int) -> ServingEngine:
         return build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
@@ -258,6 +267,13 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
         da = disaggregate.get("decode_autoscale")
         if da is not None:
             decode_autoscaler = DecodePoolAutoscaler(**da)
+    faults = None
+    if fault_plan is not None:
+        from .faults import FaultInjector, FaultPlan
+        plan = (FaultPlan.parse(fault_plan) if isinstance(fault_plan, str)
+                else fault_plan)
+        if not plan.empty:
+            faults = FaultInjector(plan, seed=cfg.seed)
     engines = [factory(i) for i in range(n_replicas)]
     control = ControlPlane(admission=admission, autoscaler=autoscaler)
     if disaggregate is not None:
@@ -267,4 +283,5 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                                                **(router_kwargs or {})),
                           control=control, replica_factory=factory,
                           roles=roles, pricer=pricer,
-                          decode_autoscaler=decode_autoscaler)
+                          decode_autoscaler=decode_autoscaler,
+                          faults=faults, retry_policy=retry_policy)

@@ -1,0 +1,514 @@
+"""Fault tolerance: deterministic injection, lossless crash recovery,
+host-KV integrity and the chaos determinism contract.
+
+The golden e2e here is the chaos gate: a mid-run replica crash must lose
+ZERO requests — every in-flight request re-queues through the router with
+backoff, re-prefills from its prompt, and finishes with a committed token
+stream byte-identical to the fault-free run.  Invariants I1-I7 stay clean,
+including I7 (a FAILED replica owns no blocks, no pinned host records and
+no pending transfers).
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving.cluster import FAILED, ServingCluster
+from repro.serving.controlplane import FailureDetector
+from repro.serving.costmodel import RTX_4090
+from repro.serving.faults import (CorruptionFault, CrashFault, FaultInjector,
+                                  FaultPlan, HandoffFault, RetryPolicy,
+                                  StragglerFault)
+from repro.serving.kv_cache import (BlockManager, HostKVStore,
+                                    record_checksum)
+from repro.serving.simulator import SimConfig, build_sim_cluster
+from repro.serving.workload import (mixed_requests, poisson_requests,
+                                    session_requests)
+
+BS = 4
+
+
+def _cfg(**kw):
+    kw.setdefault("max_batch", 256)
+    return SimConfig(target=configs.get_config("paper-7b"),
+                     draft=configs.get_draft_config("paper-7b"),
+                     hw=RTX_4090, seed=0, **kw)
+
+
+def _sha(m):
+    stream = sorted((r.req_id, r.tokens) for r in m.requests)
+    return hashlib.sha256(repr(stream).encode()).hexdigest()[:16]
+
+
+def _check_all(cl: ServingCluster):
+    for i, eng in enumerate(cl.replicas):
+        eng.scheduler.bm.check_invariants(failed=cl.state[i] == FAILED)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation + spec grammar
+# ---------------------------------------------------------------------------
+
+
+def test_plan_validation_rejects_bad():
+    with pytest.raises(ValueError):
+        FaultPlan(crashes=(CrashFault(0, -1.0),))
+    with pytest.raises(ValueError):
+        FaultPlan(crashes=(CrashFault(-1, 1.0),))
+    with pytest.raises(ValueError):          # a crashed replica stays dead
+        FaultPlan(crashes=(CrashFault(0, 1.0), CrashFault(0, 2.0)))
+    with pytest.raises(ValueError):
+        FaultPlan(stragglers=(StragglerFault(0, 2.0, 1.0, 2.0),))
+    with pytest.raises(ValueError):
+        FaultPlan(stragglers=(StragglerFault(0, 1.0, 2.0, 0.5),))
+    with pytest.raises(ValueError):
+        FaultPlan(handoffs=(HandoffFault(1.0, 2.0, mode="explode"),))
+    with pytest.raises(ValueError):
+        FaultPlan(corruptions=(CorruptionFault(0, 1.0, count=0),))
+    # two crashes on DIFFERENT replicas are fine
+    FaultPlan(crashes=(CrashFault(0, 1.0), CrashFault(1, 2.0)))
+
+
+def test_plan_parse_grammar():
+    plan = FaultPlan.parse("crash:1@2.5;straggle:0@1..3x4;"
+                           "handoff:timeout@2..4#2;corrupt:0@5#3")
+    assert plan.crashes == (CrashFault(1, 2.5),)
+    assert plan.stragglers == (StragglerFault(0, 1.0, 3.0, 4.0),)
+    assert plan.handoffs == (HandoffFault(2.0, 4.0, mode="timeout", count=2),)
+    assert plan.corruptions == (CorruptionFault(0, 5.0, count=3),)
+    assert not plan.empty
+    assert FaultPlan.parse("").empty
+    with pytest.raises(ValueError):
+        FaultPlan.parse("explode:0@1")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("crash:0")          # missing @time
+    with pytest.raises(ValueError):
+        FaultPlan.parse("crash:0@1;crash:0@2")  # validated after parse too
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_retry_backoff_schedule():
+    rp = RetryPolicy(budget=3, backoff_base=0.05, backoff_cap=1.0)
+    assert rp.backoff(1) == pytest.approx(0.05)
+    assert rp.backoff(2) == pytest.approx(0.10)
+    assert rp.backoff(3) == pytest.approx(0.20)
+    assert rp.backoff(10) == 1.0            # capped
+    assert not rp.exhausted(3)
+    assert rp.exhausted(4)
+    with pytest.raises(ValueError):
+        rp.backoff(0)                       # attempts are 1-based
+    with pytest.raises(ValueError):
+        RetryPolicy(budget=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_base=0.0)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector determinism
+# ---------------------------------------------------------------------------
+
+
+def test_injector_timed_events_and_multiplier():
+    plan = FaultPlan.parse("crash:1@2;corrupt:0@1;"
+                           "straggle:0@1..3x2;straggle:0@2..4x3")
+    inj = FaultInjector(plan, seed=0)
+    assert [(t, k) for t, k, _ in inj.timed_events()] == [
+        (1.0, "corrupt"), (2.0, "crash")]
+    assert inj.latency_multiplier(0, 0.5) == 1.0
+    assert inj.latency_multiplier(0, 1.5) == 2.0
+    assert inj.latency_multiplier(0, 2.5) == 6.0   # windows compound
+    assert inj.latency_multiplier(0, 3.5) == 3.0
+    assert inj.latency_multiplier(1, 2.5) == 1.0   # other replica untouched
+
+
+def test_injector_handoff_budget_consumed():
+    plan = FaultPlan.parse("handoff:fail@1..5#2")
+    inj = FaultInjector(plan, seed=0)
+    assert inj.next_handoff_fault(0.5) is None     # outside the window
+    assert inj.next_handoff_fault(1.5) is not None
+    assert inj.next_handoff_fault(2.0) is not None
+    assert inj.next_handoff_fault(3.0) is None     # budget drained
+    assert inj.stats["handoff_faults"] == 2
+    # count <= 0 is unbounded
+    inj2 = FaultInjector(FaultPlan.parse("handoff:fail@1..5"), seed=0)
+    assert all(inj2.next_handoff_fault(2.0) for _ in range(10))
+
+
+def test_injector_corruption_seeded():
+    def store():
+        hs = HostKVStore(16)
+        for h in range(8):
+            hs.put(h, h - 1 if h else 0, (h, h + 1))
+        hs.pin(3)
+        return hs
+
+    fault = CorruptionFault(0, 1.0, count=4)
+    h1, h2 = store(), store()
+    assert FaultInjector(FaultPlan(), seed=7).corrupt_host_records(
+        h1, fault) == 4
+    FaultInjector(FaultPlan(), seed=7).corrupt_host_records(h2, fault)
+    bad1 = {h for h in h1.records if not h1.verify(h)}
+    bad2 = {h for h in h2.records if not h2.verify(h)}
+    assert bad1 == bad2 and len(bad1) == 4         # seeded, reproducible
+    assert 3 not in bad1                           # pinned: never corrupted
+
+
+# ---------------------------------------------------------------------------
+# FailureDetector
+# ---------------------------------------------------------------------------
+
+
+def test_failure_detector_semantics():
+    det = FailureDetector(timeout_s=0.5)
+    det.heartbeat(0, 1.0)
+    det.heartbeat(0, 0.5)                          # stale: ignored
+    assert det.silent_for(0, 1.4) == pytest.approx(0.4)
+    assert det.suspects(1.4, [0]) == []
+    assert det.suspects(1.6, [0]) == [0]
+    # a never-seen replica's birth counts as its first heartbeat
+    assert det.silent_for(9, 3.0) == 0.0
+    assert det.suspects(3.0, [9]) == []
+    assert det.suspects(3.6, [9]) == [9]
+    with pytest.raises(ValueError):
+        FailureDetector(timeout_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Golden chaos e2e: lossless crash recovery (tier-1 gate)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_recovery_streams_identical():
+    """Mid-run crash: every affected request is re-dispatched and the
+    committed streams are byte-identical to the fault-free run."""
+    reqs = poisson_requests(20, 120, dataset="alpaca", seed=1)
+    base = build_sim_cluster(_cfg(), 2, "nightjar").run(list(reqs))
+    assert len(base.requests) == 120
+
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", fault_plan="crash:1@2.0")
+    m = cl.run(list(reqs))
+
+    assert len(m.requests) == 120                  # zero dropped
+    assert _sha(m) == _sha(base)                   # byte-identical streams
+    assert len(m.crashes) == 1
+    c = m.crashes[0]
+    assert c["replica"] == 1 and c["lost"] > 0
+    assert c["detected_at"] >= c["at"] + cl.control.detector.timeout_s
+    assert c["recovered_at"] >= c["detected_at"]
+    assert m.requeues == c["lost"] and m.retries >= m.requeues
+    assert m.failed_requests == []
+    assert m.mttd is not None and m.mttd > 0
+    assert m.mttr is not None and m.mttr >= m.mttd
+    assert m.recovery_seconds == pytest.approx(m.mttr)
+    # the crashed replica is FAILED and a replacement was spawned
+    assert cl.state[1] == FAILED
+    assert len(cl.replicas) == 3
+    _check_all(cl)                                 # I1-I7, incl. failed=True
+    s = m.summary()
+    assert s["faults"]["requests_lost"] == c["lost"]
+    assert s["faults"]["failed_requests"] == 0
+    assert s["faults"]["mttr_s"] == pytest.approx(m.mttr, abs=1e-4)
+
+
+def test_crash_run_deterministic():
+    """Two runs of the same plan + seed are byte-identical."""
+    reqs = poisson_requests(20, 80, dataset="alpaca", seed=1)
+    runs = [build_sim_cluster(_cfg(), 2, "nightjar",
+                              fault_plan="crash:0@1.5").run(list(reqs))
+            for _ in range(2)]
+    assert _sha(runs[0]) == _sha(runs[1])
+    assert runs[0].summary() == runs[1].summary()
+
+
+def test_empty_plan_is_faultfree():
+    """An empty fault plan leaves the event loop byte-identical to no
+    plan at all (the golden-preserving determinism contract)."""
+    reqs = poisson_requests(20, 60, dataset="alpaca", seed=1)
+    m0 = build_sim_cluster(_cfg(), 2, "nightjar").run(list(reqs))
+    m1 = build_sim_cluster(_cfg(), 2, "nightjar", fault_plan="").run(
+        list(reqs))
+    assert m0.summary() == m1.summary()
+
+
+def test_crash_at_every_step_soak():
+    """Crashing at any point of the run never drops a request and never
+    changes the committed streams."""
+    reqs = poisson_requests(25, 60, dataset="alpaca", seed=2)
+    base = build_sim_cluster(_cfg(), 2, "nightjar").run(list(reqs))
+    sha0 = _sha(base)
+    for t in np.arange(0.25, 3.1, 0.4):
+        cl = build_sim_cluster(_cfg(), 2, "nightjar",
+                               fault_plan=f"crash:1@{t:.2f}")
+        m = cl.run(list(reqs))
+        assert len(m.requests) == 60, f"dropped requests at crash t={t}"
+        assert _sha(m) == sha0, f"stream drift at crash t={t}"
+        assert m.failed_requests == []
+        _check_all(cl)
+
+
+def test_retry_budget_exhaustion_surfaces_failed():
+    """With a zero retry budget every crash-lost request is surfaced as
+    failed in metrics — never silently dropped."""
+    reqs = poisson_requests(20, 80, dataset="alpaca", seed=1)
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", fault_plan="crash:1@2.0",
+                           retry_policy=RetryPolicy(budget=0))
+    m = cl.run(list(reqs))
+    lost = m.crashes[0]["lost"]
+    assert lost > 0
+    assert len(m.failed_requests) == lost
+    assert m.requeues == 0
+    assert len(m.requests) == 80 - lost            # accounted, not dropped
+    assert {f["req_id"] for f in m.failed_requests}.isdisjoint(
+        {r.req_id for r in m.requests})
+    assert m.summary()["faults"]["failed_requests"] == lost
+    _check_all(cl)
+
+
+def test_failed_replica_never_routed():
+    """After the crash the FAILED replica receives no further work at any
+    fallback tier (I7 stays clean through the rest of the run)."""
+    reqs = poisson_requests(20, 100, dataset="alpaca", seed=3)
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", fault_plan="crash:0@1.0")
+    m = cl.run(list(reqs))
+    dead = cl.replicas[0]
+    assert dead.failed and cl.state[0] == FAILED
+    assert not dead.scheduler.num_running and not dead.scheduler.waiting
+    bm = dead.scheduler.bm
+    assert len(bm.free) == bm.total_blocks
+    bm.check_invariants(failed=True)
+    assert len(m.requests) == 100
+
+
+# ---------------------------------------------------------------------------
+# I7: force_fail releases everything (crash-release accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_force_fail_releases_everything():
+    """Killing a replica mid-flight with prefix caching + host offload in
+    play leaves zero owned blocks, zero pinned host records and empty
+    transfer queues (invariant I7)."""
+    cfg = _cfg(chunk_tokens=256, prefix_caching=True, kv_offload=True,
+               num_blocks=160, host_kv_blocks=512)
+    cl = build_sim_cluster(cfg, 2, "nightjar", router="affinity")
+    reqs = session_requests(8, rate_qps=2.0, seed=2)
+    for r in reqs:
+        cl.submit(r, now=r.arrival)
+    # step both replicas into a busy mid-run state
+    for _ in range(60):
+        evs = [(e.peek_next_event(), i) for i, e in enumerate(cl.replicas)]
+        evs = [(t, i) for t, i in evs if t is not None]
+        if not evs:
+            break
+        _, i = min(evs)
+        cl.replicas[i].step()
+    eng = max(cl.replicas, key=lambda e: e.scheduler.num_running)
+    lost = eng.force_fail()
+    assert eng.failed
+    assert [r.req_id for r in lost] == sorted(r.req_id for r in lost)
+    bm = eng.scheduler.bm
+    assert len(bm.free) == bm.total_blocks
+    assert not bm.pending_spills and not bm.pending_restores
+    assert not bm.pending_copies
+    assert not bm.host_store.pinned
+    bm.check_invariants(failed=True)
+    # lost requests re-run from scratch on the OTHER replica just fine
+    other = next(e for e in cl.replicas if e is not eng)
+    for r in lost:
+        other.submit(r)
+    while other.peek_next_event() is not None:
+        other.step()
+    other.scheduler.bm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_injects_latency_streams_unchanged():
+    reqs = poisson_requests(20, 60, dataset="alpaca", seed=1)
+    base = build_sim_cluster(_cfg(), 2, "nightjar").run(list(reqs))
+    cl = build_sim_cluster(_cfg(), 2, "nightjar",
+                           fault_plan="straggle:0@0.5..2.5x4")
+    m = cl.run(list(reqs))
+    assert cl.replicas[0].metrics.fault_injected_s > 0
+    assert cl.replicas[1].metrics.fault_injected_s == 0
+    assert len(m.requests) == 60
+    assert _sha(m) == _sha(base)                   # latency-only fault
+    inj = cl.replicas[0].metrics.fault_injected_s
+    assert cl.replicas[0].metrics.summary()["fault_injected_s"] == \
+        pytest.approx(inj, abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Handoff transfer faults (disaggregated fleets)
+# ---------------------------------------------------------------------------
+
+
+def test_handoff_fault_retry_then_abort():
+    cfg = _cfg(chunk_tokens=128, max_batch=48)
+    reqs = mixed_requests(10.0, 60, seed=3)
+    # unbounded failure window covering the whole run: every candidate
+    # handoff exhausts its retries and falls back to colocated decode
+    cl = build_sim_cluster(cfg, 4, "nightjar",
+                           disaggregate=dict(prefill=2, decode=2),
+                           fault_plan="handoff:fail@0..1e9")
+    m = cl.run(list(reqs))
+    assert len(m.requests) == 60                   # fallback loses nothing
+    assert m.handoff_aborts > 0
+    assert len(m.handoffs) == 0                    # nothing ever transferred
+    assert m.handoff_failures == m.handoff_aborts * (cl.handoff_max_retries
+                                                     + 1)
+    assert m.handoff_retries == m.handoff_aborts * cl.handoff_max_retries
+    s = m.summary()
+    assert s["disagg"]["transfer_aborts"] == m.handoff_aborts
+
+
+def test_handoff_fault_bounded_budget_is_outlasted():
+    cfg = _cfg(chunk_tokens=128, max_batch=48)
+    reqs = mixed_requests(10.0, 60, seed=3)
+    base = build_sim_cluster(cfg, 4, "nightjar",
+                             disaggregate=dict(prefill=2, decode=2))
+    mb = base.run(list(reqs))
+    cl = build_sim_cluster(cfg, 4, "nightjar",
+                           disaggregate=dict(prefill=2, decode=2),
+                           fault_plan="handoff:timeout@0..1e9#2")
+    m = cl.run(list(reqs))
+    assert len(m.requests) == 60
+    assert m.handoff_timeouts == 2                 # budget fully consumed
+    assert m.handoff_aborts == 0                   # retries outlasted it
+    assert len(m.handoffs) == len(mb.handoffs)     # same transfers land
+    assert _sha(m) == _sha(mb)
+
+
+# ---------------------------------------------------------------------------
+# Host-KV integrity: checksums, corruption, restore-time drop
+# ---------------------------------------------------------------------------
+
+
+def test_record_checksum_sensitivity():
+    data = {"k": np.arange(8, dtype=np.float32)}
+    c = record_checksum(5, (1, 2, 3), data)
+    assert c == record_checksum(5, (1, 2, 3), data)
+    assert c != record_checksum(6, (1, 2, 3), data)
+    assert c != record_checksum(5, (1, 2, 4), data)
+    bad = {"k": data["k"].copy()}
+    bad["k"][0] += 1
+    assert c != record_checksum(5, (1, 2, 3), bad)
+
+
+def test_host_store_corrupt_verify_drop():
+    hs = HostKVStore(8)
+    hs.put(1, 0, (10, 11, 12, 13))
+    assert hs.verify(1)
+    assert hs.corrupt(1)
+    assert not hs.verify(1)
+    hs.put(2, 1, (20, 21))
+    hs.pin(2)
+    assert not hs.corrupt(2)                       # pinned: refused
+    assert hs.verify(2)
+    hs.drop_corrupt(1)
+    assert 1 not in hs.records
+    assert hs.stats["corrupt_dropped"] == 1
+    assert not hs.verify(1)                        # gone = not verifiable
+
+
+def test_corrupt_record_dropped_on_restore():
+    """A corrupted host record is detected by its checksum at restore
+    time, dropped (counted), and the prefix cold-re-prefills instead of
+    serving poisoned KV."""
+    rng = np.random.default_rng(0)
+    hs = HostKVStore(64)
+    bm = BlockManager(8, BS, prefix_caching=True, host_store=hs)
+    tokens = [int(t) for t in rng.integers(0, 1000, size=3 * BS)]
+    bm.allocate(0, len(tokens))
+    bm.register_prefix(0, tokens, len(tokens))
+    bm.release(0)
+    bm.allocate(1, 8 * BS)                         # evict all 3 to host
+    bm.drain_pending_spills()
+    bm.release(1)
+    assert len(hs.records) == 3
+
+    victim = next(iter(hs.records))                # head of the chain walk
+    assert hs.corrupt(victim)
+    blocks, cached = bm.match_prefix(tokens)
+    assert hs.stats["corrupt_dropped"] >= 1
+    assert victim not in hs.records                # dropped, not served
+    assert cached < len(tokens)                    # chain walk broke early
+    bm.check_invariants()
+    # cold re-admission of the un-cached tail works as usual
+    if blocks:
+        bm.share(2, blocks, cached)
+        bm.grow_to(2, len(tokens))
+    else:
+        bm.allocate(2, len(tokens))
+    bm.register_prefix(2, tokens, len(tokens))
+    bm.check_invariants()
+
+
+def test_corruption_fault_e2e_streams_unchanged():
+    cfg = _cfg(chunk_tokens=256, prefix_caching=True, kv_offload=True,
+               num_blocks=192, host_kv_blocks=512)
+    reqs = session_requests(10, rate_qps=1.0, seed=2)
+    base = build_sim_cluster(cfg, 2, "nightjar", router="affinity")
+    mb = base.run(list(reqs))
+    cl = build_sim_cluster(cfg, 2, "nightjar", router="affinity",
+                           fault_plan="corrupt:0@20#8;corrupt:1@20#8")
+    m = cl.run(list(reqs))
+    assert cl.faults.stats["corrupted_records"] > 0
+    assert len(m.requests) == len(mb.requests)
+    assert _sha(m) == _sha(mb)                     # corruption never served
+    _check_all(cl)
+
+
+# ---------------------------------------------------------------------------
+# n/a-by-contract: recovery metrics without faults
+# ---------------------------------------------------------------------------
+
+
+def test_mttr_na_when_no_faults():
+    reqs = poisson_requests(20, 40, dataset="alpaca", seed=1)
+    m = build_sim_cluster(_cfg(), 2, "nightjar").run(list(reqs))
+    assert m.mttd is None and m.mttr is None
+    assert m.recovery_seconds is None
+    assert "faults" not in m.summary()             # nothing fired: no section
+
+
+# ---------------------------------------------------------------------------
+# CLI seed threading
+# ---------------------------------------------------------------------------
+
+
+def test_serve_cli_fault_plan(capsys, monkeypatch):
+    """`--fault-plan` forces the cluster path even at --replicas 1 and the
+    summary carries the fault section; same spec + seed reproduces."""
+    import json
+
+    from repro.launch import serve
+
+    argv = ["serve", "--tier", "sim", "--arch", "paper-7b",
+            "--hw", "rtx-4090", "--rate", "20", "--requests", "60",
+            "--dataset", "alpaca", "--replicas", "2", "--seed", "0",
+            "--fault-plan", "crash:1@1.5"]
+    outs = []
+    for _ in range(2):
+        monkeypatch.setattr("sys.argv", list(argv))
+        serve.main()
+        outs.append(json.loads(capsys.readouterr().out))
+    assert outs[0] == outs[1]
+    assert outs[0]["faults"]["crashes"] == 1
+    assert outs[0]["faults"]["failed_requests"] == 0
+
+
+def test_serve_cli_rejects_bad_plan(monkeypatch):
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv", ["serve", "--tier", "sim",
+                                     "--fault-plan", "crash:0@-1"])
+    with pytest.raises(SystemExit):
+        serve.main()

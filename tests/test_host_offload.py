@@ -299,6 +299,7 @@ def _flush(bm, pool):
         for i, (_, h) in enumerate(spills):
             hs.records[h].data = {"k": np.asarray(kpay[:, i]),
                                   "v": np.asarray(vpay[:, i])}
+            hs.seal(h)   # re-stamp the checksum over the filled pages
     restores = bm.drain_pending_restores()
     if restores:
         recs = [hs.take(h) for h, _ in restores]
