@@ -73,8 +73,9 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
                 dataset: str = "alpaca", max_batch: int = 256, seed: int = 0,
                 chunk_tokens: int = 0, prefix_caching: bool = False,
                 requests=None, trace=None, router_kwargs=None,
-                shed_factor=None, autoscale=None, disaggregate=None,
-                fault_plan=None):
+                shed_factor=None, class_weights=None, autoscale=None,
+                disaggregate=None, fault_plan=None, brownout=None,
+                cancels=None, num_blocks=None, enable_offload=True):
     """Run one cluster cell on the simulated tier; rate is the TOTAL fleet
     arrival rate.  ``requests``/``trace`` override the Poisson stream;
     ``shed_factor``/``autoscale`` enable the control-plane admission and
@@ -85,11 +86,14 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
                     seed=seed, chunk_tokens=chunk_tokens,
-                    prefix_caching=prefix_caching)
+                    prefix_caching=prefix_caching, num_blocks=num_blocks,
+                    enable_offload=enable_offload)
     cl = build_sim_cluster(cfg, n_replicas, policy, router=router,
                            router_kwargs=router_kwargs,
-                           shed_factor=shed_factor, autoscale=autoscale,
-                           disaggregate=disaggregate, fault_plan=fault_plan)
+                           shed_factor=shed_factor,
+                           class_weights=class_weights, autoscale=autoscale,
+                           disaggregate=disaggregate, fault_plan=fault_plan,
+                           brownout=brownout, cancels=cancels)
     if requests is not None:
         reqs = requests
     elif trace is not None:

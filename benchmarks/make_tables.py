@@ -233,6 +233,56 @@ def chaos_table():
     print("\n".join(out))
 
 
+def surge_table():
+    """Render the overload-surge gate grid from `run.py --only surge`.
+
+    Per-class SLO-attainment cells follow the n/a-by-contract rule: a
+    class with zero admitted-and-finished deadline samples renders as
+    ``n/a``, never a perfect 0 or 1.  The brownout stage line summarises
+    the ladder timeline (every observable transition, in order)."""
+    path = bench_path("BENCH_surge.json")
+    if not os.path.exists(path):
+        print("BENCH_surge.json: missing (run benchmarks.run --only surge)")
+        return
+    data = json.load(open(path))
+    tr = data.get("trace", {})
+    out = [f"\n### Overload surge gate ({data.get('replicas')} replicas, "
+           f"dataset={data.get('dataset')}, "
+           f"{tr.get('base_qps')}qps x{tr.get('surge_mult')} plateau "
+           f"{tr.get('surge_s')}s, n={data.get('requests')}, "
+           f"{data.get('cancel_schedule')} seeded cancellations)\n"]
+    out.append("| cell | finished | shed | cancelled | expired "
+               "| int att (offered) | batch att | be att | goodput tok/s "
+               "| ladder |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for name, r in sorted(data.get("grid", {}).items()):
+        pc = r.get("per_class", {})
+
+        def att(cls):
+            b = pc.get(cls, {})
+            v = b.get("slo_attainment")
+            return "n/a" if v is None else format(v, ".3f")
+
+        ia = r.get("interactive_offered_attainment")
+        out.append(
+            f"| {name} | {r.get('finished', 0)}/{data.get('requests')} "
+            f"| {r.get('shed', 0)} | {r.get('cancelled', 0)} "
+            f"| {r.get('expired', 0)} "
+            f"| {'n/a' if ia is None else format(ia, '.3f')} "
+            f"| {att('batch')} | {att('best_effort')} "
+            f"| {fmt_num(r.get('goodput_tok_s', 0.0), r.get('finished', 0))} "
+            f"| {r.get('brownout_transitions', 0)} transitions |")
+    tl = data.get("grid", {}).get("brownout", {}).get("brownout_timeline", [])
+    if tl:
+        out.append("\nbrownout ladder: "
+                   + " -> ".join(f"{e['to']}@{e['at']:.1f}s" for e in tl))
+    acc = data.get("acceptance", {})
+    if acc:
+        out.append("\nacceptance: "
+                   + "; ".join(f"{k}={v}" for k, v in sorted(acc.items())))
+    print("\n".join(out))
+
+
 def main():
     for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
         cells = [fix_artifact(c) for c in load(fname)]
@@ -247,6 +297,7 @@ def main():
     sessions_table()
     disagg_table()
     chaos_table()
+    surge_table()
 
 
 if __name__ == "__main__":

@@ -712,6 +712,137 @@ def chaos_grid(csv: CSV, fast: bool):
         json.dump(results, f, indent=1)
 
 
+def surge_grid(csv: CSV, fast: bool):
+    """Surge gate: 3x sustained overload with mixed priority classes and a
+    seeded client-cancellation storm, brownout ladder ON vs OFF (2
+    replicas, alpaca lengths, per-class SLOs/deadlines).
+
+    Three cells on the SAME seeded workload: ``base`` (no cancellations —
+    the stream-identity reference), ``no_brownout`` (storm + classic
+    class-blind admission) and ``brownout`` (same storm + class-weighted
+    admission + the fleet brownout ladder: gamma->0, draft offload, a
+    best_effort output cap, class-ordered shedding).  The plateau is
+    deliberately past fleet capacity, so the only question is HOW service
+    degrades.
+
+    Machine-checked acceptance flags (CI asserts all of them): brownout
+    strictly beats no-brownout on interactive-class offered-SLO attainment
+    AND fleet goodput; every request in every cell is accounted per class
+    (finished+shed+cancelled+expired+failed == offered); invariants I1-I8
+    clean on every replica post-run; surviving committed streams
+    byte-identical to the cancellation-free run; and both the
+    speculation-off and draft-offload rungs observably fired.  Persists
+    BENCH_surge.json."""
+    from repro.serving.cluster import FAILED
+    from repro.serving.workload import (cancellation_storm, surge_requests,
+                                        surge_trace)
+
+    base_s, surge_s, recover_s = (6.0, 14.0, 8.0) if fast else \
+        (8.0, 24.0, 12.0)
+    base_rate, mult = 60.0, 3.0
+    n = int(base_rate * (base_s + recover_s) + base_rate * mult * surge_s)
+    trace = surge_trace(base=base_rate, surge_mult=mult, base_s=base_s,
+                        surge_s=surge_s, recover_s=recover_s, seed=2)
+    reqs = surge_requests(n, trace=trace, dataset="alpaca", seed=1)
+    storm = dict(frac=0.12, start=base_s + 2.0, end=base_s + surge_s)
+    cancels = cancellation_storm(reqs, seed=4, **storm)
+    weights = {"interactive": 1.5, "batch": 0.8, "best_effort": 0.4}
+    bo = dict(slo=0.5, enter_factor=1.5, exit_factor=0.8,
+              kv_low_frac=0.10, kv_calm_frac=0.30, best_effort_cap=32,
+              cooldown_s=1.0, check_interval_s=0.25)
+    results = {"replicas": 2, "dataset": "alpaca", "requests": n,
+               "trace": {"base_qps": base_rate, "surge_mult": mult,
+                         "base_s": base_s, "surge_s": surge_s,
+                         "recover_s": recover_s},
+               "storm": storm, "cancel_schedule": len(cancels),
+               "class_weights": weights, "brownout_cfg": bo, "grid": {}}
+    cells = (
+        ("base", dict(shed_factor=1.5)),
+        ("no_brownout", dict(shed_factor=1.5, cancels=cancels)),
+        ("brownout", dict(shed_factor=1.5, class_weights=weights,
+                          cancels=cancels, brownout=bo)),
+    )
+
+    def offered_att(per_class, cls):
+        """SLO attainment over the class's offered load: shed/expired/
+        failed count as misses, client cancels are excluded (neither met
+        nor missed).  None without samples."""
+        b = per_class.get(cls)
+        if b is None:
+            return None
+        denom = b["slo_samples"] + b["shed"] + b["expired"] + b["failed"]
+        return b["slo_met"] / denom if denom else None
+
+    toks = {}
+    for name, kw in cells:
+        t0 = time.perf_counter()
+        m, cl = run_cluster("7b", 2, "nightjar", router="jsq",
+                            max_batch=256, requests=reqs, **kw)
+        wall = (time.perf_counter() - t0) * 1e6
+        toks[name] = {r.req_id: r.tokens for r in m.requests}
+        per_class = m.class_summary()
+        inv_ok = True
+        try:
+            for i, e in enumerate(cl.replicas):
+                e.scheduler.bm.check_invariants(
+                    failed=cl.state[i] == FAILED)
+        except AssertionError:
+            inv_ok = False
+        ia = offered_att(per_class, "interactive")
+        row = {
+            "p50_ttft_s": m.ttft_percentile(0.5),
+            "p99_ttft_s": m.ttft_percentile(0.99),
+            "slo_attainment": m.slo_attainment,
+            "goodput_tok_s": m.goodput,
+            "throughput_tok_s": m.throughput,
+            "finished": len(m.requests),
+            "shed": m.shed_count,
+            "cancelled": len(m.cancelled),
+            "expired": len(m.expired),
+            "failed": len(m.failed_requests),
+            "per_class": per_class,
+            "interactive_offered_attainment": ia,
+            "brownout_transitions": len(m.brownout_events),
+            "brownout_timeline": m.brownout_events,
+            "invariants_clean": inv_ok,
+        }
+        results["grid"][name] = row
+        csv.add(f"surge.{name}", wall,
+                f"finished={row['finished']}/{n};"
+                f"shed={row['shed']};cancelled={row['cancelled']};"
+                f"expired={row['expired']};"
+                f"interactive_att={'n/a' if ia is None else f'{ia:.3f}'};"
+                f"goodput={row['goodput_tok_s']:.1f}tok/s;"
+                f"brownout_stages={len(row['brownout_timeline'])}")
+    g = results["grid"]
+    # survivors of the storm run must commit the exact streams the
+    # cancellation-free run committed (intersection of finished ids;
+    # brownout cell excluded — its best_effort output cap intentionally
+    # clips streams)
+    common = set(toks["base"]) & set(toks["no_brownout"])
+    fired = {e["to"] for e in g["brownout"]["brownout_timeline"]}
+    ia_bo = g["brownout"]["interactive_offered_attainment"]
+    ia_nb = g["no_brownout"]["interactive_offered_attainment"]
+    results["acceptance"] = {
+        "interactive_attainment_improves": (
+            ia_bo is not None and ia_nb is not None and ia_bo > ia_nb),
+        "goodput_improves": (g["brownout"]["goodput_tok_s"]
+                             > g["no_brownout"]["goodput_tok_s"]),
+        "all_accounted": all(
+            sum(b["offered"] for b in c["per_class"].values()) == n
+            for c in g.values()),
+        "invariants_clean": all(c["invariants_clean"] for c in g.values()),
+        "streams_identical": (len(common) > 0 and all(
+            toks["base"][k] == toks["no_brownout"][k] for k in common)),
+        "stage_spec_off_fired": "spec_off" in fired,
+        "stage_draft_offload_fired": "draft_offload" in fired,
+    }
+    csv.add("surge.acceptance", 0.0,
+            ";".join(f"{k}={v}" for k, v in results["acceptance"].items()))
+    with open(bench_out("BENCH_surge.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+
 def cluster_routers(csv: CSV, fast: bool):
     """Router-policy comparison at moderate load on 2 replicas."""
     for router in ("rr", "jsq", "kv"):
@@ -1011,6 +1142,7 @@ BENCHES = {
     "control": control_grid,
     "disagg": disagg_grid,
     "chaos": chaos_grid,
+    "surge": surge_grid,
     "table3": table3_cswitch,
     "table7": table7_memops,
     "regret": appendix_regret,

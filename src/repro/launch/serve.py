@@ -136,6 +136,12 @@ def main():
                          "handoff:fail@0..5#2;corrupt:0@4.0#1' — seeded by "
                          "--seed, so the same spec + seed replays the exact "
                          "same faults (forces the cluster path)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="sim tier: arm the fleet brownout ladder "
+                         "(speculation off -> draft offload -> best_effort "
+                         "output cap -> class-ordered shedding, with "
+                         "hysteresis and cooldowns; forces the cluster "
+                         "path; pairs naturally with --shed-factor)")
     args = ap.parse_args()
 
     if args.kv_offload and args.prefix_caching != "on":
@@ -144,6 +150,9 @@ def main():
     if args.fault_plan is not None and args.tier != "sim":
         ap.error("--fault-plan runs on the simulated tier only (the "
                  "injector is driven by the shared virtual clock)")
+    if args.brownout and args.tier != "sim":
+        ap.error("--brownout runs on the simulated tier only (the ladder "
+                 "is driven by the shared virtual clock)")
 
     from .. import configs
 
@@ -225,14 +234,19 @@ def main():
                 fault_plan = FaultPlan.parse(args.fault_plan)
             except ValueError as e:
                 ap.error(f"--fault-plan: {e}")
+        brownout = None
+        if args.brownout:
+            brownout = dict(slo=args.slo if args.slo else 1.0)
         if (args.replicas > 1 or args.autoscale or args.shed_factor > 0
-                or disaggregate is not None or fault_plan is not None):
+                or disaggregate is not None or fault_plan is not None
+                or brownout is not None):
             autoscale = (dict(min_replicas=1, max_replicas=args.replicas)
                          if args.autoscale else None)
             cluster = build_sim_cluster(
                 cfg, args.replicas, args.policy, router=args.router,
                 shed_factor=args.shed_factor or None, autoscale=autoscale,
-                disaggregate=disaggregate, fault_plan=fault_plan)
+                disaggregate=disaggregate, fault_plan=fault_plan,
+                brownout=brownout)
             metrics = cluster.run(reqs)
         else:
             engine = build_sim_engine(cfg, args.policy)

@@ -51,7 +51,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
-from .controlplane import ControlPlane, DecodePoolAutoscaler, HandoffPricer
+from .controlplane import (BrownoutController, ControlPlane,
+                           DecodePoolAutoscaler, HandoffPricer)
 from .engine import ServingEngine
 from .faults import FaultInjector, RetryPolicy
 from .request import (Metrics, Request, RequestStats, goodput_of, percentile,
@@ -94,6 +95,8 @@ class ClusterMetrics:
     requeues: int = 0                 # crashed requests re-submitted
     retries: int = 0                  # retry attempts scheduled
     failed_requests: List[dict] = field(default_factory=list)  # budget spent
+    # overload lifecycle (brownout ladder + request cancellation)
+    brownout_events: List[dict] = field(default_factory=list)
 
     @property
     def total_tokens(self) -> int:
@@ -169,6 +172,51 @@ class ClusterMetrics:
     @property
     def shed_count(self) -> int:
         return len(self.shed)
+
+    @property
+    def cancelled(self) -> List[dict]:
+        """Client-cancelled requests across the fleet."""
+        return [c for m in self.per_replica for c in m.cancelled]
+
+    @property
+    def expired(self) -> List[dict]:
+        """Deadline-reaped requests across the fleet."""
+        return [e for m in self.per_replica for e in m.expired]
+
+    def class_summary(self) -> Dict[str, dict]:
+        """Per-priority-class lifecycle accounting: every offered request
+        lands in exactly one terminal bucket (finished / shed / cancelled /
+        expired / failed), plus per-class TTFT-SLO attainment of finished
+        traffic (None when the class carries no deadline samples — n/a by
+        contract, never a fake-perfect ratio)."""
+        classes: Dict[str, dict] = {}
+
+        def bucket(cls: str) -> dict:
+            return classes.setdefault(cls, {
+                "finished": 0, "shed": 0, "cancelled": 0, "expired": 0,
+                "failed": 0, "offered": 0,
+                "slo_samples": 0, "slo_met": 0})
+
+        for r in self.requests:
+            b = bucket(r.priority)
+            b["finished"] += 1
+            if r.slo is not None:
+                b["slo_samples"] += 1
+                b["slo_met"] += int(r.slo_met)
+        for s in self.shed:
+            bucket(s.get("priority", "interactive"))["shed"] += 1
+        for c in self.cancelled:
+            bucket(c.get("priority", "interactive"))["cancelled"] += 1
+        for e in self.expired:
+            bucket(e.get("priority", "interactive"))["expired"] += 1
+        for f in self.failed_requests:
+            bucket(f.get("priority", "interactive"))["failed"] += 1
+        for b in classes.values():
+            b["offered"] = (b["finished"] + b["shed"] + b["cancelled"]
+                            + b["expired"] + b["failed"])
+            b["slo_attainment"] = (round(b["slo_met"] / b["slo_samples"], 4)
+                                   if b["slo_samples"] else None)
+        return classes
 
     @property
     def goodput(self) -> float:
@@ -336,6 +384,21 @@ class ClusterMetrics:
                 "mttd_s": round(mttd, 4) if mttd is not None else None,
                 "mttr_s": round(mttr, 4) if mttr is not None else None,
             }
+        cancelled, expired = self.cancelled, self.expired
+        multi_class = len({r.priority for r in self.requests}
+                          | {s.get("priority", "interactive")
+                             for s in self.shed}) > 1
+        if cancelled or expired or self.brownout_events or multi_class:
+            out["cancelled"] = len(cancelled)
+            out["expired"] = len(expired)
+            out["per_class"] = self.class_summary()
+        if self.brownout_events:
+            out["brownout"] = {
+                "transitions": len(self.brownout_events),
+                "max_stage": max(e["stage"] for e in self.brownout_events),
+                "stages_entered": sorted({e["to"]
+                                          for e in self.brownout_events}),
+            }
         if any(m.prefix for m in self.per_replica):
             out["prefix_saved_tokens"] = sum(
                 m.prefix.get("saved_tokens", 0) for m in self.per_replica)
@@ -355,11 +418,18 @@ class ServingCluster:
                  decode_autoscaler: Optional[DecodePoolAutoscaler] = None,
                  faults: Optional[FaultInjector] = None,
                  retry_policy: Optional[RetryPolicy] = None,
-                 handoff_max_retries: int = 2):
+                 handoff_max_retries: int = 2,
+                 brownout: Optional[BrownoutController] = None,
+                 cancels: Optional[Sequence[tuple]] = None):
         if not replicas:
             raise ValueError("cluster needs at least one replica")
         self.replicas = list(replicas)
         self.faults = faults
+        # fleet brownout ladder + pre-scheduled client cancellations
+        # ((t, req_id) pairs — e.g. workload.cancellation_storm); both None
+        # by default, leaving the event order byte-identical to before
+        self.brownout = brownout
+        self.cancels = list(cancels) if cancels else []
         self.retry_policy = retry_policy if retry_policy is not None \
             else RetryPolicy()
         self.handoff_max_retries = handoff_max_retries
@@ -414,6 +484,7 @@ class ServingCluster:
         self.requeues = 0
         self.retries = 0
         self.failed_requests: List[dict] = []
+        self.brownout_events: List[dict] = []
         self._attempts: Dict[int, int] = {}     # req_id -> retry attempts
         self.handoff_failures = 0
         self.handoff_timeouts = 0
@@ -540,6 +611,10 @@ class ServingCluster:
             self._on_detect(payload, t)
         elif kind == "retry":
             self._on_retry(payload, t)
+        elif kind == "cancelstorm":
+            self._on_cancelstorm(payload, t)
+        elif kind == "cancel":
+            self._on_cancel(payload, t)
         else:  # pragma: no cover - defensive
             raise ValueError(f"unknown control event {kind!r}")
 
@@ -601,13 +676,17 @@ class ServingCluster:
             # budget spent: the request is surfaced as FAILED in metrics —
             # never silently dropped
             self.failed_requests.append(
-                {"req_id": req.req_id, "at": now, "attempts": attempt - 1})
+                {"req_id": req.req_id, "at": now, "attempts": attempt - 1,
+                 "priority": req.priority})
             rec["pending"].discard(req.req_id)
             if not rec["pending"] and rec["recovered_at"] is None:
                 rec["recovered_at"] = now
             return
         self.retries += 1
-        self._schedule_ctl(now + self.retry_policy.backoff(attempt),
+        # jitter (opt-in on the policy) draws from the injector's dedicated
+        # retry stream — the corruption RNG never sees these draws
+        rng = self.faults.retry_rng if self.faults is not None else None
+        self._schedule_ctl(now + self.retry_policy.backoff(attempt, rng=rng),
                            "retry", (req, rec))
 
     def _on_retry(self, payload, now: float) -> None:
@@ -632,6 +711,33 @@ class ServingCluster:
         hs = getattr(self.replicas[idx].scheduler.bm, "host_store", None)
         if hs is not None and self.faults is not None:
             self.faults.corrupt_host_records(hs, fault)
+
+    def _on_cancelstorm(self, storm, now: float) -> None:
+        """A cancellation storm fires: sample victims from the requests in
+        flight NOW (seeded) and schedule each one's cancel inside the storm
+        window."""
+        if self.faults is None:
+            return
+        live = {rid for i, e in enumerate(self.replicas)
+                if self.state[i] != FAILED
+                for rid in e.inflight_req_ids()}
+        for t, rid in self.faults.pick_cancel_victims(storm, live):
+            self._schedule_ctl(max(t, now), "cancel", rid)
+
+    def _on_cancel(self, req_id: int, now: float) -> None:
+        """Client-cancel one request on whichever replica owns it (the
+        assignment book tracks handoffs).  A no-op when the request already
+        finished, was shed, or its replica failed — cancellation is
+        idempotent and never invents accounting."""
+        idx = self.assignments.get(req_id)
+        if idx is None or idx >= len(self.replicas) \
+                or self.state[idx] == FAILED:
+            return
+        eng = self.replicas[idx]
+        if eng.cancel_request(req_id):
+            # its dispatch forecast will never resolve — drop the record so
+            # the residual estimator never folds a phantom sample
+            self.control.tel(eng.replica_id)._forecasts.pop(req_id, None)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request, now: Optional[float] = None) -> int:
@@ -660,7 +766,8 @@ class ServingCluster:
         scaler = self.control.autoscaler
         admission = self.control.admission
         min_forecast = None
-        if scaler is not None or admission is not None:
+        if scaler is not None or admission is not None \
+                or self.brownout is not None:
             routable = self.routable_replicas()
             min_forecast = min(self.control.forecast_ttft(e, req, now)
                                for e in routable)
@@ -707,10 +814,21 @@ class ServingCluster:
                 idx = min(dec_active,
                           key=lambda i: (self.replicas[i].load, i))
                 self.drain_replica(idx, now)
+        # brownout top-rung shedding fires before classic admission: at that
+        # rung the ladder has already decided the fleet is saturated, and
+        # its class ordering (best_effort first, interactive never) must not
+        # be overridden by the class-blind forecast check below
+        if self.brownout is not None and min_forecast is not None \
+                and self.brownout.should_shed(req, min_forecast):
+            self.shed.append({"req_id": req.req_id, "at": now,
+                              "slo": req.slo, "priority": req.priority,
+                              "by": "brownout"})
+            self.control.note_shed(now)
+            return None
         if admission is not None and min_forecast is not None \
                 and admission.should_shed(req, min_forecast):
             self.shed.append({"req_id": req.req_id, "at": now,
-                              "slo": req.slo})
+                              "slo": req.slo, "priority": req.priority})
             self.control.note_shed(now)
             return None
         return self.submit(req, now=now)
@@ -819,6 +937,32 @@ class ServingCluster:
             src.step()
 
     # ------------------------------------------------------------------
+    # fleet brownout ladder
+    # ------------------------------------------------------------------
+    def _apply_brownout(self, now: float) -> None:
+        """Evaluate the ladder (when a check is due) and push the current
+        rung's knobs to every live replica.  Application is idempotent —
+        the same stage re-applied is a no-op — and covers replicas added
+        after the last transition (a crash-replacement engine must inherit
+        the fleet's degradation state, not join at full service)."""
+        bo = self.brownout
+        if bo is None or not bo.due(now):
+            return
+        live = [i for i in range(len(self.replicas))
+                if self.state[i] not in (RETIRED, FAILED)]
+        snaps = [self.control.snapshot(self.replicas[i], now) for i in live]
+        ev = bo.evaluate(now, snaps)
+        if ev is not None:
+            self.brownout_events.append(ev)
+        cap = bo.output_cap_for("best_effort")
+        for i in live:
+            e = self.replicas[i]
+            e.spec_forced_off = bo.spec_off
+            e.best_effort_cap = cap
+            if e.memmgr is not None:
+                e.memmgr.force_offload = bo.offload_draft
+
+    # ------------------------------------------------------------------
     def has_work(self) -> bool:
         return any(e.has_work() for e in self.replicas)
 
@@ -841,6 +985,11 @@ class ServingCluster:
                 self.control.detector.heartbeat(e.replica_id, e.clock)
             for t, kind, payload in self.faults.timed_events():
                 self._schedule_ctl(t, kind, payload)
+        # pre-scheduled client cancellations (workload.cancellation_storm):
+        # explicit (t, req_id) pairs, so brownout-on/off cells of a bench
+        # grid cancel the SAME requests at the SAME instants
+        for t, rid in self.cancels:
+            self._schedule_ctl(float(t), "cancel", int(rid))
         pi = 0
         steps = 0
         while steps < max_steps:
@@ -872,6 +1021,7 @@ class ServingCluster:
             if self.disaggregated and self.roles[idx] == PREFILL:
                 self._consider_handoffs(idx)
             self.control.observe_step(self.replicas[idx])
+            self._apply_brownout(self.replicas[idx].clock)
             self._maybe_retire(idx, self.replicas[idx].clock)
             steps += 1
 
@@ -910,4 +1060,5 @@ class ServingCluster:
                               crashes=crashes,
                               requeues=self.requeues,
                               retries=self.retries,
-                              failed_requests=list(self.failed_requests))
+                              failed_requests=list(self.failed_requests),
+                              brownout_events=list(self.brownout_events))

@@ -189,32 +189,201 @@ class AdmissionController:
     collapse).  Once shedding starts it persists until the forecast drops
     back under ``slo * resume_factor`` (< shed_factor), so the controller
     cannot flap admit/shed around a single threshold.  Requests without a
-    deadline are never shed."""
+    deadline are never shed.
+
+    ``class_weights`` makes the thresholds priority-aware: both the shed
+    and resume thresholds for a request are multiplied by its class's
+    weight, and the hysteresis latch is tracked PER CLASS.  A weight below
+    1.0 sheds that class earlier (best_effort first), above 1.0 later
+    (interactive last); unlisted classes use weight 1.0, so a
+    single-class workload with no weights behaves exactly as before."""
 
     def __init__(self, *, shed_factor: float = 1.5,
                  resume_factor: float = 1.0,
-                 default_slo: Optional[float] = None):
+                 default_slo: Optional[float] = None,
+                 class_weights: Optional[Dict[str, float]] = None):
         if resume_factor > shed_factor:
             raise ValueError("resume_factor must be <= shed_factor")
+        if class_weights and any(w <= 0 for w in class_weights.values()):
+            raise ValueError("class weights must be > 0")
         self.shed_factor = shed_factor
         self.resume_factor = resume_factor
         self.default_slo = default_slo
-        self.shedding = False
+        self.class_weights = dict(class_weights) if class_weights else {}
+        self._shedding: Dict[str, bool] = {}
         self.shed_count = 0
+        self.shed_by_class: Dict[str, int] = {}
+
+    @property
+    def shedding(self) -> bool:
+        """True while ANY class is latched shedding (back-compat view)."""
+        return any(self._shedding.values())
 
     def should_shed(self, req: Request, min_forecast: float) -> bool:
         slo = req.slo if req.slo is not None else self.default_slo
         if slo is None:
             return False
-        if self.shedding:
-            if min_forecast <= slo * self.resume_factor:
-                self.shedding = False
+        w = self.class_weights.get(req.priority, 1.0)
+        cls = req.priority
+        if self._shedding.get(cls, False):
+            if min_forecast <= slo * self.resume_factor * w:
+                self._shedding[cls] = False
                 return False
-        elif min_forecast > slo * self.shed_factor:
-            self.shedding = True
-        if self.shedding:
+        elif min_forecast > slo * self.shed_factor * w:
+            self._shedding[cls] = True
+        if self._shedding.get(cls, False):
             self.shed_count += 1
-        return self.shedding
+            self.shed_by_class[cls] = self.shed_by_class.get(cls, 0) + 1
+        return self._shedding.get(cls, False)
+
+
+# ---------------------------------------------------------------------------
+# fleet brownout ladder
+# ---------------------------------------------------------------------------
+
+# Ordered degradation ladder.  Each rung trades a cheaper capability for
+# fleet survival; the controller walks ONE rung per evaluation in either
+# direction, with a cooldown between transitions, so a load spike degrades
+# gracefully instead of collapsing and recovery cannot flap.
+BROWNOUT_STAGES = ("normal", "spec_off", "draft_offload", "output_cap",
+                   "shed")
+
+
+class BrownoutController:
+    """Hysteresis state machine over fleet telemetry driving the brownout
+    ladder.
+
+    Inputs per evaluation (all from ``ReplicaSnapshot`` — observable state
+    only, no sim internals): the BEST replica's predicted TTFT (the same
+    headroom signal admission and routing use), the fleet's minimum
+    allocatable-KV headroom fraction, and optionally the deepest decode
+    batch.  Pressure — best forecast past ``slo * enter_factor``, KV
+    headroom under ``kv_low_frac``, or decode depth past ``decode_high`` —
+    escalates one rung; calm (forecast under ``slo * exit_factor`` AND
+    headroom at least ``kv_calm_frac``) de-escalates one rung.  Rungs, in
+    order:
+
+    1. ``spec_off``      — force gamma→0 fleet-wide: speculation burns KV
+                           (draft slots) and verify FLOPs that overload
+                           turns into pure queue delay (the Nightjar
+                           gamma→0 saturation limit, applied by fiat).
+    2. ``draft_offload`` — offload the draft model to host and expand the
+                           KV pool into its slab (§6 squeeze), buying
+                           batch growth when KV is the bottleneck.
+    3. ``output_cap``    — cap ``max_new_tokens`` for best_effort traffic;
+                           long tails stop starving interactive decode.
+    4. ``shed``          — class-weighted admission shedding at the door:
+                           best_effort always, batch when its own deadline
+                           is already forecast blown, interactive never.
+
+    Every transition is recorded in ``events`` with the signals that
+    caused it, so post-hoc accounting can prove which rungs fired."""
+
+    def __init__(self, *, slo: float = 1.0,
+                 enter_factor: float = 1.5, exit_factor: float = 0.8,
+                 kv_low_frac: float = 0.10, kv_calm_frac: float = 0.30,
+                 decode_high: Optional[int] = None,
+                 best_effort_cap: int = 32,
+                 cooldown_s: float = 1.0, check_interval_s: float = 0.25):
+        if slo <= 0:
+            raise ValueError("brownout slo must be > 0")
+        if exit_factor >= enter_factor:
+            raise ValueError("exit_factor must be < enter_factor")
+        if kv_calm_frac < kv_low_frac:
+            raise ValueError("kv_calm_frac must be >= kv_low_frac")
+        if best_effort_cap < 1:
+            raise ValueError("best_effort_cap must be >= 1")
+        self.slo = slo
+        self.enter_factor = enter_factor
+        self.exit_factor = exit_factor
+        self.kv_low_frac = kv_low_frac
+        self.kv_calm_frac = kv_calm_frac
+        self.decode_high = decode_high
+        self.best_effort_cap = best_effort_cap
+        self.cooldown_s = cooldown_s
+        self.check_interval_s = check_interval_s
+        self.stage = 0
+        self.shed_count = 0
+        self.events: List[dict] = []
+        self._last_transition = float("-inf")
+        self._last_check = float("-inf")
+
+    # -- evaluation -----------------------------------------------------
+    def due(self, now: float) -> bool:
+        """Cheap prefilter: snapshots are only built when a check is due."""
+        return now - self._last_check >= self.check_interval_s
+
+    def evaluate(self, now: float,
+                 snaps: List["ReplicaSnapshot"]) -> Optional[dict]:
+        """One ladder decision; returns the transition event or None.
+        Moves at most ONE rung per call, and never within ``cooldown_s``
+        of the previous transition."""
+        self._last_check = now
+        if not snaps:
+            return None
+        best_ttft = min(s.predicted_ttft for s in snaps)
+        kv_min = min(s.kv_headroom_frac for s in snaps)
+        pressure = (best_ttft > self.slo * self.enter_factor
+                    or kv_min < self.kv_low_frac)
+        if self.decode_high is not None:
+            pressure = pressure or max(s.decode_count for s in snaps) \
+                > self.decode_high
+        calm = (best_ttft < self.slo * self.exit_factor
+                and kv_min >= self.kv_calm_frac)
+        if now - self._last_transition < self.cooldown_s:
+            return None
+        if pressure and self.stage < len(BROWNOUT_STAGES) - 1:
+            return self._move(now, self.stage + 1, best_ttft, kv_min)
+        if calm and self.stage > 0:
+            return self._move(now, self.stage - 1, best_ttft, kv_min)
+        return None
+
+    def _move(self, now: float, new: int, ttft: float, kv: float) -> dict:
+        ev = {"at": round(now, 6), "from": BROWNOUT_STAGES[self.stage],
+              "to": BROWNOUT_STAGES[new], "stage": new,
+              "predicted_ttft": round(ttft, 6),
+              "kv_headroom": round(kv, 6)}
+        self.stage = new
+        self._last_transition = now
+        self.events.append(ev)
+        return ev
+
+    # -- rung queries (what the cluster applies to every live replica) --
+    @property
+    def stage_name(self) -> str:
+        return BROWNOUT_STAGES[self.stage]
+
+    @property
+    def spec_off(self) -> bool:
+        return self.stage >= BROWNOUT_STAGES.index("spec_off")
+
+    @property
+    def offload_draft(self) -> bool:
+        return self.stage >= BROWNOUT_STAGES.index("draft_offload")
+
+    def output_cap_for(self, priority: str) -> Optional[int]:
+        """Token cap for new+running output of ``priority`` traffic at the
+        current rung (None = uncapped)."""
+        if self.stage >= BROWNOUT_STAGES.index("output_cap") \
+                and priority == "best_effort":
+            return self.best_effort_cap
+        return None
+
+    def should_shed(self, req: Request, min_forecast: float) -> bool:
+        """Door decision at the top rung only: best_effort always sheds,
+        batch sheds when its own deadline is already forecast blown,
+        interactive is never brownout-shed (that is the whole point of
+        the ladder)."""
+        if self.stage < BROWNOUT_STAGES.index("shed"):
+            return False
+        if req.priority == "interactive":
+            return False
+        if req.priority != "best_effort":
+            slo = req.slo
+            if slo is None or min_forecast <= slo:
+                return False
+        self.shed_count += 1
+        return True
 
 
 # ---------------------------------------------------------------------------

@@ -110,6 +110,11 @@ class ServingEngine:
         # FaultInjector; None means every query below is a no-op
         self.faults = None
         self.failed = False        # crashed — permanently out of service
+        # brownout-ladder knobs (controlplane.BrownoutController via the
+        # cluster; harmless defaults when no controller drives them)
+        self.spec_forced_off = False       # stage >= spec_off: gamma -> 0
+        self.best_effort_cap: Optional[int] = None  # stage >= output_cap:
+                                           # max_new_tokens for best_effort
 
     # ------------------------------------------------------------------
     # steppable surface
@@ -152,6 +157,15 @@ class ServingEngine:
                     or self.scheduler.num_waiting
                     or self.scheduler.num_running)
 
+    def inflight_req_ids(self) -> List[int]:
+        """Every request id this replica owns that has not finished:
+        cancellation-storm victim pool (pending + handoffs + waiting +
+        running)."""
+        return ([item[2].req_id for item in self._pending]
+                + [item[2].req_id for item in self._handoffs]
+                + [r.req_id for r in self.scheduler.waiting]
+                + [s.req_id for s in self.scheduler.running])
+
     def _next_income(self) -> Optional[float]:
         """Earliest instant at which queued income (a submitted arrival or
         an in-flight KV handoff) becomes actionable; ``None`` if neither."""
@@ -162,18 +176,33 @@ class ServingEngine:
             cands.append(self._handoffs[0][0])
         return min(cands) if cands else None
 
+    def _next_expiry(self) -> Optional[float]:
+        """Earliest hard deadline among queued work (waiting requests and
+        in-flight handoffs).  An otherwise-idle engine must still step at
+        that instant so expired requests are reaped and accounted — they
+        can never be silently stranded in the waiting queue."""
+        exps = [r.arrival + r.deadline for r in self.scheduler.waiting
+                if r.deadline is not None]
+        exps += [item[2].arrival + item[2].deadline for item in self._handoffs
+                 if item[2].deadline is not None]
+        return min(exps) if exps else None
+
     def peek_next_event(self) -> Optional[float]:
         """Virtual time of this engine's next actionable event.
 
         ``None`` means drained (or stuck: waiting requests that can never be
         admitted because nothing is running and no arrivals remain — the
-        run-to-completion loop historically terminated there too)."""
+        run-to-completion loop historically terminated there too).  A
+        deadline-carrying waiting request is never stuck: its expiry is an
+        actionable event (the reap)."""
         if self.scheduler.num_running:
             return self.clock
         # with nothing running, admission is only retried when the clock
-        # moves — the next chance is the next arrival or handoff landing
-        t = self._next_income()
-        return max(self.clock, t) if t is not None else None
+        # moves — the next chance is the next arrival / handoff landing /
+        # deadline expiry
+        cands = [t for t in (self._next_income(), self._next_expiry())
+                 if t is not None]
+        return max(self.clock, min(cands)) if cands else None
 
     # ------------------------------------------------------------------
     # pieces shared by the monolithic and hybrid step paths
@@ -184,6 +213,103 @@ class ServingEngine:
         while self._handoffs and self._handoffs[0][0] <= self.clock:
             _, _, req, payload = heapq.heappop(self._handoffs)
             self._adopt_prefilled(req, payload)
+
+    # ------------------------------------------------------------------
+    # request lifecycle: cancellation + deadline reaping
+    # ------------------------------------------------------------------
+    def _note_lifecycle(self, req: Request, kind: str) -> None:
+        """Account a cancelled/expired request — per-class, never silently
+        dropped (the surge acceptance gate sums these against offered)."""
+        rec = {"req_id": req.req_id, "at": round(self.clock, 6),
+               "priority": req.priority, "slo": req.slo}
+        (self.metrics.cancelled if kind == "cancelled"
+         else self.metrics.expired).append(rec)
+
+    def _drop_sequence(self, seq: Sequence, kind: str) -> None:
+        """Tear down ONE running sequence without finishing it: release its
+        device blocks (registered prefix blocks park in the cached tier —
+        their content is still valid, unlike a crash), drop any orphaned
+        TTFT sample, and account the request.  Per-request granularity is
+        what distinguishes this from ``force_fail`` (whole-replica); I8
+        asserts nothing leaks."""
+        sched = self.scheduler
+        m = self.metrics
+        if seq.first_token_at is not None:
+            # the request never finishes: remove its orphaned TTFT sample
+            # (exact float — the same arithmetic stamped it)
+            try:
+                m.ttfts.remove(seq.first_token_at - seq.request.arrival)
+            except ValueError:
+                pass
+        sched.bm.release(sched._seq_key(seq))
+        if seq in sched.running:
+            sched.running.remove(seq)
+        self.backend.release(seq)
+        self._note_lifecycle(seq.request, kind)
+
+    def cancel_request(self, req_id: int, *, reason: str = "cancelled"
+                       ) -> bool:
+        """Client cancellation: withdraw a request wherever it lives —
+        submitted-pending, migrating handoff, waiting queue, or running
+        batch — releasing every device block, CoW pin, host-KV pin and
+        queue slot it holds.  Returns False when the request is unknown
+        here (already finished, shed, or owned by another replica)."""
+        for i, item in enumerate(self._pending):
+            if item[2].req_id == req_id:
+                self._pending.pop(i)
+                heapq.heapify(self._pending)
+                self._note_lifecycle(item[2], reason)
+                return True
+        for i, item in enumerate(self._handoffs):
+            if item[2].req_id == req_id:
+                self._handoffs.pop(i)
+                heapq.heapify(self._handoffs)
+                self._note_lifecycle(item[2], reason)
+                return True
+        for req in self.scheduler.waiting:
+            if req.req_id == req_id:
+                self.scheduler.waiting.remove(req)
+                self._note_lifecycle(req, reason)
+                return True
+        for seq in list(self.scheduler.running):
+            if seq.req_id == req_id:
+                self._drop_sequence(seq, reason)
+                return True
+        return False
+
+    def _reap_expired(self) -> int:
+        """Drop every request whose hard deadline has passed — waiting
+        (reaped at dispatch: never admitted), running (reaped mid-decode:
+        stops burning batch slots on tokens nobody will read) and
+        handoffs in transfer.  ``>=`` is load-bearing: the idle path
+        fast-forwards the clock EXACTLY to the next expiry."""
+        now = self.clock
+        sched = self.scheduler
+        reaped = 0
+        for req in [r for r in sched.waiting if r.deadline is not None
+                    and now >= r.arrival + r.deadline]:
+            sched.waiting.remove(req)
+            self._note_lifecycle(req, "expired")
+            reaped += 1
+        for seq in [s for s in sched.running
+                    if s.request.deadline is not None
+                    and now >= s.request.arrival + s.request.deadline]:
+            self._drop_sequence(seq, "expired")
+            reaped += 1
+        if self._handoffs:
+            keep = []
+            for item in self._handoffs:
+                req = item[2]
+                if (req.deadline is not None
+                        and now >= req.arrival + req.deadline):
+                    self._note_lifecycle(req, "expired")
+                    reaped += 1
+                else:
+                    keep.append(item)
+            if len(keep) != len(self._handoffs):
+                self._handoffs = keep
+                heapq.heapify(self._handoffs)
+        return reaped
 
     # ------------------------------------------------------------------
     # disaggregated prefill/decode handoff surface
@@ -246,30 +372,51 @@ class ServingEngine:
         self.backend.release(seq)
         return payload
 
+    def _output_limit(self, req: Request) -> int:
+        """Effective output length: ``best_effort`` requests are clipped to
+        the brownout ladder's ``best_effort_cap`` when set (a capped
+        request still *finishes* — shorter, not dropped)."""
+        cap = self.best_effort_cap
+        if cap is not None and req.priority == "best_effort":
+            return min(req.output_len, cap)
+        return req.output_len
+
     def _commit_decode(self, seqs: Seq[Sequence], n_committed: Seq[int],
-                       gamma: int) -> int:
-        """Commit per-sequence decode tokens; returns sequences finished."""
+                       gamma: int) -> "tuple[int, int]":
+        """Commit per-sequence decode tokens; returns (sequences finished,
+        tokens clipped by the best-effort output cap).  Clipped tokens are
+        subtracted from the step's committed-token count by the caller —
+        zero whenever no cap is active, keeping the uncapped path
+        byte-identical."""
         m = self.metrics
         finished = 0
+        clipped = 0
         for s, n in zip(seqs, n_committed):
-            if n <= 0 or s not in self.scheduler.running:
-                continue  # finished slot or preempted by an earlier commit
-            if s.first_token_at is None:
-                s.first_token_at = self.clock
-                m.ttfts.append(self.clock - s.request.arrival)
-            ok = self.scheduler.commit_tokens(s, int(n))
-            if not ok:
-                continue  # preempted; will re-run from the queue
-            if gamma == 0:
-                s.delta += int(n)  # draft cache falls behind
-            if s.done:
+            if s not in self.scheduler.running:
+                continue  # preempted/cancelled by an earlier commit
+            limit = self._output_limit(s.request)
+            raw = int(n)
+            n = min(raw, max(limit - s.generated, 0))
+            clipped += max(raw - n, 0)
+            if n <= 0 and s.generated < limit:
+                continue  # finished slot (raw <= 0) — nothing to commit
+            if n > 0:
+                if s.first_token_at is None:
+                    s.first_token_at = self.clock
+                    m.ttfts.append(self.clock - s.request.arrival)
+                ok = self.scheduler.commit_tokens(s, n)
+                if not ok:
+                    continue  # preempted; will re-run from the queue
+                if gamma == 0:
+                    s.delta += n  # draft cache falls behind
+            if s.generated >= limit:
                 s.finished_at = self.clock
                 m.latencies.append(self.clock - s.request.arrival)
                 m.record_finish(s, self.clock)
                 self.scheduler.finish(s)
                 self.backend.release(s)
                 finished += 1
-        return finished
+        return finished, clipped
 
     def _reserve_kv(self, seqs: List[Sequence], gamma: int) -> List[Sequence]:
         """Physical KV reservation (paged real backend): grow block tables to
@@ -284,9 +431,10 @@ class ServingEngine:
             failed = reserve(seqs, gamma)
             if not failed:
                 break
-            # preempt ONE victim (youngest failed, matching the recompute
-            # policy) and retry: its released blocks often cover the rest
-            victim = max(failed, key=lambda s: s.request.arrival)
+            # preempt ONE victim (lowest class then youngest among the
+            # failed, matching the recompute policy) and retry: its
+            # released blocks often cover the rest
+            victim = max(failed, key=self.scheduler._age_key)
             self.scheduler.preempt(victim)
             seqs = [s for s in seqs if s in self.scheduler.running]
         return seqs
@@ -428,8 +576,10 @@ class ServingEngine:
         m = self.metrics
         t_start = self.clock
 
-        # 1. arrivals up to now
+        # 1. arrivals up to now; reap expired deadlines BEFORE dispatch so
+        #    a dead-on-arrival request never consumes prefill compute
         self._drain_arrivals()
+        reaped = self._reap_expired()
 
         draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
 
@@ -443,12 +593,16 @@ class ServingEngine:
                     s.delta = s.request.prompt_len  # draft never saw it
 
         if not self.scheduler.running:
-            t_next = self._next_income()
-            if t_next is not None:
-                # idle: fast-forward to the next arrival / handoff landing
-                self.clock = max(self.clock, t_next)
+            cands = [t for t in (self._next_income(), self._next_expiry())
+                     if t is not None]
+            if cands:
+                # idle: fast-forward to the next arrival / handoff landing /
+                # deadline expiry (expired waiting work still needs reaping)
+                self.clock = max(self.clock, min(cands))
                 return StepReport("idle", t_start, self.clock,
                                   admitted=len(admitted))
+            if reaped:
+                return StepReport("idle", t_start, self.clock)
             return None
 
         running = list(self.scheduler.running)
@@ -463,8 +617,9 @@ class ServingEngine:
                 waiting=self.scheduler.num_waiting)
             draft_ok = self.memmgr.can_speculate(self.clock)
 
-        # 3. arm selection
-        if draft_ok:
+        # 3. arm selection (brownout stage >= spec_off forces gamma -> 0
+        #    fleet-wide — the paper's MAB-disable recast as overload control)
+        if draft_ok and not self.spec_forced_off:
             gamma = self.policy.select(B, delta_max=delta_max)
         else:
             gamma = 0
@@ -489,7 +644,9 @@ class ServingEngine:
         self.clock += out.latency
         total_committed = int(sum(out.n_committed))
 
-        finished = self._commit_decode(running, out.n_committed, gamma)
+        finished, clipped = self._commit_decode(running, out.n_committed,
+                                                gamma)
+        total_committed -= clipped  # best-effort cap: tokens never written
 
         m.total_tokens += total_committed
         if total_committed > 0 and draft_ok:
@@ -522,17 +679,23 @@ class ServingEngine:
         m = self.metrics
         t_start = self.clock
 
-        # 1. arrivals up to now
+        # 1. arrivals up to now; reap expired deadlines BEFORE dispatch so
+        #    a dead-on-arrival request never consumes chunk budget
         self._drain_arrivals()
+        reaped = self._reap_expired()
 
         draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
 
         batch = self.scheduler.schedule_chunks()
         if batch.empty:
-            t_next = self._next_income()
-            if t_next is not None:
-                # idle: fast-forward to the next arrival / handoff landing
-                self.clock = max(self.clock, t_next)
+            cands = [t for t in (self._next_income(), self._next_expiry())
+                     if t is not None]
+            if cands:
+                # idle: fast-forward to the next arrival / handoff landing /
+                # deadline expiry (expired waiting work still needs reaping)
+                self.clock = max(self.clock, min(cands))
+                return StepReport("idle", t_start, self.clock)
+            if reaped:
                 return StepReport("idle", t_start, self.clock)
             return None
 
@@ -563,8 +726,10 @@ class ServingEngine:
             draft_ok = self.memmgr.can_speculate(self.clock)
 
         # 3. arm selection — gamma only ever applies to the decode portion,
-        #    and is forced to 0 while any prefill chunk is in flight
-        if batch.prefill_chunks or not draft_ok or B == 0:
+        #    and is forced to 0 while any prefill chunk is in flight or the
+        #    brownout ladder has speculation disabled fleet-wide
+        if (batch.prefill_chunks or not draft_ok or B == 0
+                or self.spec_forced_off):
             gamma = 0
         else:
             gamma = self.policy.select(B, delta_max=delta_max)
@@ -598,7 +763,9 @@ class ServingEngine:
             if s.prompt_remaining == 0:
                 s.prefill_done_at = self.clock
 
-        finished = self._commit_decode(decode, out.n_committed, gamma)
+        finished, clipped = self._commit_decode(decode, out.n_committed,
+                                                gamma)
+        total_committed -= clipped  # best-effort cap: tokens never written
 
         m.total_tokens += total_committed
         # the planner only learns from pure-decode steps: mixed-step latency

@@ -14,6 +14,11 @@ into a `ServingCluster` run on the shared virtual clock:
 - **corrupt**: host-KV offload records on one replica having their
   payload corrupted at time ``t`` (a bad DMA, bit rot) — caught by the
   blake2b record checksum on restore, never served.
+- **cancelstorm**: a seeded fraction of the requests in flight at
+  ``start`` being client-cancelled at seeded times inside
+  ``[start, end)`` (a bulk client disconnect, an upstream timeout
+  sweep).  Victims and times come from a dedicated RNG stream so the
+  storm never perturbs corruption draws.
 
 Everything is validated at construction and seeded, so two runs of the
 same plan are byte-identical — the same determinism contract every
@@ -35,6 +40,7 @@ __all__ = [
     "StragglerFault",
     "HandoffFault",
     "CorruptionFault",
+    "CancelStorm",
     "FaultPlan",
     "RetryPolicy",
     "FaultInjector",
@@ -91,6 +97,16 @@ class CorruptionFault:
     count: int = 1
 
 
+@dataclass(frozen=True)
+class CancelStorm:
+    """Cancel ``frac`` of the in-flight requests at seeded times in
+    ``[start, end)`` — a bulk client disconnect."""
+
+    frac: float
+    start: float
+    end: float
+
+
 # ---------------------------------------------------------------------------
 # Plan
 # ---------------------------------------------------------------------------
@@ -108,6 +124,7 @@ class FaultPlan:
     stragglers: Tuple[StragglerFault, ...] = ()
     handoffs: Tuple[HandoffFault, ...] = ()
     corruptions: Tuple[CorruptionFault, ...] = ()
+    cancelstorms: Tuple[CancelStorm, ...] = ()
 
     def __post_init__(self) -> None:
         seen = set()
@@ -136,11 +153,18 @@ class FaultPlan:
         for k in self.corruptions:
             if k.at < 0 or k.replica < 0 or k.count < 1:
                 raise ValueError(f"corruption fault invalid: {k}")
+        for cs in self.cancelstorms:
+            if not 0.0 < cs.frac <= 1.0:
+                raise ValueError(f"cancelstorm frac must be in (0, 1]: {cs}")
+            if cs.start < 0 or cs.end <= cs.start:
+                raise ValueError(
+                    f"cancelstorm window must have 0 <= start < end: {cs}")
 
     @property
     def empty(self) -> bool:
         return not (self.crashes or self.stragglers
-                    or self.handoffs or self.corruptions)
+                    or self.handoffs or self.corruptions
+                    or self.cancelstorms)
 
     # -- CLI spec ----------------------------------------------------------
     #
@@ -148,6 +172,7 @@ class FaultPlan:
     #   straggle:<replica>@<start>..<end>x<slowdown>
     #   handoff:<fail|timeout>@<start>..<end>[#<count>]
     #   corrupt:<replica>@<t>[#<count>]
+    #   cancelstorm:<frac>@<start>..<end>
     #
     # joined by ';', e.g.  "crash:0@2.5;straggle:1@3..5x4;handoff:fail@2..4"
 
@@ -157,6 +182,7 @@ class FaultPlan:
         stragglers: List[StragglerFault] = []
         handoffs: List[HandoffFault] = []
         corruptions: List[CorruptionFault] = []
+        cancelstorms: List[CancelStorm] = []
         for part in filter(None, (p.strip() for p in spec.split(";"))):
             try:
                 kind, rest = part.split(":", 1)
@@ -184,10 +210,15 @@ class FaultPlan:
                     at, c = at.split("#", 1)
                     count = int(c)
                 corruptions.append(CorruptionFault(int(head), float(at), count))
+            elif kind == "cancelstorm":
+                start, end = at.split("..", 1)
+                cancelstorms.append(CancelStorm(
+                    float(head), float(start), float(end)))
             else:
                 raise ValueError(f"unknown fault kind {kind!r} in {part!r}")
         return FaultPlan(tuple(crashes), tuple(stragglers),
-                         tuple(handoffs), tuple(corruptions))
+                         tuple(handoffs), tuple(corruptions),
+                         tuple(cancelstorms))
 
 
 # ---------------------------------------------------------------------------
@@ -202,23 +233,39 @@ class RetryPolicy:
     Attempt numbers are 1-based: ``backoff(1)`` is the delay before the
     first retry.  A request whose attempts exceed ``budget`` is
     surfaced as failed in metrics — never silently dropped.
+
+    ``jitter_frac`` spreads retries by up to ±that fraction of the
+    deterministic delay (thundering-herd decorrelation after a crash
+    re-dispatches a whole replica's worth of work at once).  Jitter is
+    strictly opt-in AND requires a caller-supplied ``rng`` — the default
+    policy's schedule is a pure function of ``attempt``, which every
+    golden chaos stream depends on.  The cluster threads the injector's
+    dedicated ``retry_rng`` stream through, so jittered runs stay
+    byte-reproducible under the same seed without perturbing any other
+    fault draw.
     """
 
     budget: int = 3
     backoff_base: float = 0.05
     backoff_cap: float = 1.0
+    jitter_frac: float = 0.0
 
     def __post_init__(self) -> None:
         if self.budget < 0:
             raise ValueError("retry budget must be >= 0")
         if self.backoff_base <= 0 or self.backoff_cap <= 0:
             raise ValueError("backoff base/cap must be > 0")
+        if not 0.0 <= self.jitter_frac < 1.0:
+            raise ValueError("jitter_frac must be in [0, 1)")
 
-    def backoff(self, attempt: int) -> float:
+    def backoff(self, attempt: int, *, rng=None) -> float:
         if attempt < 1:
             raise ValueError("attempt is 1-based")
-        return min(self.backoff_base * (2.0 ** (attempt - 1)),
-                   self.backoff_cap)
+        delay = min(self.backoff_base * (2.0 ** (attempt - 1)),
+                    self.backoff_cap)
+        if self.jitter_frac > 0.0 and rng is not None:
+            delay *= 1.0 + self.jitter_frac * float(rng.uniform(-1.0, 1.0))
+        return delay
 
     def exhausted(self, attempt: int) -> bool:
         return attempt > self.budget
@@ -244,21 +291,49 @@ class FaultInjector:
         self.plan = plan
         self.seed = seed
         self.rng = np.random.default_rng(seed)
+        # dedicated streams: storm victim/time draws and retry jitter must
+        # not advance the corruption RNG (or each other) — adding a storm
+        # or enabling jitter leaves every other fault's draws byte-identical
+        self.cancel_rng = np.random.default_rng([seed, 0xCA9C])
+        self.retry_rng = np.random.default_rng([seed, 0xB0FF])
         # per-HandoffFault remaining poison budget (0 = unbounded)
         self._handoff_left = [h.count for h in plan.handoffs]
-        self.stats = {"handoff_faults": 0, "corrupted_records": 0}
+        self.stats = {"handoff_faults": 0, "corrupted_records": 0,
+                      "storm_cancels": 0}
 
     # -- timed one-shots ---------------------------------------------------
 
     def timed_events(self) -> List[Tuple[float, str, object]]:
-        """(time, kind, fault) for crash/corrupt events, time-sorted."""
+        """(time, kind, fault) for crash/corrupt/cancelstorm events,
+        time-sorted.  A storm fires ONCE at its window start: victims are
+        drawn from the requests in flight at that instant and their cancel
+        times land inside the window."""
         evs: List[Tuple[float, str, object]] = []
         for c in self.plan.crashes:
             evs.append((c.at, "crash", c))
         for k in self.plan.corruptions:
             evs.append((k.at, "corrupt", k))
+        for s in self.plan.cancelstorms:
+            evs.append((s.start, "cancelstorm", s))
         evs.sort(key=lambda e: (e[0], e[1]))
         return evs
+
+    # -- cancellation storms ----------------------------------------------
+
+    def pick_cancel_victims(self, storm: CancelStorm,
+                            live_ids) -> List[Tuple[float, int]]:
+        """Seeded (cancel_time, req_id) schedule for one storm: a
+        ``storm.frac`` sample (at least one when any are live) of the
+        in-flight ids, each at a uniform time in the storm window."""
+        ids = sorted(live_ids)
+        if not ids:
+            return []
+        n = min(max(int(round(storm.frac * len(ids))), 1), len(ids))
+        idx = self.cancel_rng.choice(len(ids), size=n, replace=False)
+        times = self.cancel_rng.uniform(storm.start, storm.end, size=n)
+        out = sorted((float(t), ids[int(i)]) for t, i in zip(times, idx))
+        self.stats["storm_cancels"] += n
+        return out
 
     # -- stragglers --------------------------------------------------------
 

@@ -60,6 +60,11 @@ Invariants (property-tested):
       refcounts, no cached/registered blocks, every block back on the
       free list, no pending copies/spills/restores, and no pinned host
       records (``check_invariants(failed=True)``)
+  I8  (lifecycle completeness) every block id in the pool is reachable:
+      free, cached-reusable, table-referenced, or reserved for an
+      in-flight contraction migration — a cancelled or deadline-expired
+      request can never strand a block in NO structure (the leak I1's
+      disjointness checks alone cannot see)
 """
 from __future__ import annotations
 
@@ -677,8 +682,12 @@ class BlockManager:
             self._evict_cached_block(b)
             if b < self.total_blocks and b not in self.reserved:
                 self.free.append(b)
+        # deduplicate: a shared prefix block (refcount > 1) appears in
+        # several tables but must migrate exactly once — a per-reference
+        # list would reserve one dst per REFERENCE and strand the extras
+        # in no tier (caught by I8)
         evict = sorted(
-            b for t in self.tables.values() for b in t if b >= self.boundary)
+            {b for t in self.tables.values() for b in t if b >= self.boundary})
         # preserved-region free slots; when they cannot host every migrated
         # block, evict the minimum number of below-boundary cached blocks
         # (LRU-first, spilled like any other eviction) to make room —
@@ -762,6 +771,13 @@ class BlockManager:
             assert 0 <= b < self.total_blocks
         for b in free_set:
             assert 0 <= b < self.total_blocks
+        # I8: completeness — every pool block is in SOME structure.  The
+        # checks above prove disjointness; this proves a release path
+        # (cancellation, deadline reaping, force_fail) leaked nothing.
+        covered = (free_set | set(refs) | set(self.cached)
+                   | set(self.reserved))
+        leaked = set(range(self.total_blocks)) - covered
+        assert not leaked, f"blocks {sorted(leaked)} leaked (in no tier)"
         # I5: the prefix-cache index is consistent — every cached hash maps
         # to a live block whose stored token chain reproduces the hash, and
         # the cached-LRU tier is disjoint from both the free list and tables

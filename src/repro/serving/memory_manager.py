@@ -73,6 +73,11 @@ class ElasticMemoryManager:
         self.expanded = False
         self._low_mem_streak = 0
         self._busy_until = 0.0     # async transfer in flight
+        # brownout ladder (controlplane.BrownoutController): while set, the
+        # draft offloads IMMEDIATELY (no low-memory streak needed — the
+        # fleet controller already decided KV capacity beats speculation)
+        # and contraction is suppressed until the stage clears
+        self.force_offload = False
         self.events: List[MemoryEvent] = []
 
     # ------------------------------------------------------------------
@@ -91,6 +96,11 @@ class ElasticMemoryManager:
             return  # a transfer is still in flight — §6.2 non-blocking
 
         if self.draft_resident:
+            if self.force_offload:
+                # brownout draft-offload stage: reclaim the draft's KV share
+                # for batch growth NOW, not after a streak
+                self._offload_and_expand(now)
+                return
             # track the low-memory streak only while speculation is disabled
             # (cached-reusable prefix blocks count as reclaimable capacity:
             # evicting the cache is always cheaper than offloading the draft)
@@ -103,8 +113,9 @@ class ElasticMemoryManager:
             return
 
         # draft offloaded: contraction when the queue is drained and there is
-        # room for the draft plus the safety buffer (hysteresis, §6.1)
-        if (self.expanded and waiting == 0
+        # room for the draft plus the safety buffer (hysteresis, §6.1) —
+        # never while the brownout ladder holds the draft off-device
+        if (self.expanded and waiting == 0 and not self.force_offload
                 and self.bm.num_allocatable > self.draft_blocks + self.tau_low):
             self._contract_and_reload(now)
 

@@ -4,6 +4,21 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+# Priority classes in descending importance.  Admission sheds and the
+# scheduler preempts lowest-class-first; within a class age order rules
+# (oldest request wins), so a single-class workload behaves exactly as
+# before the classes existed.
+PRIORITY_CLASSES = ("interactive", "batch", "best_effort")
+
+
+def class_rank(priority: str) -> int:
+    """0 = most important.  Unknown classes rank below every known one
+    (they shed first) rather than raising mid-dispatch."""
+    try:
+        return PRIORITY_CLASSES.index(priority)
+    except ValueError:
+        return len(PRIORITY_CLASSES)
+
 
 @dataclass
 class Request:
@@ -16,6 +31,10 @@ class Request:
     slo: Optional[float] = None  # TTFT deadline (s) for goodput accounting
     session: Optional[int] = None  # multi-turn session id (sessions dataset)
     turn: int = 0             # 0 = cold first turn, >0 = warm return turn
+    priority: str = "interactive"  # one of PRIORITY_CLASSES
+    deadline: Optional[float] = None  # hard end-to-end budget (s past
+                                      # arrival); expired requests are
+                                      # reaped, not finished
 
 
 @dataclass
@@ -82,6 +101,7 @@ class RequestStats:
     slo: Optional[float]      # TTFT deadline, None = no deadline
     cached_tokens: int = 0    # prompt tokens admitted from the prefix cache
     turn: int = 0             # session turn (warm/cold TTFT split)
+    priority: str = "interactive"  # priority class (per-class SLO splits)
 
     @property
     def slo_met(self) -> bool:
@@ -132,6 +152,10 @@ class Metrics:
                                                 # (spills/restores/latency)
     fault_injected_s: float = 0.0  # extra seconds injected by straggler
                                    # fault windows (latency multiplier)
+    cancelled: List[dict] = field(default_factory=list)  # client-cancelled
+                                   # requests: {req_id, at, priority, slo}
+    expired: List[dict] = field(default_factory=list)    # deadline-reaped
+                                   # requests: {req_id, at, priority, slo}
 
     def record_finish(self, seq: Sequence, now: float) -> None:
         """Stamp a completed sequence into the per-request stats."""
@@ -141,7 +165,8 @@ class Metrics:
         self.requests.append(RequestStats(
             req_id=seq.req_id, arrival=seq.request.arrival, ttft=ttft,
             tpot=tpot, tokens=seq.generated, slo=seq.request.slo,
-            cached_tokens=seq.cached_tokens, turn=seq.request.turn))
+            cached_tokens=seq.cached_tokens, turn=seq.request.turn,
+            priority=seq.request.priority))
 
     @property
     def throughput(self) -> float:
@@ -203,6 +228,9 @@ class Metrics:
             })
         if self.fault_injected_s:
             out["fault_injected_s"] = round(self.fault_injected_s, 4)
+        if self.cancelled or self.expired:
+            out["cancelled"] = len(self.cancelled)
+            out["expired"] = len(self.expired)
         return out
 
     def _base_summary(self) -> dict:

@@ -50,7 +50,7 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 from .kv_cache import BlockManager, OutOfBlocks
-from .request import Request, Sequence
+from .request import Request, Sequence, class_rank
 
 
 @dataclass
@@ -235,13 +235,15 @@ class ContinuousBatchingScheduler:
 
     def _peek_waiting(self) -> Request:
         """Next admission candidate: FIFO head, or — under
-        ``prefill_order="slo"`` — the earliest TTFT deadline
-        (arrival + slo; deadline-free requests sort last, FIFO among
-        equals)."""
+        ``prefill_order="slo"`` — highest priority class first, then the
+        earliest TTFT deadline (arrival + slo; deadline-free requests
+        sort last, FIFO among equals).  A single-class queue orders
+        exactly as before classes existed."""
         if self.prefill_order == "fifo" or len(self.waiting) <= 1:
             return self.waiting[0]
         return min(self.waiting,
-                   key=lambda r: (r.arrival + r.slo if r.slo is not None
+                   key=lambda r: (class_rank(r.priority),
+                                  r.arrival + r.slo if r.slo is not None
                                   else float("inf"), r.arrival, r.req_id))
 
     def _reserve_chunk(self, seq: Sequence, n: int) -> bool:
@@ -303,23 +305,33 @@ class ContinuousBatchingScheduler:
                 self._preempt(seq)
                 return False
 
+    @staticmethod
+    def _age_key(seq: Sequence) -> Tuple[int, float, int]:
+        """Strict total preemption order: lowest priority class first,
+        age-ordered within a class.  A lower-class sequence is 'younger'
+        than every higher-class one regardless of arrival, so interactive
+        work can displace older best_effort work but never vice versa;
+        a uniform-class batch reduces to the original (arrival, req_id)
+        order, preserving the anti-livelock guarantee."""
+        return (class_rank(seq.request.priority),
+                seq.request.arrival, seq.req_id)
+
     def _preempt_youngest(self, exclude: Optional[Sequence] = None) -> None:
         """Evict the youngest running sequence to free blocks — but only if
-        it is younger than the sequence asking (strict age priority).  A
-        young sequence may never displace older work: without this guard
-        two prompts that cannot coexist in the pool evict each other in an
-        endless recompute ping-pong (each restart re-evicts the other's
-        blocks), and neither ever finishes.  With it, the younger of the
-        two preempts itself and waits for the elder to complete."""
+        it is younger than the sequence asking (strict class-then-age
+        priority).  A young sequence may never displace older work:
+        without this guard two prompts that cannot coexist in the pool
+        evict each other in an endless recompute ping-pong (each restart
+        re-evicts the other's blocks), and neither ever finishes.  With
+        it, the younger of the two preempts itself and waits for the
+        elder to complete."""
         candidates = [s for s in self.running if s is not exclude]
         if exclude is not None:
-            key = (exclude.request.arrival, exclude.req_id)
-            candidates = [s for s in candidates
-                          if (s.request.arrival, s.req_id) > key]
+            key = self._age_key(exclude)
+            candidates = [s for s in candidates if self._age_key(s) > key]
         if not candidates:
             return
-        victim = max(candidates,
-                     key=lambda s: (s.request.arrival, s.req_id))
+        victim = max(candidates, key=self._age_key)
         self._preempt(victim)
 
     def preempt(self, seq: Sequence) -> None:

@@ -18,7 +18,8 @@ from ..core.bandits import Policy, make_policy
 from ..core.cswitch import CSwitchTable
 from .cluster import DECODE, PREFILL, ServingCluster
 from .controlplane import (AdmissionController, AutoscaleController,
-                           ControlPlane, DecodePoolAutoscaler, HandoffPricer)
+                           BrownoutController, ControlPlane,
+                           DecodePoolAutoscaler, HandoffPricer)
 from .costmodel import HardwareProfile, RooflineCostModel, TPU_V5E, kv_bytes_per_token
 from .engine import ServingEngine, StepOutcome
 from .kv_cache import BlockManager
@@ -207,10 +208,13 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                       router: str = "jsq",
                       router_kwargs: Optional[dict] = None,
                       shed_factor: Optional[float] = None,
+                      class_weights: Optional[dict] = None,
                       autoscale: Optional[dict] = None,
                       disaggregate: Optional[dict] = None,
                       fault_plan=None,
-                      retry_policy=None) -> ServingCluster:
+                      retry_policy=None,
+                      brownout=None,
+                      cancels=None) -> ServingCluster:
     """N independent simulated replicas behind one router + control plane.
 
     Every replica gets its OWN scheduler, planner, elastic memory manager
@@ -238,14 +242,22 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
     :class:`~repro.serving.faults.FaultInjector` (seed = ``cfg.seed``, so
     the same plan + seed reproduces the exact same fault schedule);
     ``retry_policy`` overrides the crash-recovery
-    :class:`~repro.serving.faults.RetryPolicy`."""
+    :class:`~repro.serving.faults.RetryPolicy`.
+
+    ``class_weights`` makes admission shedding priority-aware (per-class
+    threshold multipliers — see :class:`AdmissionController`).
+    ``brownout`` arms the fleet brownout ladder: a kwargs dict for
+    :class:`BrownoutController` (or a pre-built instance); ``cancels`` is
+    an explicit client-cancellation schedule of ``(t, req_id)`` pairs
+    (e.g. ``workload.cancellation_storm``)."""
 
     def factory(i: int) -> ServingEngine:
         return build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
 
     admission = None
     if shed_factor is not None and shed_factor > 0:
-        admission = AdmissionController(shed_factor=shed_factor)
+        admission = AdmissionController(shed_factor=shed_factor,
+                                        class_weights=class_weights)
     autoscaler = None
     if autoscale is not None:
         autoscaler = AutoscaleController(**autoscale)
@@ -274,6 +286,10 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                 else fault_plan)
         if not plan.empty:
             faults = FaultInjector(plan, seed=cfg.seed)
+    bo = None
+    if brownout is not None:
+        bo = (brownout if isinstance(brownout, BrownoutController)
+              else BrownoutController(**brownout))
     engines = [factory(i) for i in range(n_replicas)]
     control = ControlPlane(admission=admission, autoscaler=autoscaler)
     if disaggregate is not None:
@@ -284,4 +300,5 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                           control=control, replica_factory=factory,
                           roles=roles, pricer=pricer,
                           decode_autoscaler=decode_autoscaler,
-                          faults=faults, retry_policy=retry_policy)
+                          faults=faults, retry_policy=retry_policy,
+                          brownout=bo, cancels=cancels)

@@ -148,6 +148,124 @@ def bursty_trace(*, base: float = 4.0, spike: float = 40.0,
     return RateTrace(np.asarray(ts), np.asarray(rates))
 
 
+def surge_trace(*, base: float = 6.0, surge_mult: float = 3.0,
+                base_s: float = 8.0, surge_s: float = 30.0,
+                recover_s: float = 12.0, jitter: float = 0.05,
+                knot_s: float = 1.0, seed: int = 0) -> "RateTrace":
+    """Sustained-overload trace: baseline -> ``surge_mult``x plateau ->
+    recovery at baseline.
+
+    The brownout workload.  Unlike ``bursty_trace`` (a short spike an
+    elastic fleet absorbs by scaling), the surge plateau is LONG —
+    ``surge_s`` seconds at ``surge_mult`` times baseline, deliberately past
+    the fleet's capacity — so the only question is *how* service degrades:
+    collapse (every class's tail blows up together) or a controlled
+    brownout (cheap capabilities shed first, interactive traffic protected).
+    Knots every ``knot_s`` seconds carry seeded jitter, exactly
+    reproducible."""
+    rng = np.random.default_rng(seed)
+    ts, rates = [], []
+    t = 0.0
+    total = base_s + surge_s + recover_s
+    while t < total:
+        if t < base_s or t >= base_s + surge_s:
+            r = base
+        else:
+            r = base * surge_mult
+        ts.append(t)
+        rates.append(r * rng.uniform(1.0 - jitter, 1.0 + jitter))
+        t += knot_s
+    return RateTrace(np.asarray(ts), np.asarray(rates))
+
+
+# per-class service contract of the surge workload: (mix weight, TTFT SLO
+# seconds, hard end-to-end deadline seconds).  interactive is tight and
+# deadline-bound; batch is loose; best_effort carries an SLO for accounting
+# but no hard deadline (it is capped/shed by the brownout ladder instead)
+SURGE_CLASSES = {
+    "interactive": (0.40, 0.5, 8.0),
+    "batch": (0.40, 3.0, 20.0),
+    "best_effort": (0.20, 6.0, None),
+}
+
+
+def surge_requests(n: int, *, trace: "RateTrace | None" = None,
+                   rate_qps: "float | None" = None,
+                   dataset: str = "alpaca", seed: int = 0,
+                   max_prompt: int = 2048, max_output: int = 1024,
+                   classes: "dict | None" = None) -> List[Request]:
+    """Mixed-priority-class arrivals for the overload benchmark.
+
+    Arrivals follow ``trace`` (thinning) when given, else a static Poisson
+    at ``rate_qps``.  Each request draws a priority class from the
+    ``classes`` mix (default ``SURGE_CLASSES``) which fixes its TTFT SLO
+    and hard deadline.  Everything is seeded: two calls with the same
+    arguments produce identical streams."""
+    rng = np.random.default_rng(seed)
+    d = DATASETS[dataset]
+    spec = classes if classes is not None else SURGE_CLASSES
+    names = list(spec)
+    probs = np.asarray([spec[c][0] for c in names], dtype=float)
+    probs = probs / probs.sum()
+    if trace is not None:
+        rmax = float(trace.rates.max())
+        arrivals: List[float] = []
+        t = 0.0
+        while len(arrivals) < n:
+            t += rng.exponential(1.0 / rmax)
+            if rng.uniform() < trace.rate_at(t) / rmax:
+                arrivals.append(t)
+    else:
+        if rate_qps is None:
+            raise ValueError("surge_requests needs a trace or a rate_qps")
+        arrivals = list(np.cumsum(rng.exponential(1.0 / rate_qps, size=n)))
+    prompts = _lengths(rng, d["p_mu"], d["p_sigma"], n, 4, max_prompt)
+    outputs = _lengths(rng, d["o_mu"], d["o_sigma"], n, 4, max_output)
+    alphas = rng.beta(d["a_a"], d["a_b"], size=n)
+    picks = rng.choice(len(names), size=n, p=probs)
+    out = []
+    for i in range(n):
+        cls = names[int(picks[i])]
+        _, slo, deadline = spec[cls]
+        out.append(Request(i, float(arrivals[i]), int(prompts[i]),
+                           int(outputs[i]), float(alphas[i]), slo=slo,
+                           priority=cls, deadline=deadline))
+    return out
+
+
+def cancellation_storm(requests: List[Request], *, frac: float = 0.15,
+                       start: float = 0.0, end: float = 10.0,
+                       seed: int = 0) -> List[tuple]:
+    """Pre-generated client-cancellation schedule: seeded ``frac`` sample
+    of the requests arriving before ``end``, each cancelled at a seeded
+    time in ``[max(start, arrival), end)``.
+
+    This is the WORKLOAD-level storm: explicit ``(t, req_id)`` pairs
+    handed to ``ServingCluster(cancels=...)``, so two bench cells that
+    differ only in control policy (brownout on vs off) cancel the SAME
+    requests at the SAME instants.  The dynamic in-flight variant —
+    victims drawn from whatever happens to be live — is the fault-spec
+    ``cancelstorm:`` grammar (serving/faults.py), composable with
+    crash/straggler chaos."""
+    if not 0.0 < frac <= 1.0:
+        raise ValueError("storm frac must be in (0, 1]")
+    if end <= start:
+        raise ValueError("storm window must have end > start")
+    rng = np.random.default_rng(seed)
+    cands = [r for r in requests if r.arrival < end]
+    if not cands:
+        return []
+    k = min(max(int(round(frac * len(cands))), 1), len(cands))
+    idx = rng.choice(len(cands), size=k, replace=False)
+    out = []
+    for i in sorted(int(j) for j in idx):
+        r = cands[i]
+        lo = max(start, r.arrival + 1e-6)
+        hi = max(end, lo + 1e-6)
+        out.append((float(rng.uniform(lo, hi)), r.req_id))
+    return sorted(out)
+
+
 @dataclass
 class RateTrace:
     times: np.ndarray

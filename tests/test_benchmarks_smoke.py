@@ -213,3 +213,5 @@ def test_make_tables_end_to_end():
     assert "BENCH_control" in res.stdout or "control plane" in res.stdout
     # and the disaggregated-fleet grid
     assert "BENCH_disagg" in res.stdout or "Disaggregated" in res.stdout
+    # and the overload-surge gate
+    assert "BENCH_surge" in res.stdout or "Overload surge" in res.stdout

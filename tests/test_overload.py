@@ -1,0 +1,491 @@
+"""Overload-resilient request lifecycle: deadlines, client cancellation,
+priority classes, class-weighted admission and the fleet brownout ladder.
+
+The golden e2e here is the surge gate: cancelling or expiring a request at
+ANY point of its life releases every device block, CoW pin, host-KV pin
+and queue slot it holds (I8: full-pool completeness — no block stranded in
+no tier), every terminal outcome is accounted per class, and surviving
+streams commit byte-identical to the cancellation-free run.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving.cluster import FAILED, ServingCluster
+from repro.serving.controlplane import (AdmissionController,
+                                        BROWNOUT_STAGES, BrownoutController,
+                                        ReplicaSnapshot)
+from repro.serving.costmodel import RTX_4090
+from repro.serving.faults import (CancelStorm, FaultInjector, FaultPlan,
+                                  RetryPolicy)
+from repro.serving.kv_cache import BlockManager
+from repro.serving.request import Request, Sequence, class_rank
+from repro.serving.simulator import (SimConfig, build_sim_cluster,
+                                     build_sim_engine)
+from repro.serving.workload import (SURGE_CLASSES, cancellation_storm,
+                                    poisson_requests, surge_requests,
+                                    surge_trace)
+
+
+def _cfg(**kw):
+    kw.setdefault("max_batch", 256)
+    return SimConfig(target=configs.get_config("paper-7b"),
+                     draft=configs.get_draft_config("paper-7b"),
+                     hw=RTX_4090, seed=0, **kw)
+
+
+def _sha(m):
+    stream = sorted((r.req_id, r.tokens) for r in m.requests)
+    return hashlib.sha256(repr(stream).encode()).hexdigest()[:16]
+
+
+def _check_all(cl: ServingCluster):
+    for i, eng in enumerate(cl.replicas):
+        eng.scheduler.bm.check_invariants(failed=cl.state[i] == FAILED)
+
+
+def _snap(ttft=0.0, kv=1.0, decode=0):
+    return ReplicaSnapshot(replica_id=0, t=0.0, clock=0.0, load=0,
+                           decode_count=decode, prefill_backlog_tokens=0,
+                           kv_allocatable=int(kv * 1000), kv_total=1000,
+                           ewma_ttft=ttft, ewma_tpot=0.01,
+                           predicted_ttft=ttft)
+
+
+# ---------------------------------------------------------------------------
+# engine lifecycle: cancellation releases everything (I8)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_running_releases_blocks_and_accounts():
+    eng = build_sim_engine(_cfg(), "nightjar")
+    reqs = [Request(i, 0.0, prompt_len=64, output_len=200) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    assert eng.scheduler.num_running > 0
+    victim = eng.scheduler.running[0].req_id
+    assert eng.cancel_request(victim) is True
+    assert eng.cancel_request(victim) is False     # idempotent: already gone
+    assert [c["req_id"] for c in eng.metrics.cancelled] == [victim]
+    eng.scheduler.bm.check_invariants()            # I8: nothing leaked
+    while eng.step() is not None:
+        pass
+    assert len(eng.metrics.requests) == 3
+    assert victim not in {r.req_id for r in eng.metrics.requests}
+    # the cancelled request's orphaned TTFT sample was withdrawn
+    assert len(eng.metrics.ttfts) == 3
+    eng.scheduler.bm.check_invariants()
+
+
+def test_cancel_waiting_and_pending():
+    eng = build_sim_engine(_cfg(), "nightjar")
+    now_req = Request(0, 0.0, prompt_len=32, output_len=8)
+    later = Request(1, 50.0, prompt_len=32, output_len=8)
+    eng.submit(now_req)
+    eng.submit(later)
+    # pending (arrival not reached) is cancellable
+    assert eng.cancel_request(1) is True
+    eng.step()
+    while eng.step() is not None:
+        pass
+    assert len(eng.metrics.requests) == 1
+    assert len(eng.metrics.cancelled) == 1
+    assert eng.cancel_request(99) is False         # unknown id
+    eng.scheduler.bm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# deadlines: reaped at dispatch, mid-decode, and from idle
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expired_mid_decode_is_reaped():
+    eng = build_sim_engine(_cfg(), "nightjar")
+    eng.submit(Request(0, 0.0, prompt_len=64, output_len=100_000,
+                       deadline=0.5))
+    eng.submit(Request(1, 0.0, prompt_len=64, output_len=32))
+    steps = 0
+    while eng.step() is not None and steps < 100_000:
+        steps += 1
+    assert [e["req_id"] for e in eng.metrics.expired] == [0]
+    assert {r.req_id for r in eng.metrics.requests} == {1}
+    eng.scheduler.bm.check_invariants()
+
+
+def test_deadline_expiry_is_actionable_from_idle():
+    """A deadline-carrying waiting request on an otherwise idle engine is
+    never stranded: its expiry is the next actionable event and the reap
+    fires exactly there (``>=`` boundary)."""
+    eng = build_sim_engine(_cfg(max_batch=1), "nightjar")
+    eng.submit(Request(0, 0.0, prompt_len=64, output_len=100_000,
+                       deadline=1_000.0))
+    eng.submit(Request(1, 0.0, prompt_len=64, output_len=8, deadline=2.0))
+    steps = 0
+    while eng.step() is not None and steps < 200_000:
+        steps += 1
+    # req 1 never fit the batch of 1 and expired at t=2.0; req 0 expired
+    # mid-decode at t=1000 — both accounted, neither finished
+    assert {e["req_id"] for e in eng.metrics.expired} == {0, 1}
+    assert eng.metrics.requests == []
+    eng.scheduler.bm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# priority classes: preemption order
+# ---------------------------------------------------------------------------
+
+
+def test_class_rank_and_preemption_key_order():
+    assert class_rank("interactive") < class_rank("batch") \
+        < class_rank("best_effort") < class_rank("mystery")
+    eng = build_sim_engine(_cfg(), "nightjar")
+    key = eng.scheduler._age_key
+    old_inter = Sequence(Request(0, 0.0, 8, 8, priority="interactive"))
+    new_inter = Sequence(Request(1, 5.0, 8, 8, priority="interactive"))
+    old_be = Sequence(Request(2, 0.0, 8, 8, priority="best_effort"))
+    # preemption picks max(key): best_effort loses to ANY interactive,
+    # and within a class the newest request loses first
+    assert key(old_be) > key(new_inter) > key(old_inter)
+
+
+# ---------------------------------------------------------------------------
+# admission: class-weighted shedding
+# ---------------------------------------------------------------------------
+
+
+def test_admission_class_weights_shed_order_and_accounting():
+    adm = AdmissionController(shed_factor=1.5, resume_factor=1.0,
+                              class_weights={"interactive": 3.0,
+                                             "best_effort": 0.5})
+    be = Request(0, 0.0, 8, 8, slo=1.0, priority="best_effort")
+    ia = Request(1, 0.0, 8, 8, slo=1.0, priority="interactive")
+    # forecast 2.0: past best_effort's 0.75 threshold, under
+    # interactive's 4.5 — class-ordered shedding at the same forecast
+    assert adm.should_shed(be, 2.0) is True
+    assert adm.should_shed(ia, 2.0) is False
+    assert adm.shedding is True                    # any class latched
+    assert adm.shed_by_class == {"best_effort": 1}
+    # best_effort resumes when forecast drops below slo * resume * weight
+    assert adm.should_shed(be, 0.4) is False
+    assert adm.shedding is False
+    assert adm.shed_count == 1
+
+
+def test_admission_no_weights_single_class_unchanged():
+    """Without class_weights every class sheds at the same threshold —
+    exactly the pre-class behaviour."""
+    a = AdmissionController(shed_factor=1.5)
+    b = AdmissionController(shed_factor=1.5)
+    r1 = Request(0, 0.0, 8, 8, slo=1.0)
+    r2 = Request(1, 0.0, 8, 8, slo=1.0, priority="best_effort")
+    for f in (0.5, 2.0, 2.0, 0.9, 0.5):
+        assert a.should_shed(r1, f) == b.should_shed(r2, f)
+    with pytest.raises(ValueError):
+        AdmissionController(class_weights={"interactive": 0.0})
+    with pytest.raises(ValueError):
+        AdmissionController(shed_factor=1.0, resume_factor=2.0)
+
+
+# ---------------------------------------------------------------------------
+# brownout ladder: hysteresis, cooldowns, rung semantics
+# ---------------------------------------------------------------------------
+
+
+def test_brownout_ladder_climbs_one_rung_per_eval_with_cooldown():
+    bo = BrownoutController(slo=1.0, cooldown_s=1.0, check_interval_s=0.0)
+    hot = [_snap(ttft=5.0)]
+    assert bo.evaluate(0.0, hot)["to"] == "spec_off"
+    assert bo.evaluate(0.5, hot) is None           # inside cooldown
+    assert bo.evaluate(1.1, hot)["to"] == "draft_offload"
+    assert bo.evaluate(2.2, hot)["to"] == "output_cap"
+    assert bo.evaluate(3.3, hot)["to"] == "shed"
+    assert bo.evaluate(4.4, hot) is None           # top rung: nowhere to go
+    assert bo.stage == len(BROWNOUT_STAGES) - 1
+    # calm unwinds one rung at a time
+    calm = [_snap(ttft=0.1, kv=0.9)]
+    assert bo.evaluate(5.5, calm)["to"] == "output_cap"
+    assert bo.evaluate(6.6, calm)["to"] == "draft_offload"
+    assert bo.evaluate(7.7, calm)["to"] == "spec_off"
+    assert bo.evaluate(8.8, calm)["to"] == "normal"
+    assert [e["stage"] for e in bo.events] == [1, 2, 3, 4, 3, 2, 1, 0]
+
+
+def test_brownout_kv_pressure_and_middle_ground_hold():
+    bo = BrownoutController(slo=1.0, kv_low_frac=0.10, kv_calm_frac=0.30,
+                            cooldown_s=0.0, check_interval_s=0.0)
+    # KV starvation alone escalates, even at a healthy forecast
+    assert bo.evaluate(0.0, [_snap(ttft=0.1, kv=0.05)])["to"] == "spec_off"
+    # neither pressure nor calm (kv between low and calm): hold the rung
+    assert bo.evaluate(1.0, [_snap(ttft=0.1, kv=0.2)]) is None
+    assert bo.stage == 1
+    # fully calm: unwind
+    assert bo.evaluate(2.0, [_snap(ttft=0.1, kv=0.5)])["to"] == "normal"
+
+
+def test_brownout_rung_queries_and_shed_class_order():
+    bo = BrownoutController(slo=1.0, best_effort_cap=16,
+                            cooldown_s=0.0, check_interval_s=0.0)
+    ia = Request(0, 0.0, 8, 8, slo=0.5, priority="interactive")
+    ba = Request(1, 0.0, 8, 8, slo=3.0, priority="batch")
+    be = Request(2, 0.0, 8, 8, priority="best_effort")
+    hot = [_snap(ttft=5.0)]
+    for _ in range(3):
+        bo.evaluate(bo.stage, hot)
+    assert bo.spec_off and bo.offload_draft
+    assert bo.output_cap_for("best_effort") == 16
+    assert bo.output_cap_for("interactive") is None
+    # below the shed rung nothing sheds
+    assert not bo.should_shed(be, 100.0)
+    bo.evaluate(3.0, hot)
+    assert bo.stage_name == "shed"
+    assert bo.should_shed(be, 0.0)                 # best_effort: always
+    assert bo.should_shed(ba, 5.0)                 # batch: forecast > slo
+    assert not bo.should_shed(ba, 1.0)             # batch: still viable
+    assert not bo.should_shed(ia, 100.0)           # interactive: never
+    assert bo.shed_count == 2
+    with pytest.raises(ValueError):
+        BrownoutController(slo=0.0)
+    with pytest.raises(ValueError):
+        BrownoutController(enter_factor=1.0, exit_factor=1.0)
+    with pytest.raises(ValueError):
+        BrownoutController(kv_low_frac=0.5, kv_calm_frac=0.1)
+
+
+def test_brownout_check_interval_prefilter():
+    bo = BrownoutController(check_interval_s=0.25)
+    assert bo.due(0.0)
+    bo.evaluate(0.0, [_snap()])
+    assert not bo.due(0.1)
+    assert bo.due(0.25)
+
+
+# ---------------------------------------------------------------------------
+# fault grammar: cancelstorm + seeded retry jitter
+# ---------------------------------------------------------------------------
+
+
+def test_cancelstorm_grammar_and_validation():
+    plan = FaultPlan.parse("cancelstorm:0.25@2.0..6.0;crash:1@3.0")
+    assert plan.cancelstorms == (CancelStorm(0.25, 2.0, 6.0),)
+    assert len(plan.crashes) == 1
+    assert not plan.empty
+    assert FaultPlan.parse("cancelstorm:0.25@2.0..6.0") \
+        == FaultPlan.parse("cancelstorm:0.25@2.0..6.0")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("cancelstorm:0@1..2")      # frac must be > 0
+    with pytest.raises(ValueError):
+        FaultPlan.parse("cancelstorm:1.5@1..2")    # frac must be <= 1
+    with pytest.raises(ValueError):
+        FaultPlan.parse("cancelstorm:0.5@5..2")    # end must be > start
+    with pytest.raises(ValueError):
+        FaultPlan.parse("cancelstorm:0.5@3")       # missing window
+
+
+def test_pick_cancel_victims_deterministic_and_rng_isolated():
+    storm = CancelStorm(0.5, 2.0, 6.0)
+    live = set(range(20))
+    a = FaultInjector(FaultPlan(cancelstorms=(storm,)), seed=7)
+    b = FaultInjector(FaultPlan(cancelstorms=(storm,)), seed=7)
+    va, vb = a.pick_cancel_victims(storm, live), \
+        b.pick_cancel_victims(storm, live)
+    assert va == vb and len(va) == 10
+    assert all(2.0 <= t <= 6.0 for t, _ in va)
+    assert va == sorted(va)
+    assert a.stats["storm_cancels"] == 10
+    assert a.pick_cancel_victims(storm, set()) == []
+    # dedicated RNG stream: drawing storm victims never perturbs the
+    # corruption/crash draws, so adding a storm to an existing chaos plan
+    # keeps its golden streams byte-identical
+    c = FaultInjector(FaultPlan(cancelstorms=(storm,)), seed=7)
+    before = c.rng.random(4).tolist()
+    d = FaultInjector(FaultPlan(cancelstorms=(storm,)), seed=7)
+    d.pick_cancel_victims(storm, live)
+    assert d.rng.random(4).tolist() == before
+    # the storm appears in the timed-event schedule at its start
+    assert ("cancelstorm" in {k for _, k, _ in a.timed_events()})
+
+
+def test_retry_backoff_jitter_optin_and_deterministic():
+    plain = RetryPolicy()
+    assert plain.backoff(1) == pytest.approx(0.05)   # pinned schedule
+    jit = RetryPolicy(jitter_frac=0.2)
+    # without an rng the jittered policy still returns the base schedule
+    assert jit.backoff(1) == pytest.approx(0.05)
+    r1 = np.random.default_rng(3)
+    r2 = np.random.default_rng(3)
+    s1 = [jit.backoff(a, rng=r1) for a in range(1, 6)]
+    s2 = [jit.backoff(a, rng=r2) for a in range(1, 6)]
+    assert s1 == s2                                  # seeded: replayable
+    base = [plain.backoff(a) for a in range(1, 6)]
+    assert s1 != base                                # jitter actually moves
+    for got, b in zip(s1, base):
+        assert b * 0.8 <= got <= b * 1.2             # bounded by frac
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter_frac=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter_frac=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# contraction regression: shared prefix blocks migrate exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_contraction_migrates_shared_blocks_once():
+    """A CoW-shared prefix block (refcount > 1) above the contraction
+    boundary appears in several tables but must migrate ONCE: the old
+    per-reference evict list reserved one dst per REFERENCE, the mapping
+    collapsed, and the surplus dst block stranded in no tier (caught by
+    I8)."""
+    bm = BlockManager(4, 4, prefix_caching=True)
+    bm.allocate(99, 16)                # fill the base pool (blocks 0-3)
+    bm.expand(4)                       # attach blocks 4-7
+    toks = list(range(8))
+    bm.allocate(1, 8)                  # lands above the boundary
+    bm.register_prefix(1, toks, 8)
+    blocks, matched = bm.match_prefix(toks)
+    assert matched == 8
+    bm.share(2, blocks, 8)             # refcount 2 on both high blocks
+    assert all(bm.refcount[b] == 2 for b in blocks)
+    bm.release(99)                     # room below the boundary
+    plan = bm.plan_contraction()
+    assert plan is not None
+    assert len(plan.src) == len(set(plan.src)) == 2
+    bm.commit_contraction(plan)
+    bm.check_invariants()              # I8: no block stranded in no tier
+    assert bm.total_blocks == 4
+    assert bm.tables[1] == bm.tables[2]
+    assert all(b < 4 for b in bm.tables[1])
+
+
+# ---------------------------------------------------------------------------
+# surge workload: seeded classes, deadlines, cancellation storms
+# ---------------------------------------------------------------------------
+
+
+def test_surge_workload_deterministic_and_classed():
+    trace = surge_trace(base=10.0, surge_mult=3.0, base_s=2.0, surge_s=4.0,
+                        recover_s=2.0, seed=5)
+    a = surge_requests(160, trace=trace, dataset="alpaca", seed=3)
+    b = surge_requests(160, trace=trace, dataset="alpaca", seed=3)
+    assert [(r.req_id, r.arrival, r.priority, r.slo, r.deadline)
+            for r in a] == \
+        [(r.req_id, r.arrival, r.priority, r.slo, r.deadline) for r in b]
+    classes = {r.priority for r in a}
+    assert classes <= set(SURGE_CLASSES)
+    assert len(classes) >= 2
+    for r in a:
+        slo, dl = SURGE_CLASSES[r.priority][1], SURGE_CLASSES[r.priority][2]
+        assert r.slo == slo and r.deadline == dl
+    # the plateau is actually ~3x the baseline arrival density
+    mid = sum(1 for r in a if 2.0 <= r.arrival < 6.0) / 4.0
+    lo = sum(1 for r in a if r.arrival < 2.0) / 2.0
+    assert mid > 1.5 * max(lo, 1.0)
+
+
+def test_cancellation_storm_seeded_and_bounded():
+    reqs = poisson_requests(20, 40, dataset="alpaca", seed=1)
+    a = cancellation_storm(reqs, frac=0.25, start=0.5, end=1.5, seed=9)
+    assert a == cancellation_storm(reqs, frac=0.25, start=0.5, end=1.5,
+                                   seed=9)
+    assert a == sorted(a)
+    ids = {r.req_id for r in reqs}
+    arrivals = {r.req_id: r.arrival for r in reqs}
+    for t, rid in a:
+        assert rid in ids
+        assert t > arrivals[rid]          # never before the client sent it
+    with pytest.raises(ValueError):
+        cancellation_storm(reqs, frac=0.0)
+    with pytest.raises(ValueError):
+        cancellation_storm(reqs, frac=0.5, start=2.0, end=1.0)
+
+
+# ---------------------------------------------------------------------------
+# cluster e2e: cancel-at-every-step soak + survivor stream identity
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_at_every_step_soak():
+    """Cancelling any subset of requests at ANY instant of the run leaks
+    nothing and never perturbs the SURVIVORS' committed streams."""
+    reqs = poisson_requests(25, 60, dataset="alpaca", seed=2)
+    base = build_sim_cluster(_cfg(), 2, "nightjar").run(list(reqs))
+    base_toks = {r.req_id: r.tokens for r in base.requests}
+    victims = [5, 17, 33, 48]
+    for t in np.arange(0.25, 3.1, 0.4):
+        cl = build_sim_cluster(_cfg(), 2, "nightjar",
+                               cancels=[(float(t), v) for v in victims])
+        m = cl.run(list(reqs))
+        cancelled = {c["req_id"] for c in m.cancelled}
+        finished = {r.req_id for r in m.requests}
+        # accounted: every request is in exactly one terminal bucket
+        assert len(finished) + len(cancelled) == 60, f"t={t}"
+        assert finished.isdisjoint(cancelled)
+        # survivors commit byte-identical streams
+        for r in m.requests:
+            assert r.tokens == base_toks[r.req_id], f"drift at t={t}"
+        _check_all(cl)
+
+
+def test_cluster_cancelstorm_fault_spec_composes_with_chaos():
+    """The cancelstorm grammar rides the fault injector: composable with a
+    crash in the same plan, deterministic for a fixed seed, and nothing
+    double-counts across terminal buckets."""
+    reqs = poisson_requests(20, 80, dataset="alpaca", seed=1)
+    plan = "cancelstorm:0.3@1.0..3.0;crash:1@2.0"
+    runs = []
+    for _ in range(2):
+        cl = build_sim_cluster(_cfg(), 2, "nightjar", fault_plan=plan)
+        m = cl.run(list(reqs))
+        buckets = (len(m.requests), len(m.cancelled),
+                   len(m.failed_requests), len(m.expired))
+        assert sum(buckets) == 80
+        assert len(m.crashes) == 1
+        assert cl.faults.stats["storm_cancels"] > 0
+        _check_all(cl)
+        runs.append((_sha(m), buckets,
+                     sorted(c["req_id"] for c in m.cancelled)))
+    assert runs[0] == runs[1]
+
+
+def test_cluster_brownout_events_observable_and_applied():
+    """An aggressive ladder under a modest stream transitions observably,
+    applies its rungs to every live replica, and the metrics summary
+    carries the timeline."""
+    bo = BrownoutController(slo=0.001, enter_factor=1.01, exit_factor=0.5,
+                            cooldown_s=0.1, check_interval_s=0.05)
+    reqs = poisson_requests(30, 60, dataset="alpaca", seed=3)
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", brownout=bo)
+    m = cl.run(list(reqs))
+    fired = [e["to"] for e in m.brownout_events]
+    assert "spec_off" in fired and "draft_offload" in fired
+    for e in m.brownout_events:
+        assert set(e) >= {"at", "from", "to", "stage", "predicted_ttft",
+                          "kv_headroom"}
+    s = m.summary()
+    assert s["brownout"]["transitions"] == len(m.brownout_events)
+    assert "spec_off" in s["brownout"]["stages_entered"]
+    _check_all(cl)
+
+
+def test_cluster_class_summary_accounts_every_request():
+    trace = surge_trace(base=15.0, surge_mult=3.0, base_s=2.0, surge_s=4.0,
+                        recover_s=2.0, seed=5)
+    reqs = surge_requests(100, trace=trace, dataset="alpaca", seed=3)
+    cancels = cancellation_storm(reqs, frac=0.2, start=1.0, end=5.0, seed=6)
+    cl = build_sim_cluster(_cfg(), 2, "nightjar", shed_factor=1.5,
+                           class_weights={"interactive": 2.0,
+                                          "best_effort": 0.5},
+                           cancels=cancels)
+    m = cl.run(list(reqs))
+    pc = m.class_summary()
+    assert sum(b["offered"] for b in pc.values()) == 100
+    for b in pc.values():
+        assert b["offered"] == (b["finished"] + b["shed"] + b["cancelled"]
+                                + b["expired"] + b["failed"])
+    assert sum(b["cancelled"] for b in pc.values()) == len(m.cancelled)
+    _check_all(cl)
