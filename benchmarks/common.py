@@ -45,7 +45,7 @@ def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
                 chunk_tokens: int = 0, slo: float = None,
                 prefix_caching: bool = False, requests=None,
                 num_blocks: int = None, kv_offload: bool = False,
-                host_kv_blocks: int = 0):
+                host_kv_blocks: int = 0, record_timeline: bool = False):
     target, draft, hw = PAIRS[pair]
     cfg = SimConfig(target=target, draft=draft, hw=hw, max_batch=max_batch,
                     seed=seed, enable_offload=enable_offload,
@@ -64,7 +64,7 @@ def run_serving(pair: str, policy: str, *, rate: float = None, n: int = None,
     else:
         reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1,
                                 slo=slo)
-    m = eng.run(reqs, max_steps=500_000)
+    m = eng.run(reqs, max_steps=500_000, record_timeline=record_timeline)
     return m, eng
 
 
@@ -75,7 +75,8 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
                 requests=None, trace=None, router_kwargs=None,
                 shed_factor=None, class_weights=None, autoscale=None,
                 disaggregate=None, fault_plan=None, brownout=None,
-                cancels=None, num_blocks=None, enable_offload=True):
+                cancels=None, num_blocks=None, enable_offload=True,
+                record_timeline: bool = False):
     """Run one cluster cell on the simulated tier; rate is the TOTAL fleet
     arrival rate.  ``requests``/``trace`` override the Poisson stream;
     ``shed_factor``/``autoscale`` enable the control-plane admission and
@@ -100,7 +101,7 @@ def run_cluster(pair: str, n_replicas: int, policy: str = "nightjar", *,
         reqs = trace.sample_requests(n, dataset=dataset, seed=seed + 1)
     else:
         reqs = poisson_requests(rate, n, dataset=dataset, seed=seed + 1)
-    m = cl.run(reqs)
+    m = cl.run(reqs, record_timeline=record_timeline)
     return m, cl
 
 

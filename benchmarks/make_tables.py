@@ -283,6 +283,70 @@ def surge_table():
     print("\n".join(out))
 
 
+def trace_table():
+    """Render the flight-recorder report from ``trace_report.py --json-out``.
+
+    Two tables off one artifact: the speculation-efficiency surface
+    (per batch-bin/gamma cell of the planner's decision space) and the
+    time-in-stage waterfall over finished requests, plus the measured
+    restart-cost line.  n/a-by-contract: an acceptance cell only exists
+    when drafts were proposed (gamma > 0), a latency-per-token cell only
+    when the cell committed tokens — absent keys render ``n/a``."""
+    path = bench_path("BENCH_trace_report.json")
+    if not os.path.exists(path):
+        print("BENCH_trace_report.json: missing (run launch/serve.py "
+              "--trace T.jsonl, then benchmarks.trace_report T.jsonl "
+              "--json-out BENCH_trace_report.json)")
+        return
+    data = json.load(open(path))
+    wf = data.get("waterfall", {})
+    out = [f"\n### Flight recorder ({data.get('events')} trace events, "
+           f"{wf.get('requests', 0)} requests, "
+           f"{wf.get('finished', 0)} finished)\n"]
+    sb = wf.get("stage_breakdown", {})
+    if sb:
+        # lifecycle order, not the JSON round-trip's alphabetical order
+        order = ("queue", "prefill", "decode", "transfer", "stall")
+        out.append("| stage | mean s/req | % of e2e |")
+        out.append("|---|---|---|")
+        for stage in sorted(sb, key=lambda s: (order.index(s)
+                                               if s in order else 99, s)):
+            r = sb[stage]
+            out.append(f"| {stage} | {r['mean_s']:.4f} "
+                       f"| {100 * r['frac_of_e2e']:.1f}% |")
+        out.append(f"\nfinished e2e: mean={wf['e2e_mean_s']:.3f}s "
+                   f"p50={wf['e2e_p50_s']:.3f}s p99={wf['e2e_p99_s']:.3f}s")
+    surf = data.get("spec_surface", {})
+    if surf:
+        out.append("\n| batch bin | gamma | steps | acceptance "
+                   "| ms / committed tok |")
+        out.append("|---|---|---|---|---|")
+        for key in sorted(surf, key=lambda k: tuple(map(int, k.split("/")))):
+            r = surf[key]
+            bb, g = key.split("/")
+            acc = r.get("acceptance_rate")
+            lpc = r.get("latency_per_committed_s")
+            out.append(
+                f"| <={bb} | {g} | {r['steps']} "
+                f"| {'n/a' if acc is None else format(acc, '.3f')} "
+                f"| {'n/a' if lpc is None else format(1e3 * lpc, '.3f')} |")
+    eps = data.get("restart_episodes", [])
+    closed = [e for e in eps if e.get("restart_cost_s") is not None]
+    if closed:
+        out.append(f"\nmeasured restart cost: "
+                   f"mean={data['restart_cost_mean_s']:.3f}s over "
+                   f"{len(closed)} episode(s) "
+                   f"(recovery {data['restart_recovery_mean_s']:.3f}s; "
+                   + "; ".join(
+                       f"#{i}: {e['restart_cost_s']:.2f}s via "
+                       f"{e['deepest_stage']}" for i, e in enumerate(closed))
+                   + ")")
+    elif eps:
+        out.append(f"\nrestart episodes: {len(eps)} entered, none closed "
+                   "(no post-resume speculative commit in trace)")
+    print("\n".join(out))
+
+
 def main():
     for fname in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
         cells = [fix_artifact(c) for c in load(fname)]
@@ -298,6 +362,7 @@ def main():
     disagg_table()
     chaos_table()
     surge_table()
+    trace_table()
 
 
 if __name__ == "__main__":

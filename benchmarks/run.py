@@ -103,7 +103,8 @@ def fig11_dynamic_trace(csv: CSV, fast: bool):
                                period_s=20)
     n = 200 if fast else 500
     for pol in (["ar", "sd", "nightjar"] if fast else POLICIES):
-        m, _ = run_serving("7b", pol, trace=trace, n=n, dataset="sharegpt")
+        m, _ = run_serving("7b", pol, trace=trace, n=n, dataset="sharegpt",
+                           record_timeline=True)
         # bucket the timeline into 5s windows
         win, acc = {}, {}
         for r in m.timeline:
@@ -393,7 +394,7 @@ def cluster_sweep(csv: CSV, fast: bool):
             t0 = time.perf_counter()
             m, cl = run_cluster("7b", n_rep, "nightjar", router="jsq",
                                 rate=rate, n=n, dataset="alpaca",
-                                max_batch=max_batch)
+                                max_batch=max_batch, record_timeline=True)
             agg[(n_rep, label)] = m.throughput
             sat, arms = [], []
             for i, rm in enumerate(m.per_replica):

@@ -1,0 +1,311 @@
+"""Trace analyzer: waterfalls, speculation surface, restart-cost attribution.
+
+Consumes the JSONL traces emitted by ``TraceRecorder.export_jsonl``
+(``launch/serve.py --trace PATH``) and derives three reports:
+
+* **time-in-stage waterfalls** — per finished request, how its end-to-end
+  latency splits across queue / prefill / decode / transfer / stall.  The
+  stage machine closes every span contiguously, so the per-request stage
+  durations sum to the e2e latency exactly (the span-balance invariant).
+
+* **speculation-efficiency surface** — per (batch-size bin, gamma) cell of
+  the planner's decision space: steps taken, draft-token acceptance rate,
+  and latency per committed token.  This is the empirical reward surface
+  the MAB explores (Eq. 4's measured counterpart).
+
+* **restart-cost episodes** — the measured cost of a spec-off excursion:
+  from the brownout ladder leaving ``normal`` (speculation suppressed /
+  draft offloaded) through the draft reload to the first speculative
+  commit after returning to ``normal``.  ``restart_cost_s`` is the full
+  span; ``recovery_s`` isolates the post-resume part (reload + first
+  verified step) that the paper's restart-cost term models.
+
+Usage::
+
+    python -m benchmarks.trace_report TRACE.jsonl [--json-out OUT.json]
+
+With ``--json-out`` the structured report is also written as a
+``BENCH_*``-style artifact for ``make_tables.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serving.observability import OUTCOMES, STAGES  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# loading
+# ---------------------------------------------------------------------------
+
+
+def load_trace(path: str) -> list:
+    """One JSON object per line; returns events in emit order."""
+    events = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def _percentile(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    i = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+# ---------------------------------------------------------------------------
+# time-in-stage waterfalls
+# ---------------------------------------------------------------------------
+
+
+def stage_waterfalls(events: list) -> dict:
+    """Per-request lifecycle: req_id -> {submit, end, outcome, e2e,
+    stages: {stage: seconds}}.  Only requests with a terminal outcome are
+    returned (open spans at trace end have no e2e latency to partition)."""
+    reqs: dict = {}
+    for e in events:
+        rid = e.get("req")
+        if rid is None or e.get("cat") != "request":
+            continue
+        r = reqs.setdefault(rid, {"submit": None, "end": None,
+                                  "outcome": None,
+                                  "stages": {s: 0.0 for s in STAGES}})
+        if e["ph"] == "X":
+            r["stages"][e["name"]] = r["stages"].get(e["name"], 0.0) \
+                + e["dur"]
+        elif e["name"] == "submit":
+            r["submit"] = e["t"]
+        elif e["name"] in OUTCOMES:
+            r["outcome"] = e["name"]
+            r["end"] = e["t"]
+    out = {}
+    for rid, r in sorted(reqs.items()):
+        if r["outcome"] is None or r["submit"] is None:
+            continue
+        r["e2e"] = round(r["end"] - r["submit"], 9)
+        out[rid] = r
+    return out
+
+
+def waterfall_summary(waterfalls: dict) -> dict:
+    """Aggregate the per-request waterfalls: outcome counts, and for the
+    finished population the mean seconds + fraction of e2e per stage and
+    e2e percentiles."""
+    outcomes: dict = {}
+    for r in waterfalls.values():
+        outcomes[r["outcome"]] = outcomes.get(r["outcome"], 0) + 1
+    fin = [r for r in waterfalls.values() if r["outcome"] == "finished"]
+    summary = {"requests": len(waterfalls),
+               "outcomes": dict(sorted(outcomes.items())),
+               "finished": len(fin)}
+    if fin:
+        tot_e2e = sum(r["e2e"] for r in fin)
+        stages = {}
+        for s in STAGES:
+            sec = sum(r["stages"].get(s, 0.0) for r in fin)
+            stages[s] = {"mean_s": round(sec / len(fin), 6),
+                         "frac_of_e2e": round(sec / tot_e2e, 4)
+                         if tot_e2e > 0 else 0.0}
+        lats = sorted(r["e2e"] for r in fin)
+        summary["stage_breakdown"] = stages
+        summary["e2e_mean_s"] = round(tot_e2e / len(fin), 6)
+        summary["e2e_p50_s"] = round(_percentile(lats, 0.50), 6)
+        summary["e2e_p99_s"] = round(_percentile(lats, 0.99), 6)
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# speculation-efficiency surface
+# ---------------------------------------------------------------------------
+
+
+def batch_bin(b: int) -> int:
+    """Power-of-two batch-size bucket (1, 2, 4, ... as in the planner's
+    bucketed state space)."""
+    return 1 << max(int(b) - 1, 0).bit_length() if b > 1 else 1
+
+
+def spec_surface(events: list) -> dict:
+    """Per (batch bin, gamma) cell: steps, acceptance rate and latency per
+    committed token, from the engine step spans.  Keys are strings
+    ("bin/gamma") so the report round-trips through JSON."""
+    cells: dict = {}
+    for e in events:
+        if e.get("cat") != "engine" or e.get("name") != "step" \
+                or e.get("ph") != "X":
+            continue
+        a = e["args"]
+        if a["B"] <= 0:
+            continue
+        key = (batch_bin(a["B"]), a["gamma"])
+        c = cells.setdefault(key, {"steps": 0, "proposed": 0, "accepted": 0,
+                                   "committed": 0, "latency_s": 0.0})
+        c["steps"] += 1
+        c["proposed"] += a["gamma"] * a["B"]
+        c["accepted"] += a["accepted"]
+        c["committed"] += a["tokens"]
+        c["latency_s"] += e["dur"]
+    out = {}
+    for (bb, g), c in sorted(cells.items()):
+        row = {"steps": c["steps"], "committed_tokens": c["committed"]}
+        # n/a by contract: acceptance only defined when drafts were proposed
+        if c["proposed"] > 0:
+            row["acceptance_rate"] = round(c["accepted"] / c["proposed"], 4)
+        if c["committed"] > 0:
+            row["latency_per_committed_s"] = round(
+                c["latency_s"] / c["committed"], 9)
+        out[f"{bb}/{g}"] = row
+    return out
+
+
+# ---------------------------------------------------------------------------
+# restart-cost attribution
+# ---------------------------------------------------------------------------
+
+
+def restart_episodes(events: list) -> list:
+    """Measured spec-restart episodes from the fleet brownout transitions.
+
+    An episode opens when the ladder leaves ``normal`` (speculation is the
+    first capability shed) and closes at the first engine step that
+    commits speculative tokens (gamma > 0, tokens > 0) at or after the
+    ladder's return to ``normal``.  Draft ``reload`` events inside the
+    window are attributed to the episode.  Episodes still open at trace
+    end are reported with ``restart_cost_s: None``."""
+    evs = sorted(events, key=lambda e: e["t"])
+    episodes: list = []
+    cur = None
+    for e in evs:
+        cat, name = e.get("cat"), e.get("name")
+        if cat == "fleet" and name == "brownout":
+            a = e["args"]
+            if cur is None and a.get("from") == "normal":
+                cur = {"entry_t": e["t"], "deepest_stage": a.get("to"),
+                       "resume_t": None, "reloads": 0,
+                       "first_commit_t": None, "restart_cost_s": None}
+            elif cur is not None:
+                if cur["resume_t"] is None:
+                    cur["deepest_stage"] = max(
+                        cur["deepest_stage"], a.get("to", ""),
+                        key=lambda s: _stage_depth(s))
+                if a.get("to") == "normal":
+                    cur["resume_t"] = e["t"]
+        elif cur is not None and cat == "memmgr" and name == "reload":
+            cur["reloads"] += 1
+        elif cur is not None and cur["resume_t"] is not None \
+                and cat == "engine" and name == "step" and e["ph"] == "X":
+            a = e["args"]
+            if e["t"] >= cur["resume_t"] and a["gamma"] > 0 \
+                    and a["tokens"] > 0:
+                cur["first_commit_t"] = round(e["t"] + e["dur"], 9)
+                cur["restart_cost_s"] = round(
+                    cur["first_commit_t"] - cur["entry_t"], 9)
+                cur["spec_off_s"] = round(
+                    cur["resume_t"] - cur["entry_t"], 9)
+                cur["recovery_s"] = round(
+                    cur["first_commit_t"] - cur["resume_t"], 9)
+                episodes.append(cur)
+                cur = None
+    if cur is not None:
+        episodes.append(cur)   # still open at trace end
+    return episodes
+
+
+def _stage_depth(stage: str) -> int:
+    order = ("normal", "spec_off", "draft_offload", "output_cap", "shed")
+    return order.index(stage) if stage in order else -1
+
+
+# ---------------------------------------------------------------------------
+# report assembly
+# ---------------------------------------------------------------------------
+
+
+def analyze(events: list) -> dict:
+    waterfalls = stage_waterfalls(events)
+    episodes = restart_episodes(events)
+    closed = [ep for ep in episodes if ep["restart_cost_s"] is not None]
+    report = {"events": len(events),
+              "waterfall": waterfall_summary(waterfalls),
+              "spec_surface": spec_surface(events),
+              "restart_episodes": episodes}
+    if closed:
+        report["restart_cost_mean_s"] = round(
+            sum(ep["restart_cost_s"] for ep in closed) / len(closed), 6)
+        report["restart_recovery_mean_s"] = round(
+            sum(ep["recovery_s"] for ep in closed) / len(closed), 6)
+    return report
+
+
+def render(report: dict) -> str:
+    lines = [f"trace events: {report['events']}"]
+    wf = report["waterfall"]
+    lines.append(f"requests: {wf['requests']} "
+                 f"outcomes={wf['outcomes']}")
+    if "stage_breakdown" in wf:
+        lines.append(f"finished e2e: mean={wf['e2e_mean_s']:.3f}s "
+                     f"p50={wf['e2e_p50_s']:.3f}s p99={wf['e2e_p99_s']:.3f}s")
+        lines.append("time in stage (finished requests):")
+        for s, row in wf["stage_breakdown"].items():
+            lines.append(f"  {s:9s} mean={row['mean_s']:9.4f}s  "
+                         f"{100 * row['frac_of_e2e']:5.1f}% of e2e")
+    surf = report["spec_surface"]
+    if surf:
+        lines.append("speculation surface (batch bin / gamma):")
+        for key, row in surf.items():
+            acc = row.get("acceptance_rate")
+            lpc = row.get("latency_per_committed_s")
+            lines.append(
+                f"  B<={key.split('/')[0]:>4s} g={key.split('/')[1]:>2s}  "
+                f"steps={row['steps']:6d}  "
+                f"acc={'n/a' if acc is None else f'{acc:.3f}'}  "
+                f"lat/tok={'n/a' if lpc is None else f'{1e3 * lpc:.3f}ms'}")
+    eps = report["restart_episodes"]
+    lines.append(f"restart episodes: {len(eps)}")
+    for i, ep in enumerate(eps):
+        if ep["restart_cost_s"] is None:
+            lines.append(f"  #{i}: entered spec-off at t={ep['entry_t']:.3f}s"
+                         " — still open at trace end")
+        else:
+            lines.append(
+                f"  #{i}: t={ep['entry_t']:.3f}s -> {ep['deepest_stage']}"
+                f" ({ep['reloads']} reloads), resumed t={ep['resume_t']:.3f}s,"
+                f" first spec commit t={ep['first_commit_t']:.3f}s:"
+                f" restart_cost={ep['restart_cost_s']:.3f}s"
+                f" (spec_off={ep['spec_off_s']:.3f}s"
+                f" recovery={ep['recovery_s']:.3f}s)")
+    if "restart_cost_mean_s" in report:
+        lines.append(f"measured restart cost: "
+                     f"mean={report['restart_cost_mean_s']:.3f}s "
+                     f"(recovery {report['restart_recovery_mean_s']:.3f}s)")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace from --trace / export_jsonl")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the structured report as JSON "
+                         "(BENCH_trace_report.json for make_tables.py)")
+    args = ap.parse_args(argv)
+    report = analyze(load_trace(args.trace))
+    print(render(report))
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

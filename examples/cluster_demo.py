@@ -53,7 +53,8 @@ def main():
         rate = rate_per * args.replicas
         n = max(int(rate * args.duration), 40)
         cl = build_sim_cluster(cfg, args.replicas, "nightjar", router="jsq")
-        m = cl.run(poisson_requests(rate, n, dataset="alpaca", seed=1))
+        m = cl.run(poisson_requests(rate, n, dataset="alpaca", seed=1),
+                   record_timeline=True)
         print(f"\n{label} ({rate} req/s total, {n} requests): "
               f"aggregate {m.throughput:7.1f} tok/s, "
               f"mean latency {m.mean_latency:.2f}s")

@@ -36,7 +36,7 @@ def serve(policy_name: str, reqs):
     sched = ContinuousBatchingScheduler(bm, max_batch=4)
     policy = make_policy(policy_name, gamma_max=3, seed=0)
     engine = ServingEngine(backend, sched, policy, None, gamma_max=3)
-    metrics = engine.run(reqs, max_steps=2000)
+    metrics = engine.run(reqs, max_steps=2000, record_timeline=True)
     outputs = {r.req_id: backend.output_tokens(r.req_id) for r in reqs}
     return metrics, outputs
 

@@ -46,7 +46,7 @@ def main():
                         max_batch=256, seed=0)
         eng = build_sim_engine(cfg, pol)
         reqs = trace.sample_requests(args.requests, dataset="sharegpt", seed=1)
-        m = eng.run(reqs, max_steps=500_000)
+        m = eng.run(reqs, max_steps=500_000, record_timeline=True)
         results[pol] = m
         # throughput over 3s windows
         win = {}

@@ -142,6 +142,19 @@ def main():
                          "output cap -> class-ordered shedding, with "
                          "hysteresis and cooldowns; forces the cluster "
                          "path; pairs naturally with --shed-factor)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="flight recorder: write a structured trace of the "
+                         "run (request lifecycle spans, engine steps, fleet "
+                         "events) to PATH — deterministic, so same seed => "
+                         "byte-identical file (analyse with "
+                         "benchmarks/trace_report.py)")
+    ap.add_argument("--trace-format", choices=["jsonl", "chrome"],
+                    default="jsonl",
+                    help="trace file format: jsonl (trace_report.py input) "
+                         "or chrome (Perfetto / chrome://tracing viewable)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format to PATH at end of run")
     args = ap.parse_args()
 
     if args.kv_offload and args.prefix_caching != "on":
@@ -155,6 +168,11 @@ def main():
                  "is driven by the shared virtual clock)")
 
     from .. import configs
+
+    trace_rec = None
+    if args.trace or args.metrics_out:
+        from ..serving.observability import TraceRecorder
+        trace_rec = TraceRecorder()
 
     if args.tier == "sim":
         from ..serving.costmodel import (A100_40G, RTX_4090,
@@ -246,10 +264,10 @@ def main():
                 cfg, args.replicas, args.policy, router=args.router,
                 shed_factor=args.shed_factor or None, autoscale=autoscale,
                 disaggregate=disaggregate, fault_plan=fault_plan,
-                brownout=brownout)
+                brownout=brownout, trace=trace_rec)
             metrics = cluster.run(reqs)
         else:
-            engine = build_sim_engine(cfg, args.policy)
+            engine = build_sim_engine(cfg, args.policy, trace=trace_rec)
             metrics = engine.run(reqs)
     else:
         from ..core.bandits import make_policy
@@ -306,12 +324,22 @@ def main():
         engine = ServingEngine(backend, sched,
                                make_policy(args.policy, 3, seed=args.seed),
                                memmgr, gamma_max=3)
+        if trace_rec is not None:
+            engine.attach_trace(trace_rec)
         reqs = tiny_requests(min(args.requests, 16), rate_qps=args.rate,
                              prompt_len=16, output_len=16,
                              vocab=cfg.vocab_size, seed=args.seed,
                              template_len=(8 if args.dataset == "templated"
                                            else 0))
         metrics = engine.run(reqs, max_steps=5000)
+
+    if trace_rec is not None:
+        if args.trace:
+            trace_rec.export(args.trace, fmt=args.trace_format)
+        if args.metrics_out:
+            with open(args.metrics_out, "w", encoding="utf-8",
+                      newline="\n") as f:
+                f.write(trace_rec.registry.exposition())
 
     print(json.dumps(metrics.summary(), indent=1))
 

@@ -314,6 +314,29 @@ class ClusterMetrics:
             out.append(row)
         return out
 
+    def spec_summary(self) -> dict:
+        """Fleet-wide speculation aggregates: fold every replica's raw
+        per-gamma counters into one Metrics and reuse its formatting, so
+        cluster and single-engine summaries agree by construction."""
+        merged = Metrics()
+        for m in self.per_replica:
+            sp = m.spec
+            if not sp:
+                continue
+            ms = merged.spec
+            if not ms:
+                ms.update(steps=0, spec_steps=0, forced_off_steps=0,
+                          restarts=0, per_gamma={})
+            for k in ("steps", "spec_steps", "forced_off_steps", "restarts"):
+                ms[k] += sp.get(k, 0)
+            for gamma, g in sp.get("per_gamma", {}).items():
+                t = ms["per_gamma"].setdefault(
+                    gamma, {"steps": 0, "proposed": 0, "accepted": 0,
+                            "committed": 0, "latency_s": 0.0})
+                for k in t:
+                    t[k] += g[k]
+        return merged.spec_summary()
+
     def summary(self) -> dict:
         out = {
             "replicas": len(self.per_replica),
@@ -399,6 +422,8 @@ class ClusterMetrics:
                 "stages_entered": sorted({e["to"]
                                           for e in self.brownout_events}),
             }
+        if any(m.spec for m in self.per_replica):
+            out["spec"] = self.spec_summary()
         if any(m.prefix for m in self.per_replica):
             out["prefix_saved_tokens"] = sum(
                 m.prefix.get("saved_tokens", 0) for m in self.per_replica)
@@ -473,7 +498,10 @@ class ServingCluster:
         self._handoff_considered: set = set()
         self._starts = [e.clock for e in self.replicas]
         self._retired_at: Dict[int, float] = {}
-        self._record_timeline = True
+        self._record_timeline = False
+        # observability seam: attach_trace wires one TraceRecorder through
+        # every replica, the brownout controller and the fault injector
+        self.trace = None
         # fault-tolerance state: timed control events (crash / corrupt /
         # detect / retry) interleave with engine steps and arrivals on the
         # shared virtual clock.  All empty without a fault plan, so the
@@ -490,6 +518,26 @@ class ServingCluster:
         self.handoff_timeouts = 0
         self.handoff_retries = 0
         self.handoff_aborts = 0
+
+    # ------------------------------------------------------------------
+    # observability seam
+    # ------------------------------------------------------------------
+    def attach_trace(self, trace) -> None:
+        """Wire one :class:`observability.TraceRecorder` through the whole
+        fleet: every replica (engine + scheduler + block manager), the
+        brownout controller and the fault injector.  Replicas added later
+        (autoscale, crash replacement) inherit it via ``add_replica``."""
+        self.trace = trace
+        for e in self.replicas:
+            e.attach_trace(trace)
+        if self.brownout is not None:
+            self.brownout.trace = trace
+        if self.faults is not None:
+            self.faults.trace = trace
+
+    def _tracer(self):
+        tr = self.trace
+        return tr if (tr is not None and tr.enabled) else None
 
     # ------------------------------------------------------------------
     @property
@@ -551,7 +599,11 @@ class ServingCluster:
         eng.replica_id = rid
         eng.clock = max(eng.clock, now)
         eng.record_timeline = self._record_timeline
+        if self._record_timeline:
+            eng.metrics.use_timeline_ring()
         eng.faults = self.faults
+        if self.trace is not None:
+            eng.attach_trace(self.trace)
         # birth counts as a heartbeat: a replica that never steps must not
         # look crash-silent to the failure detector from t=0
         self.control.detector.heartbeat(rid, eng.clock)
@@ -563,6 +615,10 @@ class ServingCluster:
         self._starts.append(eng.clock)
         self.autoscale_events.append(
             {"kind": "add", "at": now, "replica": rid, "role": role})
+        tr = self._tracer()
+        if tr is not None:
+            tr.instant("fleet", "replica_add", now,
+                       args={"replica": rid, "role": role})
         return rid
 
     def drain_replica(self, idx: int, now: float) -> None:
@@ -578,6 +634,9 @@ class ServingCluster:
         self.router.note_replica_dead(self.replicas[idx].replica_id)
         self.autoscale_events.append(
             {"kind": "drain", "at": now, "replica": idx})
+        tr = self._tracer()
+        if tr is not None:
+            tr.instant("fleet", "replica_drain", now, args={"replica": idx})
         self._maybe_retire(idx, now)
 
     def _maybe_retire(self, idx: int, now: float) -> None:
@@ -593,6 +652,10 @@ class ServingCluster:
             self.autoscale_events.append(
                 {"kind": "retire", "at": self._retired_at[idx],
                  "replica": idx})
+            tr = self._tracer()
+            if tr is not None:
+                tr.instant("fleet", "replica_retire", self._retired_at[idx],
+                           args={"replica": idx})
 
     # ------------------------------------------------------------------
     # fault tolerance: crash / detect / retry control events
@@ -643,6 +706,10 @@ class ServingCluster:
                "detected_at": None, "recovered_at": None,
                "pending": {r.req_id for r in lost}, "_requests": lost}
         self.crashes.append(rec)
+        tr = self._tracer()
+        if tr is not None:
+            tr.instant("fleet", "crash", now,
+                       args={"replica": idx, "lost": len(lost)})
         self._schedule_ctl(now + self.control.detector.timeout_s,
                            "detect", rec)
 
@@ -659,6 +726,10 @@ class ServingCluster:
                                "detect", rec)
             return
         rec["detected_at"] = now
+        tr = self._tracer()
+        if tr is not None:
+            tr.instant("fleet", "detect", now,
+                       args={"replica": rec["replica"]})
         if self.replica_factory is not None:
             # replace-on-crash reuses the elastic add path (autoscale event
             # stream records it like any scale-up)
@@ -678,6 +749,10 @@ class ServingCluster:
             self.failed_requests.append(
                 {"req_id": req.req_id, "at": now, "attempts": attempt - 1,
                  "priority": req.priority})
+            tr = self._tracer()
+            if tr is not None:
+                tr.req_end(req.req_id, now, "failed",
+                           attempts=attempt - 1, priority=req.priority)
             rec["pending"].discard(req.req_id)
             if not rec["pending"] and rec["recovered_at"] is None:
                 rec["recovered_at"] = now
@@ -697,6 +772,12 @@ class ServingCluster:
         byte-identical to a fault-free run."""
         req, rec = payload
         self.requeues += 1
+        tr = self._tracer()
+        if tr is not None:
+            # close the stall span opened at the crash at the retry instant
+            # (the engine's re-submit then folds into this queue stage)
+            tr.req_stage(req.req_id, now, "queue")
+            tr.instant("fleet", "requeue", now, args={"req": req.req_id})
         self.submit(req, now=now)
         rec["pending"].discard(req.req_id)
         if not rec["pending"] and rec["recovered_at"] is None:
@@ -824,12 +905,24 @@ class ServingCluster:
                               "slo": req.slo, "priority": req.priority,
                               "by": "brownout"})
             self.control.note_shed(now)
+            tr = self._tracer()
+            if tr is not None:
+                # a shed request never enters the system: fleet instant
+                # only, no request lane (keeps span balance clean)
+                tr.instant("fleet", "shed", now,
+                           args={"req": req.req_id, "by": "brownout",
+                                 "priority": req.priority})
             return None
         if admission is not None and min_forecast is not None \
                 and admission.should_shed(req, min_forecast):
             self.shed.append({"req_id": req.req_id, "at": now,
                               "slo": req.slo, "priority": req.priority})
             self.control.note_shed(now)
+            tr = self._tracer()
+            if tr is not None:
+                tr.instant("fleet", "shed", now,
+                           args={"req": req.req_id, "by": "admission",
+                                 "priority": req.priority})
             return None
         return self.submit(req, now=now)
 
@@ -917,6 +1010,15 @@ class ServingCluster:
             dst.accept_handoff(seq.request,
                                t_ready=now + waste + transfer_s,
                                payload=payload)
+            tr = self._tracer()
+            if tr is not None:
+                # KV migration: the request rides the interconnect until
+                # t_ready, when adoption opens its decode stage on dst
+                tr.req_stage(rid, now, "transfer", src.replica_id)
+                tr.instant("fleet", "handoff", now,
+                           args={"req": rid, "src": src.replica_id,
+                                 "dst": dst.replica_id,
+                                 "transfer_s": transfer_s, "waste_s": waste})
             self.control.note_handoff(src, dst, rid)
             self.assignments[rid] = dst.replica_id
             self.handoff_transfer_s += transfer_s
@@ -973,11 +1075,17 @@ class ServingCluster:
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, max_steps: int = 5_000_000,
-            record_timeline: bool = True) -> ClusterMetrics:
-        """Discrete-event loop: route arrivals / step the earliest replica."""
+            record_timeline: bool = False) -> ClusterMetrics:
+        """Discrete-event loop: route arrivals / step the earliest replica.
+
+        ``record_timeline`` opts in to per-step timeline dicts on every
+        replica (ring-bounded); off by default — long benches that never
+        read them pay nothing."""
         self._record_timeline = record_timeline
         for e in self.replicas:
             e.record_timeline = record_timeline
+            if record_timeline:
+                e.metrics.use_timeline_ring()
         pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
         self._starts = [e.clock for e in self.replicas]
         if self.faults is not None:

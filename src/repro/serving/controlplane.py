@@ -307,6 +307,9 @@ class BrownoutController:
         self.events: List[dict] = []
         self._last_transition = float("-inf")
         self._last_check = float("-inf")
+        # observability seam: the cluster's attach_trace wires this so
+        # every rung transition lands in the trace as a fleet instant
+        self.trace = None
 
     # -- evaluation -----------------------------------------------------
     def due(self, now: float) -> bool:
@@ -346,6 +349,9 @@ class BrownoutController:
         self.stage = new
         self._last_transition = now
         self.events.append(ev)
+        tr = self.trace
+        if tr is not None and tr.enabled:
+            tr.instant("fleet", "brownout", now, args=dict(ev))
         return ev
 
     # -- rung queries (what the cluster applies to every live replica) --

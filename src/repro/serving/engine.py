@@ -99,7 +99,15 @@ class ServingEngine:
         self.clock = 0.0
         self.prev_gamma_effective = 0
         self.metrics = Metrics()
-        self.record_timeline = True
+        # per-step timeline dicts are opt-in (run(record_timeline=True))
+        # and ring-bounded — long benches that never read them no longer
+        # accumulate unbounded memory
+        self.record_timeline = False
+        # observability seam (serving/observability.py): attach_trace wires
+        # a TraceRecorder through the scheduler/block-manager; None (the
+        # default) keeps every hook a single attribute check
+        self.trace = None
+        self._memmgr_traced = 0    # memmgr.events already copied to trace
         self._pending: List = []   # heap of (arrival, req_id, Request)
         # incoming prefilled requests migrating from a prefill-pool replica
         # (disaggregated mode): heap of (t_ready, req_id, Request, payload)
@@ -117,11 +125,56 @@ class ServingEngine:
                                            # max_new_tokens for best_effort
 
     # ------------------------------------------------------------------
+    # observability seam
+    # ------------------------------------------------------------------
+    def attach_trace(self, trace) -> None:
+        """Wire a :class:`observability.TraceRecorder` through this engine
+        and the seams that emit events below it (scheduler preemptions,
+        block-manager spill/restore).  The context closures read the LIVE
+        clock/replica-id, so a cluster may attach before assigning replica
+        ids.  ``None`` detaches everything."""
+        self.trace = trace
+        ctx = (lambda: (self.clock, self.replica_id)) \
+            if trace is not None else None
+        self.scheduler.trace = trace
+        self.scheduler.trace_ctx = ctx
+        self.scheduler.bm.trace = trace
+        self.scheduler.bm.trace_ctx = ctx
+
+    def _tracer(self):
+        """The active recorder, or None — the zero-cost gate every hook
+        shares (detached OR disabled recorders both fold to None)."""
+        tr = self.trace
+        return tr if (tr is not None and tr.enabled) else None
+
+    def _trace_memmgr(self, tr) -> None:
+        """Copy memory-manager events (offload/expand/contract/reload) not
+        yet seen into the trace; the seen-counter keeps this incremental
+        without touching the manager itself."""
+        evs = self.memmgr.events
+        if len(evs) > self._memmgr_traced:
+            for e in evs[self._memmgr_traced:]:
+                args = {"latency": e.latency}
+                args.update(e.detail)
+                tr.instant("memmgr", e.kind, e.at,
+                           replica=self.replica_id, args=args)
+            self._memmgr_traced = len(evs)
+
+    # ------------------------------------------------------------------
     # steppable surface
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         """Enqueue a request; admitted once the clock reaches its arrival."""
         heapq.heappush(self._pending, (req.arrival, req.req_id, req))
+        tr = self._tracer()
+        if tr is not None:
+            # queue time starts at arrival (e2e latency's origin), not at
+            # the submit call — a crash-recovery resubmission of an already
+            # open request folds into its existing lane instead
+            tr.req_submit(req.req_id, max(req.arrival, 0.0),
+                          self.replica_id, priority=req.priority,
+                          prompt_len=req.prompt_len,
+                          output_len=req.output_len)
 
     @property
     def num_pending(self) -> int:
@@ -224,6 +277,10 @@ class ServingEngine:
                "priority": req.priority, "slo": req.slo}
         (self.metrics.cancelled if kind == "cancelled"
          else self.metrics.expired).append(rec)
+        tr = self._tracer()
+        if tr is not None:
+            tr.req_end(req.req_id, self.clock, kind, self.replica_id,
+                       priority=req.priority)
 
     def _drop_sequence(self, seq: Sequence, kind: str) -> None:
         """Tear down ONE running sequence without finishing it: release its
@@ -336,12 +393,21 @@ class ServingEngine:
         sched = self.scheduler
         seq = Sequence(request=req)
         key = sched._seq_key(seq)
+        tr = self._tracer()
         try:
             sched.bm.allocate(key, max(req.prompt_len, 1))
         except OutOfBlocks:
             self.handoffs_refused += 1
             sched.add_request(req)
+            if tr is not None:
+                tr.instant("engine", "handoff_refused", self.clock,
+                           replica=self.replica_id,
+                           args={"req": req.req_id})
+                tr.req_stage(req.req_id, self.clock, "queue",
+                             self.replica_id)
             return
+        if tr is not None:
+            tr.req_stage(req.req_id, self.clock, "decode", self.replica_id)
         seq.prefilled = req.prompt_len
         seq.prefill_done_at = self.clock
         # draft-pool coverage travels with the KV: tokens the source's
@@ -389,6 +455,7 @@ class ServingEngine:
         zero whenever no cap is active, keeping the uncapped path
         byte-identical."""
         m = self.metrics
+        tr = self._tracer()
         finished = 0
         clipped = 0
         for s, n in zip(seqs, n_committed):
@@ -416,6 +483,9 @@ class ServingEngine:
                 self.scheduler.finish(s)
                 self.backend.release(s)
                 finished += 1
+                if tr is not None:
+                    tr.req_end(s.req_id, self.clock, "finished",
+                               self.replica_id, tokens=s.generated)
         return finished, clipped
 
     def _reserve_kv(self, seqs: List[Sequence], gamma: int) -> List[Sequence]:
@@ -551,6 +621,12 @@ class ServingEngine:
         assert not bm.pending_restores, "restore survived its target"
         self.failed = True
         lost.sort(key=lambda r: r.req_id)
+        tr = self._tracer()
+        if tr is not None:
+            # every lost request stalls at the crash instant; recovery
+            # (cluster retry) reopens its queue span on another replica
+            for r in lost:
+                tr.req_stage(r.req_id, self.clock, "stall", self.replica_id)
         return lost
 
     def _record_timeline(self, B: int, gamma: int, tokens: int,
@@ -582,15 +658,22 @@ class ServingEngine:
         reaped = self._reap_expired()
 
         draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
+        tr = self._tracer()
 
         admitted = self.scheduler.schedule()
         if admitted:
+            t_prefill0 = self.clock
             t = self.backend.prefill(admitted, with_draft=draft_ok)
             self.clock += self._faulty(t)
             for s in admitted:
                 s.prefill_done_at = self.clock
                 if not draft_ok:
                     s.delta = s.request.prompt_len  # draft never saw it
+                if tr is not None:
+                    tr.req_stage(s.req_id, t_prefill0, "prefill",
+                                 self.replica_id)
+                    tr.req_stage(s.req_id, self.clock, "decode",
+                                 self.replica_id)
 
         if not self.scheduler.running:
             cands = [t for t in (self._next_income(), self._next_expiry())
@@ -616,6 +699,8 @@ class ServingEngine:
                 spec_disabled=(self.prev_gamma_effective == 0),
                 waiting=self.scheduler.num_waiting)
             draft_ok = self.memmgr.can_speculate(self.clock)
+            if tr is not None:
+                self._trace_memmgr(tr)
 
         # 3. arm selection (brownout stage >= spec_off forces gamma -> 0
         #    fleet-wide — the paper's MAB-disable recast as overload control)
@@ -637,8 +722,13 @@ class ServingEngine:
             self.clock += self._faulty(t_catch)
             for s in running:
                 s.delta = 0
+            if tr is not None:
+                tr.instant("engine", "draft_catchup", self.clock,
+                           replica=self.replica_id,
+                           args={"delta_max": delta_max, "batch": B})
 
         # 5. execute
+        t_exec0 = self.clock
         out = self.backend.step(running, gamma)
         out.latency = self._faulty(out.latency)
         self.clock += out.latency
@@ -658,6 +748,17 @@ class ServingEngine:
         if self.record_timeline:
             self._record_timeline(B, gamma, total_committed, out.latency,
                                   draft_ok)
+        if self.record_timeline or tr is not None:
+            m.note_spec_step(B, gamma, total_committed, out.latency,
+                             forced_off=self.spec_forced_off or not draft_ok,
+                             restarted=switched_on)
+        if tr is not None:
+            tr.step_span(t_exec0, self.clock, self.replica_id, batch=B,
+                         gamma=gamma, tokens=total_committed,
+                         accepted=max(total_committed - B, 0)
+                         if gamma > 0 else 0,
+                         draft_ok=draft_ok,
+                         forced_off=self.spec_forced_off)
         if gamma != self.prev_gamma_effective:
             m.switch_count += 1
         self.prev_gamma_effective = gamma
@@ -685,6 +786,7 @@ class ServingEngine:
         reaped = self._reap_expired()
 
         draft_ok = self.memmgr.can_speculate(self.clock) if self.memmgr else True
+        tr = self._tracer()
 
         batch = self.scheduler.schedule_chunks()
         if batch.empty:
@@ -707,6 +809,13 @@ class ServingEngine:
         if on_admit is not None:
             for s in batch.admitted:
                 on_admit(s)
+        if tr is not None:
+            for s in batch.admitted:
+                # fully-cached admissions (whole prompt from the prefix
+                # cache) never enter the chunk loop: straight to decode
+                tr.req_stage(s.req_id, self.clock,
+                             "decode" if s.prompt_remaining == 0
+                             else "prefill", self.replica_id)
 
         # host-tier KV transfers queued during admission (spills from LRU
         # eviction, restores from match_prefix host hits) complete before
@@ -724,6 +833,8 @@ class ServingEngine:
                 spec_disabled=(self.prev_gamma_effective == 0),
                 waiting=self.scheduler.num_waiting)
             draft_ok = self.memmgr.can_speculate(self.clock)
+            if tr is not None:
+                self._trace_memmgr(tr)
 
         # 3. arm selection — gamma only ever applies to the decode portion,
         #    and is forced to 0 while any prefill chunk is in flight or the
@@ -745,8 +856,13 @@ class ServingEngine:
             self.clock += self._faulty(t_catch)
             for s in decode:
                 s.delta = 0
+            if tr is not None:
+                tr.instant("engine", "draft_catchup", self.clock,
+                           replica=self.replica_id,
+                           args={"delta_max": delta_max, "batch": B})
 
         # 5. execute the fused step
+        t_exec0 = self.clock
         out = self.backend.hybrid_step(batch.prefill_chunks, decode, gamma,
                                        with_draft=draft_ok)
         out.latency = self._faulty(out.latency)
@@ -762,6 +878,9 @@ class ServingEngine:
             self.scheduler.note_prefill_progress(s, draft_ok=draft_ok)
             if s.prompt_remaining == 0:
                 s.prefill_done_at = self.clock
+                if tr is not None:
+                    tr.req_stage(s.req_id, self.clock, "decode",
+                                 self.replica_id)
 
         finished, clipped = self._commit_decode(decode, out.n_committed,
                                                 gamma)
@@ -780,6 +899,18 @@ class ServingEngine:
             self._record_timeline(B, gamma, total_committed, out.latency,
                                   draft_ok,
                                   prefill_tokens=batch.prefill_tokens)
+        if self.record_timeline or tr is not None:
+            m.note_spec_step(B, gamma, total_committed, out.latency,
+                             forced_off=self.spec_forced_off or not draft_ok,
+                             restarted=switched_on)
+        if tr is not None:
+            tr.step_span(t_exec0, self.clock, self.replica_id, batch=B,
+                         gamma=gamma, tokens=total_committed,
+                         accepted=max(total_committed - B, 0)
+                         if gamma > 0 else 0,
+                         prefill_tokens=batch.prefill_tokens,
+                         draft_ok=draft_ok,
+                         forced_off=self.spec_forced_off)
         if gamma != self.prev_gamma_effective:
             m.switch_count += 1
         self.prev_gamma_effective = gamma
@@ -814,13 +945,18 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, max_steps: int = 1_000_000,
-            record_timeline: bool = True) -> Metrics:
+            record_timeline: bool = False) -> Metrics:
         """Run-to-completion convenience wrapper over ``step``.
 
         Each call returns metrics for THIS batch of requests only (fresh
-        Metrics object); the virtual clock and planner state carry over."""
+        Metrics object); the virtual clock and planner state carry over.
+        ``record_timeline`` opts in to the (ring-bounded) per-step
+        timeline dicts — off by default so long runs that never read them
+        pay nothing."""
         self.metrics = Metrics()
         self.record_timeline = record_timeline
+        if record_timeline:
+            self.metrics.use_timeline_ring()
         for r in requests:
             self.submit(r)
         start_clock = self.clock

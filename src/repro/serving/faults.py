@@ -300,6 +300,14 @@ class FaultInjector:
         self._handoff_left = [h.count for h in plan.handoffs]
         self.stats = {"handoff_faults": 0, "corrupted_records": 0,
                       "storm_cancels": 0}
+        # observability seam: the cluster's attach_trace wires this so
+        # consumed faults land in the trace as fleet instants
+        self.trace = None
+
+    def _trace_instant(self, name: str, t: float, **args) -> None:
+        tr = self.trace
+        if tr is not None and tr.enabled:
+            tr.instant("fault", name, t, args=args)
 
     # -- timed one-shots ---------------------------------------------------
 
@@ -333,6 +341,7 @@ class FaultInjector:
         times = self.cancel_rng.uniform(storm.start, storm.end, size=n)
         out = sorted((float(t), ids[int(i)]) for t, i in zip(times, idx))
         self.stats["storm_cancels"] += n
+        self._trace_instant("cancelstorm", storm.start, victims=n)
         return out
 
     # -- stragglers --------------------------------------------------------
@@ -362,6 +371,7 @@ class FaultInjector:
                         continue
                     self._handoff_left[i] -= 1
                 self.stats["handoff_faults"] += 1
+                self._trace_instant(f"handoff_{h.mode}", t)
                 return h
         return None
 
@@ -384,4 +394,6 @@ class FaultInjector:
             if host_store.corrupt(victims[i]):
                 done += 1
         self.stats["corrupted_records"] += done
+        self._trace_instant("corrupt", fault.at, replica=fault.replica,
+                            records=done)
         return done

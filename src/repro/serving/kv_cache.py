@@ -313,6 +313,16 @@ class BlockManager:
         self.stats: Dict[str, int] = dict(
             queries=0, hits=0, saved_tokens=0, shared_blocks=0, forks=0,
             evictions=0, allocated_blocks=0, restored_blocks=0)
+        # observability seam: engine.attach_trace wires these (trace_ctx
+        # yields the live (clock, replica_id) for spill/restore instants)
+        self.trace = None
+        self.trace_ctx = None
+
+    def _trace_instant(self, name: str, **args) -> None:
+        tr = self.trace
+        if tr is not None and tr.enabled and self.trace_ctx is not None:
+            t, rep = self.trace_ctx()
+            tr.instant("kv", name, t, replica=rep, args=args)
 
     # ------------------------------------------------------------------
     @property
@@ -475,6 +485,7 @@ class BlockManager:
             parent, toks = self.block_chain[b]
             hs.put(h, parent, toks)
             self.pending_spills.append((b, h))
+            self._trace_instant("spill", block=b)
         self._unregister(b)
         self.stats["evictions"] += 1
 
@@ -538,6 +549,7 @@ class BlockManager:
         self.pending_restores.append((h, b))
         hs.pin(h)
         self.stats["restored_blocks"] += 1
+        self._trace_instant("restore", block=b)
         return b
 
     def drain_pending_spills(self) -> List[Tuple[int, int]]:

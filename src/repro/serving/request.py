@@ -1,8 +1,15 @@
 """Request and sequence lifecycle for the serving engine."""
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional
+
+# Bounded per-step timeline: when timeline recording is opted in, the
+# per-step dicts live in a ring of this many entries (oldest evicted
+# first) instead of an unbounded list, so long benches that never read
+# the timeline stop accumulating memory for it.
+TIMELINE_RING_CAP = 65_536
 
 # Priority classes in descending importance.  Admission sheds and the
 # scheduler preempts lowest-class-first; within a class age order rules
@@ -156,6 +163,77 @@ class Metrics:
                                    # requests: {req_id, at, priority, slo}
     expired: List[dict] = field(default_factory=list)    # deadline-reaped
                                    # requests: {req_id, at, priority, slo}
+    spec: dict = field(default_factory=dict)  # per-gamma speculation
+                                   # aggregates (see note_spec_step)
+
+    def use_timeline_ring(self, cap: int = TIMELINE_RING_CAP) -> None:
+        """Bound the per-step timeline to a ring of ``cap`` entries.
+
+        Called by the engine when timeline recording is opted in; existing
+        entries are preserved (newest-first survival on overflow)."""
+        if not isinstance(self.timeline, deque):
+            self.timeline = deque(self.timeline, maxlen=cap)
+
+    def note_spec_step(self, batch: int, gamma: int, committed: int,
+                       latency: float, *, forced_off: bool = False,
+                       restarted: bool = False) -> None:
+        """Fold one engine step's (batch, gamma, n_accepted) observation —
+        the same tuple the MAB planner sees — into per-gamma aggregates.
+
+        ``committed`` is total committed tokens for the step; with
+        speculation on, each sequence commits its accepted draft tokens
+        plus one verified token, so accepted = committed - batch."""
+        sp = self.spec
+        if not sp:
+            sp.update(steps=0, spec_steps=0, forced_off_steps=0, restarts=0,
+                      per_gamma={})
+        sp["steps"] += 1
+        if forced_off:
+            sp["forced_off_steps"] += 1
+        if restarted:
+            sp["restarts"] += 1
+        if gamma > 0:
+            sp["spec_steps"] += 1
+        g = sp["per_gamma"].setdefault(
+            gamma, {"steps": 0, "proposed": 0, "accepted": 0,
+                    "committed": 0, "latency_s": 0.0})
+        g["steps"] += 1
+        g["committed"] += committed
+        g["latency_s"] += latency
+        if gamma > 0:
+            g["proposed"] += gamma * batch
+            g["accepted"] += max(committed - batch, 0)
+
+    def spec_summary(self) -> dict:
+        """Speculation aggregates for ``summary()`` — acceptance rate per
+        gamma, spec-off step fraction, and speculation restart count."""
+        sp = self.spec
+        steps = sp.get("steps", 0)
+        per_gamma = {}
+        for gamma in sorted(sp.get("per_gamma", {})):
+            g = sp["per_gamma"][gamma]
+            row = {
+                "steps": g["steps"],
+                "committed_tokens": g["committed"],
+                "latency_per_committed_s": round(
+                    g["latency_s"] / g["committed"], 6)
+                if g["committed"] else 0.0,
+            }
+            if gamma > 0:
+                row["acceptance_rate"] = round(
+                    g["accepted"] / g["proposed"], 4) if g["proposed"] \
+                    else 0.0
+            per_gamma[str(gamma)] = row
+        return {
+            "steps": steps,
+            "spec_step_fraction": round(sp.get("spec_steps", 0) / steps, 4)
+            if steps else 0.0,
+            "spec_off_step_fraction": round(
+                1.0 - sp.get("spec_steps", 0) / steps, 4) if steps else 0.0,
+            "forced_off_steps": sp.get("forced_off_steps", 0),
+            "restarts": sp.get("restarts", 0),
+            "per_gamma": per_gamma,
+        }
 
     def record_finish(self, seq: Sequence, now: float) -> None:
         """Stamp a completed sequence into the per-request stats."""
@@ -231,6 +309,8 @@ class Metrics:
         if self.cancelled or self.expired:
             out["cancelled"] = len(self.cancelled)
             out["expired"] = len(self.expired)
+        if self.spec:
+            out["spec"] = self.spec_summary()
         return out
 
     def _base_summary(self) -> dict:

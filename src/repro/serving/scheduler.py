@@ -104,6 +104,11 @@ class ContinuousBatchingScheduler:
         self.waiting: Deque[Request] = deque()
         self.running: List[Sequence] = []
         self._next_seq = 0
+        # observability seam: engine.attach_trace wires these; trace_ctx
+        # yields the live (clock, replica_id) so preemption events carry
+        # engine time without the scheduler knowing about clocks
+        self.trace = None
+        self.trace_ctx = None
 
     # ------------------------------------------------------------------
     @property
@@ -350,6 +355,13 @@ class ContinuousBatchingScheduler:
         req = seq.request
         # recompute from scratch: prompt + already-generated tokens count
         self.waiting.appendleft(req)
+        tr = self.trace
+        if tr is not None and tr.enabled and self.trace_ctx is not None:
+            t, rep = self.trace_ctx()
+            tr.instant("engine", "preempt", t, replica=rep,
+                       args={"req": seq.req_id, "prefilled": seq.prefilled,
+                             "generated": seq.generated})
+            tr.req_stage(seq.req_id, t, "stall", rep)
 
     def finish(self, seq: Sequence) -> None:
         self.bm.release(self._seq_key(seq))

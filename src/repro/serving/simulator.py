@@ -158,7 +158,8 @@ class SimConfig:
 
 
 def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
-                     *, policy: Optional[Policy] = None) -> ServingEngine:
+                     *, policy: Optional[Policy] = None,
+                     trace=None) -> ServingEngine:
     cm = RooflineCostModel(cfg.hw)
     backend = SimulatedBackend(cfg.target, cfg.draft, cm, seed=cfg.seed,
                                block_size=cfg.block_size)
@@ -199,8 +200,11 @@ def build_sim_engine(cfg: SimConfig, policy_name: str = "nightjar",
         cswitch = CSwitchTable.from_cost_model(cm, cfg.draft)
         policy = make_policy(policy_name, cfg.gamma_max, cswitch=cswitch,
                              seed=cfg.seed)
-    return ServingEngine(backend, sched, policy, memmgr,
-                         gamma_max=cfg.gamma_max)
+    eng = ServingEngine(backend, sched, policy, memmgr,
+                        gamma_max=cfg.gamma_max)
+    if trace is not None:
+        eng.attach_trace(trace)
+    return eng
 
 
 def build_sim_cluster(cfg: SimConfig, n_replicas: int,
@@ -214,7 +218,8 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
                       fault_plan=None,
                       retry_policy=None,
                       brownout=None,
-                      cancels=None) -> ServingCluster:
+                      cancels=None,
+                      trace=None) -> ServingCluster:
     """N independent simulated replicas behind one router + control plane.
 
     Every replica gets its OWN scheduler, planner, elastic memory manager
@@ -249,7 +254,11 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
     ``brownout`` arms the fleet brownout ladder: a kwargs dict for
     :class:`BrownoutController` (or a pre-built instance); ``cancels`` is
     an explicit client-cancellation schedule of ``(t, req_id)`` pairs
-    (e.g. ``workload.cancellation_storm``)."""
+    (e.g. ``workload.cancellation_storm``).
+
+    ``trace`` attaches a :class:`~repro.serving.observability.TraceRecorder`
+    through the whole fleet (engines, brownout controller, fault injector;
+    replicas added later inherit it)."""
 
     def factory(i: int) -> ServingEngine:
         return build_sim_engine(replace(cfg, seed=cfg.seed + i), policy_name)
@@ -295,10 +304,13 @@ def build_sim_cluster(cfg: SimConfig, n_replicas: int,
     if disaggregate is not None:
         pricer = HandoffPricer(control,
                                margin_s=disaggregate.get("margin_s", 0.0))
-    return ServingCluster(engines, make_router(router,
-                                               **(router_kwargs or {})),
-                          control=control, replica_factory=factory,
-                          roles=roles, pricer=pricer,
-                          decode_autoscaler=decode_autoscaler,
-                          faults=faults, retry_policy=retry_policy,
-                          brownout=bo, cancels=cancels)
+    cluster = ServingCluster(engines, make_router(router,
+                                                  **(router_kwargs or {})),
+                             control=control, replica_factory=factory,
+                             roles=roles, pricer=pricer,
+                             decode_autoscaler=decode_autoscaler,
+                             faults=faults, retry_policy=retry_policy,
+                             brownout=bo, cancels=cancels)
+    if trace is not None:
+        cluster.attach_trace(trace)
+    return cluster

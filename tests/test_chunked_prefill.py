@@ -221,7 +221,8 @@ def _cfg(chunk):
 def test_gamma_zero_while_chunks_in_flight():
     """Speculation is forced off for any step carrying a prefill chunk."""
     eng = build_sim_engine(_cfg(256), "nightjar")
-    m = eng.run(poisson_requests(40, 120, dataset="alpaca", seed=2))
+    m = eng.run(poisson_requests(40, 120, dataset="alpaca", seed=2),
+                record_timeline=True)
     mixed = [r for r in m.timeline if r["prefill_tokens"] > 0]
     assert mixed, "no hybrid steps exercised"
     assert all(r["gamma"] == 0 for r in mixed)

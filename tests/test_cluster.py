@@ -159,7 +159,8 @@ def test_cluster_e2e_low_rate_golden():
     """Seeded 2-replica cluster at low rate: golden metrics + speculation
     stays ON (memory-bound regime)."""
     cl = build_sim_cluster(_cfg(), 2, "nightjar", router="jsq")
-    m = cl.run(poisson_requests(8, 64, dataset="alpaca", seed=1))
+    m = cl.run(poisson_requests(8, 64, dataset="alpaca", seed=1),
+               record_timeline=True)
     assert m.total_tokens == GOLDEN_LOW["total_tokens"]
     assert m.throughput == pytest.approx(GOLDEN_LOW["throughput"], rel=1e-6)
     assert m.replica_counts() == GOLDEN_LOW["counts"]
@@ -174,7 +175,8 @@ def test_cluster_e2e_high_rate_golden():
     replica's planner independently drives gamma -> 0 in the saturated
     (high-batch) regime."""
     cl = build_sim_cluster(_cfg(), 2, "nightjar", router="jsq")
-    m = cl.run(poisson_requests(300, 1500, dataset="alpaca", seed=1))
+    m = cl.run(poisson_requests(300, 1500, dataset="alpaca", seed=1),
+               record_timeline=True)
     assert m.total_tokens == GOLDEN_HIGH["total_tokens"]
     assert m.throughput == pytest.approx(GOLDEN_HIGH["throughput"], rel=1e-6)
     assert m.replica_counts() == GOLDEN_HIGH["counts"]

@@ -378,7 +378,7 @@ def _run_engine(backend_kind, *, chunk=None, policy="nightjar", blocks=256,
     reqs = tiny_requests(n, rate_qps=1e6, prompt_len=prompt, output_len=out,
                          vocab=target.cfg.vocab_size, seed=5,
                          template_len=template)
-    m = eng.run(reqs, max_steps=3000)
+    m = eng.run(reqs, max_steps=3000, record_timeline=True)
     return {r.req_id: be.output_tokens(r.req_id)[:out + 1] for r in reqs}, m
 
 
